@@ -1,0 +1,75 @@
+"""Paper Fig. 10 + Table V: accelerator latency/energy vs MAC vector size,
+optimization ablations (AAS / EE / sparsity), mGPU comparison, and the
+area/power breakdown — from the analytical model driven by measured workload
+stats (hwmodel/edgebert_accel.py)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.hwmodel import edgebert_accel as acc
+
+# Table IV-style deployed operating point (MNLI row): 50% MaP, span avg 12.7,
+# 8/12 heads off, exit threshold 0.4 -> avg exit 8.02
+STATS = acc.albert_layer_stats(seq_len=128)
+STATS.avg_exit_layer = 8.02
+STATS.span_factor = 12.7 / 128.0
+STATS.heads_active_frac = 4 / 12
+STATS.weight_sparsity = 0.5
+STATS.act_sparsity = 0.3
+
+
+def main() -> None:
+    # --- Fig 10: MAC vector size sweep ---
+    for n in (4, 8, 16, 32):
+        r = acc.simulate(STATS, n)
+        emit(
+            f"fig10_mac_n{n}", r.latency_s * 1e6,
+            f"energy_uJ={r.energy_j*1e6:.1f};power_mW={r.breakdown_mw['total']:.1f};"
+            f"entropy_overhead={r.entropy_overhead_frac:.4%}",
+        )
+    energies = {n: acc.simulate(STATS, n).energy_j for n in (4, 8, 16, 32)}
+    optimal = min(energies, key=energies.get)
+    note = "" if optimal == 16 else (
+        ";model_limit=first-order power scaling under-counts the n=32 "
+        "wiring/control penalty the paper's post-HLS netlist measures — "
+        "deviation documented, not curve-fitted"
+    )
+    emit("fig10_energy_optimal_n", 0.0,
+         f"n={optimal} (paper: 16);E32/E16={energies[32]/energies[16]:.2f}{note}")
+
+    # --- Fig 10 ablations at n=16 ---
+    full = acc.simulate(STATS, 16)
+    no_ee = acc.simulate(STATS, 16, use_early_exit=False)
+    no_span = acc.simulate(STATS, 16, use_span=False)
+    no_sparse = acc.simulate(STATS, 16, use_sparsity=False)
+    emit("fig10_ablation_early_exit", full.latency_s * 1e6,
+         f"latency_gain={no_ee.latency_s/full.latency_s:.2f}x;"
+         f"energy_gain={no_ee.energy_j/full.energy_j:.2f}x (paper 1.3-2.0x)")
+    emit("fig10_ablation_span", full.latency_s * 1e6,
+         f"latency_gain={no_span.latency_s/full.latency_s:.2f}x;"
+         f"energy_gain={no_span.energy_j/full.energy_j:.2f}x (paper ~1.2/1.1x)")
+    emit("fig10_ablation_sparsity", full.latency_s * 1e6,
+         f"energy_gain={no_sparse.energy_j/full.energy_j:.2f}x (paper 1.9-2.6x)")
+
+    # --- mGPU comparison ---
+    gpu = acc.simulate_mgpu(STATS)
+    gpu_unopt = acc.simulate_mgpu(STATS, use_early_exit=False, use_span=False)
+    emit("fig10_vs_mgpu", gpu["latency_s"] * 1e6,
+         f"energy_ratio={gpu['energy_j']/full.energy_j:.0f}x (paper 163x);"
+         f"gpu_selfgain={gpu_unopt.get('latency_s')/gpu['latency_s']:.2f}x")
+
+    # --- Table V breakdown at n=16 ---
+    area = full.area_mm2
+    emit("tableV_area", 0.0,
+         f"pu={area['pu_datapath']:.2f};gb={area['gb_periph']:.2f};"
+         f"sram={area['sram']:.2f};reram={area['reram']:.2f};"
+         f"total={area['total']:.2f}mm2 (paper 5.11)")
+    p = full.breakdown_mw
+    emit("tableV_power", 0.0,
+         f"pu={p['pu_datapath']:.1f};gb={p['gb_periph']:.1f};sram={p['sram']:.1f};"
+         f"reram={p['reram']:.1f};total={p['total']:.1f}mW (paper 110.5)")
+
+
+if __name__ == "__main__":
+    main()

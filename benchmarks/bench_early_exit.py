@@ -1,0 +1,42 @@
+"""Paper Fig. 4: early-exit entropy-threshold sweep — accuracy, runtime
+savings, and average exit layer per threshold, on a trained toy EdgeBERT."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us, trained_albert
+from repro.core import early_exit as ee
+
+
+def main() -> None:
+    model, params, _, data, cfg = trained_albert()
+    thresholds = [0.02, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0]
+    # one dense pass gives every threshold's behaviour (all-layer entropies)
+    rows = []
+    for i in range(4):
+        b = data.batch(6000 + i)
+        out = model.apply_train(params, {"tokens": jnp.asarray(b["tokens"])})
+        rows.append((out.all_cls_logits, out.all_entropies, b["labels"]))
+
+    us = time_us(
+        lambda: model.apply_train(params, {"tokens": jnp.asarray(data.batch(0)["tokens"])}).all_entropies
+    )
+    for t in thresholds:
+        exits, accs = [], []
+        for logits_all, ent, labels in rows:
+            exit_layer, _ = ee.exit_decisions(ent, t)
+            sel = ee.select_exit_logits(logits_all, exit_layer)
+            accs.append(float(jnp.mean(jnp.argmax(sel, -1) == jnp.asarray(labels))))
+            exits.append(np.asarray(exit_layer))
+        avg_exit = float(np.mean(np.concatenate(exits)))
+        savings = 1.0 - avg_exit / cfg.n_layers
+        emit(
+            f"fig4_early_exit_T{t}", us,
+            f"avg_exit={avg_exit:.2f}/{cfg.n_layers};savings={savings:.2%};"
+            f"acc={np.mean(accs):.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

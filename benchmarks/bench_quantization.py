@@ -1,0 +1,32 @@
+"""Paper Table II: AdaptivFloat bit-width sweep (3-bit exponent) — accuracy of
+the post-finetuning-quantized model per bit width, plus weight RMSE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_accuracy, time_us, trained_albert
+from repro.core.adaptivfloat import AFFormat, quantize_pytree
+from repro.kernels.ops import af_quantize_op
+
+
+def main() -> None:
+    model, params, _, data, cfg = trained_albert()
+    base_acc = eval_accuracy(model, params, data)
+    emit("table2_fp32", 0.0, f"acc={base_acc:.3f}")
+    pred = lambda path, leaf: "norm" not in str(path).lower()
+    for bits in (8, 7, 6, 5, 4):
+        fmt = AFFormat(bits, 3)
+        pq = quantize_pytree(params, fmt, predicate=pred)
+        acc = eval_accuracy(model, pq, data)
+        w = params["layer"]["attn"]["wq"]
+        rmse = float(jnp.sqrt(jnp.mean((pq["layer"]["attn"]["wq"] - w) ** 2)))
+        emit(f"table2_af{bits}", 0.0, f"acc={acc:.3f};d_acc={acc-base_acc:+.3f};wq_rmse={rmse:.2e}")
+    # kernel timing (interpret-mode executes the kernel body)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)), jnp.float32)
+    us = time_us(lambda: af_quantize_op(x))
+    emit("table2_quant_kernel_256x256", us, "interpret-mode")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run results (benchmarks/results/dryrun.json):
+per (arch x shape x mesh): three terms, dominant bottleneck, useful-FLOPs
+ratio, roofline fraction. This is the §Roofline source of record."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+DRYRUN_JSON = os.path.join(RESULTS_DIR, "dryrun.json")
+
+
+def main() -> None:
+    if not os.path.exists(DRYRUN_JSON):
+        emit("roofline_missing", 0.0, "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    with open(DRYRUN_JSON) as f:
+        recs = json.load(f)
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    n_ok = n_skip = 0
+    for r in recs:
+        key = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            emit(key, 0.0, "skipped:" + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(key, 0.0, f"ERROR:{r.get('error','')[:80]}")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        hbm = (ma.get("argument_size_in_bytes", 0) + ma.get("temp_size_in_bytes", 0)) / 2**30
+        emit(
+            key,
+            rl["bound_s"] * 1e6,
+            f"dom={rl['dominant']};tc={rl['t_compute_s']:.2e};tm={rl['t_memory_s']:.2e};"
+            f"tx={rl['t_collective_s']:.2e};useful={rl['useful_flops_ratio']:.2f};"
+            f"frac={rl['roofline_fraction']:.3f};hbm_GiB={hbm:.1f}",
+        )
+    emit("roofline_summary", 0.0, f"ok={n_ok};skipped={n_skip};total={len(recs)}")
+
+    # --- multi-pod scaling: 512 vs 256 chips at fixed global work ---
+    base = {
+        (r["arch"], r["shape"], r["mesh"]): r
+        for r in recs
+        if r.get("variant", "baseline") == "baseline" and r["status"] == "ok"
+    }
+    for (arch, shape, mesh), r in sorted(base.items()):
+        if mesh != "single":
+            continue
+        multi = base.get((arch, shape, "multi"))
+        if multi is None:
+            continue
+        b1 = r["roofline"]["bound_s"]
+        b2 = multi["roofline"]["bound_s"]
+        if b2 <= 0:
+            continue
+        # ideal: 2x chips halve the bound at fixed global batch
+        eff = b1 / (2.0 * b2)
+        emit(
+            f"scaling_{arch}_{shape}", 0.0,
+            f"bound_256={b1:.2e}s;bound_512={b2:.2e}s;pod_scaling_eff={eff:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Shared benchmark utilities: timing, CSV emission, a trained toy EdgeBERT."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def all_rows() -> List[str]:
+    return list(_rows)
+
+
+def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+@functools.lru_cache(maxsize=4)
+def trained_albert(phase1_steps: int = 60, phase2_steps: int = 40, seed: int = 0,
+                   sparsity: float = 0.5, method: str = "magnitude",
+                   span_coef: float = 0.02):
+    """A phase-1+2 trained smoke-size ALBERT-EdgeBERT (cached per-process)."""
+    from repro.configs.base import PruneConfig, SpanConfig, get_smoke_config
+    from repro.data.synthetic import SyntheticCLS
+    from repro.models.model import build_model
+    from repro.training.optim import AdamWConfig
+    from repro.training.train_loop import EdgeBertTrainer, TrainerConfig
+
+    cfg = get_smoke_config("albert_edgebert")
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="none")
+    cfg = cfg.with_edgebert(
+        prune=PruneConfig(enabled=sparsity > 0, method=method,
+                          encoder_sparsity=sparsity, embedding_sparsity=0.6,
+                          end_step=max(phase1_steps - 10, 1), update_every=5),
+        span=SpanConfig(enabled=True, max_span=128, ramp=16,
+                        loss_coef=span_coef, init_span=96.0),
+    )
+    model = build_model(cfg)
+    data = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3, seed=seed)
+    trainer = EdgeBertTrainer(
+        model,
+        TrainerConfig(phase1_steps=phase1_steps, phase2_steps=phase2_steps,
+                      opt=AdamWConfig(lr=2e-3, warmup_steps=5,
+                                      total_steps=phase1_steps + phase2_steps,
+                                      span_lr_mult=300.0)),
+    )
+    params = model.init_params(jax.random.PRNGKey(seed))
+    params, prune_state, _ = trainer.phase1(params, data, log_every=10_000)
+    if phase2_steps:
+        params, _ = trainer.phase2(params, data)
+    return model, params, prune_state, data, cfg
+
+
+def eval_accuracy(model, params, data, n_batches: int = 4, start: int = 5000) -> float:
+    accs = []
+    for i in range(n_batches):
+        b = data.batch(start + i)
+        batch = {"tokens": jnp.asarray(b["tokens"])}
+        out = model.apply_train(params, batch)
+        logits = (
+            out.all_cls_logits[-1] if out.all_cls_logits is not None else out.cls_logits
+        )
+        accs.append(float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(b["labels"]))))
+    return float(np.mean(accs))

@@ -1,0 +1,57 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; also writes
+benchmarks/results/bench.csv.  Roofline rows come from the dry-run results
+(run ``python -m repro.launch.dryrun --all --mesh both`` first for the full
+40-cell table).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from benchmarks import common
+
+BENCHES = [
+    "bench_early_exit",        # Fig. 4
+    "bench_attention_span",    # Table I
+    "bench_pruning",           # Fig. 5
+    "bench_quantization",      # Table II
+    "bench_envm",              # Table III
+    "bench_combined",          # Fig. 7
+    "bench_encoder_flops",     # Fig. 8
+    "bench_accelerator",       # Fig. 10 + Table V
+    "bench_nvm_poweron",       # Fig. 11
+    "bench_kernels",           # Pallas kernel suite
+    "bench_roofline",          # §Roofline table (from dry-run)
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    import importlib
+
+    for name in BENCHES:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+        except Exception as e:  # keep the suite running
+            failures.append(name)
+            common.emit(f"{name}_FAILED", 0.0, str(e)[:120])
+            traceback.print_exc()
+    csv_path = os.path.join(common.RESULTS_DIR, "bench.csv")
+    with open(csv_path, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(common.all_rows()) + "\n")
+    print(f"# wrote {csv_path}; failures={failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

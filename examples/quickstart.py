@@ -1,0 +1,47 @@
+"""Quickstart: build an EdgeBERT-optimized ALBERT, run one training step, and
+watch sentences exit early.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.data.synthetic import SyntheticCLS
+from repro.models.model import build_model
+from repro.training.optim import AdamWConfig, adamw_init
+from repro.training.train_loop import make_train_step
+
+# 1. config: ALBERT + the full EdgeBERT feature stack (early exit, adaptive
+#    span, pruning, AdaptivFloat) — smoke-sized for CPU
+cfg = dataclasses.replace(
+    get_smoke_config("albert_edgebert"), dtype="float32", remat_policy="none"
+)
+print(f"model: {cfg.name}  d_model={cfg.d_model} layers={cfg.n_layers} "
+      f"(shared weights: {cfg.shared_layers})")
+
+# 2. build + init
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+
+# 3. one train step on the synthetic GLUE-like task
+data = SyntheticCLS(cfg.vocab_size, seq_len=32, global_batch=8, num_classes=3)
+batch = {k: jnp.asarray(v) for k, v in data.batch(0).items() if k != "signal_ratio"}
+step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+params, opt_state, metrics = step(params, adamw_init(params), batch)
+print(f"train step: loss={float(metrics['loss']):.3f}")
+
+# 4. forward with early exit: per-sentence exit layers + entropies
+out = model.apply_train(params, batch)
+print(f"exit layers (T_E={cfg.edgebert.early_exit.entropy_threshold}): "
+      f"{np.asarray(out.exit_layer)}")
+print(f"final-layer entropies: {np.round(np.asarray(out.all_entropies[-1]), 3)}")
+
+# 5. the learned attention spans (they shrink during fine-tuning)
+print(f"span_z init: {np.round(np.asarray(params['span_z'][0]), 1)}")

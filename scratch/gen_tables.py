@@ -1,0 +1,51 @@
+"""Regenerate the ROOFLINE_TABLE and the variant-comparison table for
+EXPERIMENTS.md from benchmarks/results/dryrun.json."""
+import json
+import sys
+
+recs = json.load(open('benchmarks/results/dryrun.json'))
+
+
+def roofline_table():
+    base = [r for r in recs if r.get('variant', 'baseline') == 'baseline']
+    base.sort(key=lambda r: (r['arch'], r['shape'], r['mesh']))
+    out = ['| arch | shape | mesh | t_compute (s) | t_memory (s) | t_coll (s) | dominant | useful | frac | HBM/chip (GiB) | compile (s) |',
+           '|---|---|---|---|---|---|---|---|---|---|---|']
+    for r in base:
+        if r['status'] == 'skipped':
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | *skipped: full-attention* | — | — | — | — |")
+            continue
+        rl = r['roofline']
+        ma = r.get('memory_analysis', {})
+        hbm = (ma.get('argument_size_in_bytes', 0) + ma.get('temp_size_in_bytes', 0)) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['t_compute_s']:.2e} | "
+            f"{rl['t_memory_s']:.2e} | {rl['t_collective_s']:.2e} | **{rl['dominant']}** | "
+            f"{rl['useful_flops_ratio']:.2f} | {rl['roofline_fraction']:.3f} | {hbm:.1f} | {r.get('compile_s','')} |")
+    return '\n'.join(out)
+
+
+def variant_table():
+    var = [r for r in recs if r.get('variant', 'baseline') != 'baseline' and r['status'] == 'ok']
+    keys = sorted({(r['arch'], r['shape'], r['mesh']) for r in var})
+    out = ['| cell | variant | t_compute | t_memory | t_coll | dominant | frac |',
+           '|---|---|---|---|---|---|---|']
+    for key in keys:
+        cell = [r for r in recs if (r['arch'], r['shape'], r['mesh']) == key and r['status'] == 'ok']
+        cell.sort(key=lambda r: (r.get('variant', 'baseline') != 'baseline', r.get('variant', '')))
+        for r in cell:
+            rl = r['roofline']
+            out.append(
+                f"| {key[0]} {key[1]} {key[2]} | {r.get('variant','baseline')} | "
+                f"{rl['t_compute_s']:.2e} | {rl['t_memory_s']:.2e} | {rl['t_collective_s']:.2e} | "
+                f"{rl['dominant']} | {rl['roofline_fraction']:.3f} |")
+    return '\n'.join(out)
+
+
+if __name__ == '__main__':
+    which = sys.argv[1] if len(sys.argv) > 1 else 'both'
+    if which in ('roofline', 'both'):
+        print(roofline_table())
+    if which in ('variants', 'both'):
+        print()
+        print(variant_table())

@@ -1,0 +1,42 @@
+import jax, jax.numpy as jnp
+import numpy as np
+import traceback
+from dataclasses import replace
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models.model import build_model, count_params
+
+rng = jax.random.PRNGKey(0)
+
+for arch in ARCH_IDS + ("albert_base", "albert_edgebert"):
+    try:
+        cfg = get_smoke_config(arch)
+        cfg = replace(cfg, dtype="float32", remat_policy="none")
+        m = build_model(cfg)
+        params = m.init_params(rng)
+        B, S = 2, 64
+        batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+        if cfg.family == "encdec":
+            batch["enc_input"] = jax.random.normal(rng, (B, cfg.enc_seq_len, cfg.d_model)) * 0.1
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.random.normal(rng, (B, cfg.n_image_tokens, cfg.d_model)) * 0.1
+        out = jax.jit(m.apply_train)(params, batch)
+        lg = out.logits if out.logits is not None else out.cls_logits
+        assert np.all(np.isfinite(np.asarray(lg))), f"{arch}: NaN in logits"
+        print(f"OK  train {arch:24s} params={count_params(params):9d} logits={lg.shape}")
+        # decode
+        if cfg.family != "albert":
+            cache = m.init_cache(B, 128)
+            if cfg.family == "encdec":
+                lg2, cache = m.prefill(params, batch["tokens"][:, :16], cache, aux={"enc_input": batch["enc_input"]})
+            elif cfg.family == "vlm":
+                lg2, cache = m.prefill(params, batch["tokens"][:, :16], cache, aux={"image_embeds": batch["image_embeds"]})
+            else:
+                lg2, cache = m.prefill(params, batch["tokens"][:, :16], cache)
+            tok = batch["tokens"][:, :1]
+            lg3, cache = jax.jit(m.decode_step, static_argnames=())(params, cache, tok, 16)
+            assert np.all(np.isfinite(np.asarray(lg3))), f"{arch}: NaN in decode"
+            print(f"OK  decode {arch:22s} logits={lg3.shape}")
+    except Exception as e:
+        print(f"FAIL {arch}: {e}")
+        traceback.print_exc()

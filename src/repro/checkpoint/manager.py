@@ -1,0 +1,200 @@
+"""Fault-tolerant checkpointing: atomic commits, integrity hashes, latest-
+pointer, mesh-ELASTIC restore (a checkpoint written on one mesh restores onto
+any other — shardings are reapplied at load), preemption hooks.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json  (+ <dir>/LATEST)
+
+Write protocol (crash-safe): write into step_<N>.tmp/, fsync, atomic rename to
+step_<N>/, then rewrite LATEST.  A partially-written checkpoint can never be
+picked up because LATEST only moves after the rename, and the manifest's
+sha256 over the npz guards against torn writes underneath the rename.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.util import logger
+
+SEP = "||"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _treedef_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in flat], treedef
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    extra: Optional[Dict[str, Any]] = None,
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **{k: v for k, v in flat.items()})
+    with open(npz_path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+
+    manifest = {
+        "step": step,
+        "sha256": digest,
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # move the latest pointer last (atomic via rename)
+    latest_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    logger.info("checkpoint saved: %s (%d arrays)", final, len(flat))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore_checkpoint(
+    directory: str,
+    target_tree: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+    verify: bool = True,
+) -> Tuple[Any, Dict]:
+    """Restore into the structure of `target_tree` (mesh-elastic: pass
+    `shardings` — a matching pytree of NamedSharding — to place shards for a
+    possibly different mesh than the one that wrote the checkpoint)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz_path = os.path.join(path, "arrays.npz")
+    if verify:
+        with open(npz_path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        if digest != manifest["sha256"]:
+            raise IOError(f"checkpoint {path} failed integrity check")
+    data = np.load(npz_path)
+
+    paths, treedef = _treedef_paths(target_tree)
+    missing = [k for k in paths if k not in data]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]} (+{len(missing)-5 if len(missing)>5 else 0})")
+
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(paths)
+    )
+    target_leaves = treedef.flatten_up_to(target_tree)
+    leaves = []
+    for key, tgt, shard in zip(paths, target_leaves, shard_leaves):
+        arr = data[key]
+        want_dtype = tgt.dtype if hasattr(tgt, "dtype") else arr.dtype
+        arr = arr.astype(want_dtype)
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class CheckpointManager:
+    """Keeps N checkpoints, auto-resume, preemption-aware saving.
+
+    ``install_preemption_handler()`` hooks SIGTERM: the next ``maybe_save``
+    call checkpoints immediately (preempt-save) regardless of cadence — the
+    standard behaviour for spot/preemptible fleets.
+    """
+
+    def __init__(self, directory: str, save_every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.save_every = save_every
+        self.keep = keep
+        self._preempted = threading.Event()
+
+    # ---- preemption ----
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            logger.warning("SIGTERM received: scheduling preemption checkpoint")
+            self._preempted.set()
+
+        signal.signal(signal.SIGTERM, handler)
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted.is_set()
+
+    def simulate_preemption(self):
+        self._preempted.set()
+
+    # ---- save/restore ----
+    def maybe_save(self, step: int, tree: Any, extra=None, force: bool = False) -> Optional[str]:
+        if force or self.preempted or (step % self.save_every == 0 and step > 0):
+            path = save_checkpoint(self.directory, step, tree, extra)
+            self._gc()
+            self._preempted.clear()
+            return path
+        return None
+
+    def restore_latest(self, target_tree: Any, shardings=None):
+        return restore_checkpoint(self.directory, target_tree, shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[-1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

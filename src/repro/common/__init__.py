@@ -1,0 +1,7 @@
+from repro.common.util import (
+    tree_size_bytes,
+    tree_num_params,
+    human_bytes,
+    fold_rng,
+    assert_finite,
+)

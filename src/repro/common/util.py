@@ -1,0 +1,72 @@
+"""Small shared utilities: pytree accounting, rng folding, logging."""
+from __future__ import annotations
+
+import logging
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+logger = logging.getLogger("repro")
+if not logger.handlers:
+    _h = logging.StreamHandler()
+    _h.setFormatter(logging.Formatter("[%(levelname)s %(name)s] %(message)s"))
+    logger.addHandler(_h)
+    logger.setLevel(logging.INFO)
+
+
+def tree_num_params(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total byte size of a pytree of arrays (or ShapeDtypeStructs)."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def fold_rng(rng: jax.Array, *names: str) -> jax.Array:
+    """Deterministically derive a child rng from string names."""
+    for name in names:
+        # stable 32-bit hash of the name
+        h = 2166136261
+        for ch in name.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        rng = jax.random.fold_in(rng, h)
+    return rng
+
+
+def assert_finite(tree: Any, where: str = "") -> None:
+    """Host-side check (for tests / eager debugging) that a pytree is finite."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f" and not np.all(np.isfinite(arr)):
+            raise AssertionError(f"non-finite values at {where}{jax.tree_util.keystr(path)}")
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def log2_int(x: int) -> int:
+    assert x > 0 and (x & (x - 1)) == 0, f"{x} not a power of two"
+    return int(math.log2(x))

@@ -1,0 +1,19 @@
+"""EdgeBERT core algorithms (the paper's contribution), in pure JAX.
+
+Perf-critical variants live in repro.kernels as Pallas TPU kernels; everything
+here is the reference/algorithmic layer used by the model zoo and training.
+"""
+from repro.core.entropy import entropy_from_logits
+from repro.core.adaptivfloat import (
+    AFFormat,
+    af_decode,
+    af_encode,
+    af_quantize,
+    quantize_pytree,
+)
+from repro.core.adaptive_span import (
+    span_soft_mask,
+    span_loss,
+    hard_spans,
+    active_head_indices,
+)

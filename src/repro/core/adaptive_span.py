@@ -1,0 +1,87 @@
+"""Adaptive attention span (paper §III-B; Sukhbaatar et al. [50]).
+
+Each head h owns a learnable scalar z_h in [0, max_span].  During fine-tuning a
+soft ramp mask
+
+    m_z(d) = clamp((ramp + z - d) / ramp, 0, 1)        d = token distance
+
+re-modulates attention weights (d = |i-j| for bidirectional ALBERT, i-j for
+causal LMs), and the mean normalized span is added to the loss.  At deployment
+the spans are frozen to integers (paper Table I): a head with span 0 is skipped
+entirely (the accelerator writes zeros for its context vector; we gather it out
+of the computation graph), and surviving heads attend over a window of
+``span`` tokens — which the Pallas kernel exploits by bounding its kv-block
+loop (block-level predication, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def distance_matrix(q_len: int, k_len: int, causal: bool, q_offset=0) -> jnp.ndarray:
+    """d[i, j] = distance from query i to key j (>= 0); causal masks j > i."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(k_len)[None, :]
+    d = qi - kj
+    if not causal:
+        d = jnp.abs(d)
+    return d  # causal: negative d means "future" -> masked by attention anyway
+
+
+def span_soft_mask(
+    z: jnp.ndarray,            # [n_heads] learnable spans
+    q_len: int,
+    k_len: int,
+    ramp: int,
+    causal: bool,
+    q_offset=0,
+) -> jnp.ndarray:
+    """[n_heads, q_len, k_len] soft mask in [0, 1]."""
+    d = distance_matrix(q_len, k_len, causal, q_offset).astype(jnp.float32)
+    m = (ramp + z[:, None, None] - d[None]) / float(ramp)
+    m = jnp.clip(m, 0.0, 1.0)
+    if causal:
+        m = jnp.where(d[None] < 0, 0.0, m)
+    return m
+
+
+def span_loss(z: jnp.ndarray, max_span: int, coef: float) -> jnp.ndarray:
+    """Regularizer pushing spans down (added to the task loss during phase 1)."""
+    return coef * jnp.mean(z) / float(max_span)
+
+
+def clamp_spans(z: jnp.ndarray, max_span: int) -> jnp.ndarray:
+    """Projection applied after each optimizer step (z stays in [0, S])."""
+    return jnp.clip(z, 0.0, float(max_span))
+
+
+def hard_spans(z: jnp.ndarray, threshold: float = 0.5) -> np.ndarray:
+    """Deployment-time integer spans (paper Table I). z < threshold -> head off."""
+    z = np.asarray(z)
+    s = np.ceil(z).astype(np.int32)
+    s[z < threshold] = 0
+    return s
+
+
+def active_head_indices(spans: Sequence[int]) -> Tuple[np.ndarray, int]:
+    """Indices of heads with span > 0 and the max surviving span (window)."""
+    spans = np.asarray(spans)
+    idx = np.nonzero(spans > 0)[0]
+    window = int(spans[idx].max()) if idx.size else 0
+    return idx, window
+
+
+def span_flop_factor(spans: Sequence[int], n_heads: int, seq_len: int) -> float:
+    """Fraction of attention-score FLOPs retained vs full dense attention.
+
+    Reproduces the paper's Table I claim (e.g. MNLI: 1.22x fewer total FLOPs
+    for single-batch inference once 8/12 heads are off).
+    """
+    spans = np.asarray(spans, dtype=np.float64)
+    kept = np.minimum(spans, seq_len).sum() * seq_len
+    total = float(n_heads) * seq_len * seq_len
+    return float(kept / total) if total else 0.0

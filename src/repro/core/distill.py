@@ -1,0 +1,30 @@
+"""Knowledge distillation loss (paper Fig. 6 phase 1: the base task-finetuned
+ALBERT acts as teacher while pruning/span-learning the student)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits: jnp.ndarray, teacher_logits: jnp.ndarray, temperature: float = 2.0):
+    """KL(teacher || student) with temperature scaling, mean over batch."""
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    kl = jnp.sum(tp * (jnp.log(jnp.maximum(tp, 1e-20)) - sp), axis=-1)
+    return (t * t) * jnp.mean(kl)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def distill_objective(student_logits, teacher_logits, labels, alpha: float, temperature: float = 2.0):
+    """(1-alpha)*CE + alpha*KD — the phase-1 fine-tuning objective."""
+    ce = cross_entropy(student_logits, labels)
+    if alpha <= 0:
+        return ce
+    kd = kd_loss(student_logits, teacher_logits, temperature)
+    return (1.0 - alpha) * ce + alpha * kd

@@ -1,0 +1,187 @@
+"""Entropy-based early exit (paper §III-A, Fig. 4; DeeBERT-style off-ramps).
+
+One *shared* highway off-ramp (pooler d x d + classifier d x C — the paper's
+0.59 MB figure implies a single shared 768x768 linear) is evaluated after every
+encoder block; a sentence exits when H(logits) < T_E.
+
+Execution modes (DESIGN.md §2):
+  * ``exit_all_layers``   — dense scan computing every off-ramp's entropy; used
+    for training phase 2 and for Fig. 4-style threshold sweeps (one pass gives
+    the exit layer for *every* threshold).
+  * ``exit_while_loop``   — batch-1 ``lax.while_loop`` with a dynamic trip
+    count: layers after the exit are genuinely not executed (the TPU analogue
+    of the accelerator's interrupt).
+  * ``exit_batched_masked`` — batched serving: per-sample done-mask freezes
+    exited rows; the serving engine recycles finished lanes (continuation
+    batching) to convert masked rows into real throughput.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.entropy import entropy_from_logits
+
+
+class OfframpParams(NamedTuple):
+    pooler_w: jnp.ndarray    # [d, d]
+    pooler_b: jnp.ndarray    # [d]
+    cls_w: jnp.ndarray       # [d, C]
+    cls_b: jnp.ndarray       # [C]
+
+
+def init_offramp(rng: jax.Array, d_model: int, num_classes: int, dtype=jnp.float32) -> OfframpParams:
+    k1, k2 = jax.random.split(rng)
+    s1 = 1.0 / jnp.sqrt(d_model)
+    return OfframpParams(
+        pooler_w=(jax.random.normal(k1, (d_model, d_model)) * s1).astype(dtype),
+        pooler_b=jnp.zeros((d_model,), dtype),
+        cls_w=(jax.random.normal(k2, (d_model, num_classes)) * s1).astype(dtype),
+        cls_b=jnp.zeros((num_classes,), dtype),
+    )
+
+
+def offramp_logits(h: jnp.ndarray, p: OfframpParams) -> jnp.ndarray:
+    """h: [..., seq, d] -> logits [..., C].  CLS pooling (token 0) + tanh."""
+    cls = h[..., 0, :]
+    pooled = jnp.tanh(cls @ p.pooler_w + p.pooler_b)
+    return pooled @ p.cls_w + p.cls_b
+
+
+# ---------------------------------------------------------------------------
+# Mode 1: dense all-layers (training / Fig. 4 sweeps)
+# ---------------------------------------------------------------------------
+
+
+def exit_all_layers(
+    layer_fn: Callable[[int, jnp.ndarray], jnp.ndarray],
+    n_layers: int,
+    h0: jnp.ndarray,
+    offramp: OfframpParams,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run every layer; return (all_logits [L, B, C], all_entropy [L, B])."""
+
+    def body(h, i):
+        h = layer_fn(i, h)
+        lg = offramp_logits(h, offramp)
+        return h, (lg, entropy_from_logits(lg))
+
+    _, (logits, ent) = jax.lax.scan(body, h0, jnp.arange(n_layers))
+    return logits, ent
+
+
+def exit_decisions(entropies: jnp.ndarray, threshold: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Given per-layer entropies [L, B], the exit layer per sample (1-based)
+    and a mask of which (layer, sample) produced the final prediction."""
+    L = entropies.shape[0]
+    below = entropies < threshold
+    # force exit at the last layer
+    below = below.at[-1].set(True)
+    exit_layer = jnp.argmax(below, axis=0)  # first True
+    onehot = jax.nn.one_hot(exit_layer, L, axis=0, dtype=entropies.dtype)
+    return exit_layer + 1, onehot
+
+
+def select_exit_logits(all_logits: jnp.ndarray, exit_layer_1based: jnp.ndarray) -> jnp.ndarray:
+    """all_logits [L, B, C], exit_layer [B] -> [B, C]."""
+    return jnp.take_along_axis(
+        all_logits, (exit_layer_1based - 1)[None, :, None], axis=0
+    )[0]
+
+
+# ---------------------------------------------------------------------------
+# Mode 2: batch-1 while_loop (true dynamic depth)
+# ---------------------------------------------------------------------------
+
+
+def exit_while_loop(
+    layer_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    n_layers: int,
+    h0: jnp.ndarray,
+    offramp: OfframpParams,
+    threshold: float,
+):
+    """h0: [seq, d] (single sentence). layer_fn(layer_idx, h) -> h.
+
+    Returns (logits [C], exit_layer (1-based), entropy_at_exit).
+    Layers beyond the exit are *not executed* — dynamic trip count.
+    """
+    C = offramp.cls_b.shape[0]
+
+    def cond(state):
+        i, h, done, logits, ent = state
+        return jnp.logical_and(i < n_layers, jnp.logical_not(done))
+
+    def body(state):
+        i, h, done, logits, ent = state
+        h = layer_fn(i, h)
+        lg = offramp_logits(h[None], offramp)[0]
+        e = entropy_from_logits(lg)
+        exit_now = jnp.logical_or(e < threshold, i == n_layers - 1)
+        return (i + 1, h, exit_now, lg, e)
+
+    init = (
+        jnp.array(0, jnp.int32),
+        h0,
+        jnp.array(False),
+        jnp.zeros((C,), jnp.float32),
+        jnp.array(jnp.inf, jnp.float32),
+    )
+    i, h, done, logits, ent = jax.lax.while_loop(cond, body, init)
+    return logits, i, ent
+
+
+# ---------------------------------------------------------------------------
+# Mode 3: batched masked (serving)
+# ---------------------------------------------------------------------------
+
+
+def exit_batched_masked(
+    layer_fn: Callable[[int, jnp.ndarray], jnp.ndarray],
+    n_layers: int,
+    h0: jnp.ndarray,            # [B, S, D]
+    offramp: OfframpParams,
+    threshold: float,
+):
+    """Per-sample freeze-on-exit. Returns (logits [B, C], exit_layer [B]).
+
+    FLOPs are dense here; the serving engine converts the done-mask into
+    throughput by recycling exited lanes between blocks.
+    """
+
+    def body(carry, i):
+        h, done, logits, exit_layer = carry
+        h_new = layer_fn(i, h)
+        h = jnp.where(done[:, None, None], h, h_new)
+        lg = offramp_logits(h, offramp)
+        ent = entropy_from_logits(lg)
+        exit_now = jnp.logical_and(jnp.logical_not(done), ent < threshold)
+        last = i == n_layers - 1
+        take = jnp.logical_or(exit_now, jnp.logical_and(last, jnp.logical_not(done)))
+        logits = jnp.where(take[:, None], lg, logits)
+        exit_layer = jnp.where(take, i + 1, exit_layer)
+        done = jnp.logical_or(done, exit_now)
+        return (h, done, logits, exit_layer), None
+
+    B = h0.shape[0]
+    C = offramp.cls_b.shape[0]
+    init = (
+        h0,
+        jnp.zeros((B,), bool),
+        jnp.zeros((B, C), jnp.float32),
+        jnp.zeros((B,), jnp.int32),
+    )
+    (h, done, logits, exit_layer), _ = jax.lax.scan(body, init, jnp.arange(n_layers))
+    return logits, exit_layer
+
+
+def runtime_savings(exit_layers: jnp.ndarray, n_layers: int) -> jnp.ndarray:
+    """Paper's 'theoretical runtime savings' = 1 - avg_exit/L (Fig. 4)."""
+    return 1.0 - jnp.mean(exit_layers.astype(jnp.float32)) / n_layers
+
+
+def ee_perf(accuracy: float, savings: float) -> float:
+    """Paper Eq. 2: EE_perf = accuracy / (1 - savings)."""
+    return accuracy / max(1.0 - savings, 1e-9)

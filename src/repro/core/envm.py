@@ -1,0 +1,119 @@
+"""Embedded non-volatile memory (eNVM) model: MLC ReRAM storage of the frozen,
+task-shared embedding table (paper §III-D, Table III, Fig. 11).
+
+The paper stores 8-bit AdaptivFloat codes of the 60%-pruned embeddings with
+the bitmask in low-risk SLC and the non-zero codes in MLC2, and quantifies
+robustness with Ares-style fault injection [41], [43].  We reproduce that:
+faults are injected into the *stored uint8 AF codes*, grouped into 1/2/3-bit
+cells; a faulty cell's level shifts by +/-1 (the dominant MLC disturb mode).
+
+Cell characteristics follow paper Table III (28nm ReRAM scaled): area density
+and read latency are the paper's numbers; bit-error rates are calibration
+anchors chosen to reproduce the paper's qualitative result (SLC/MLC2 safe,
+MLC3 occasionally catastrophic) from the MLC reliability study [11].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.adaptivfloat import AFFormat
+from repro.core import adaptivfloat as af
+from repro.core import bitmask as bm
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CellConfig:
+    name: str
+    bits_per_cell: int
+    area_mm2_per_mb: float   # paper Table III
+    read_latency_ns: float   # paper Table III
+    ber: float               # per-cell fault probability (calibration anchor)
+
+
+CELL_CONFIGS: Dict[str, CellConfig] = {
+    "SLC": CellConfig("SLC", 1, 0.28, 1.21, 1e-8),
+    "MLC2": CellConfig("MLC2", 2, 0.08, 1.54, 1e-6),
+    "MLC3": CellConfig("MLC3", 3, 0.04, 2.96, 2e-3),
+}
+
+
+def inject_cell_faults(
+    codes: np.ndarray, cell: CellConfig, rng: np.random.Generator
+) -> np.ndarray:
+    """Flip MLC levels of stored uint8 codes.
+
+    Each code is split into cells of `bits_per_cell`; a faulty cell's stored
+    level moves +/-1 (saturating), modelling resistance-drift into an adjacent
+    level — the dominant MLC ReRAM error mode.
+    """
+    codes = np.asarray(codes, dtype=np.uint8).copy()
+    bpc = cell.bits_per_cell
+    n_cells_per_code = -(-8 // bpc)
+    flat = codes.reshape(-1)
+    for ci in range(n_cells_per_code):
+        shift = ci * bpc
+        n_bits = min(bpc, 8 - shift)
+        if n_bits <= 0:
+            continue
+        mask = (1 << n_bits) - 1
+        level = (flat >> shift) & mask
+        faulty = rng.random(flat.shape) < cell.ber
+        direction = rng.integers(0, 2, flat.shape) * 2 - 1
+        new_level = np.clip(level.astype(np.int32) + direction, 0, mask).astype(np.uint8)
+        level = np.where(faulty, new_level, level)
+        flat = (flat & ~np.uint8(mask << shift)) | (level << np.uint8(shift))
+    return flat.reshape(codes.shape).astype(np.uint8)
+
+
+def store_and_readback(
+    embedding: np.ndarray,
+    data_cell: str = "MLC2",
+    mask_cell: str = "SLC",
+    fmt: AFFormat = AFFormat(),
+    seed: int = 0,
+) -> Tuple[np.ndarray, dict]:
+    """Full eNVM round-trip for the embedding table.
+
+    1. bitmask-encode the (pruned) embedding;
+    2. AF8-encode non-zero values -> uint8 codes;
+    3. inject faults: bitmask bits in `mask_cell` (SLC), codes in `data_cell`;
+    4. decode back to floats (what the accelerator reads after power-on).
+    """
+    rng = np.random.default_rng(seed)
+    enc = bm.encode(embedding)
+    codes, e_min = af.af_encode(jnp.asarray(enc.values), fmt)
+    codes = np.asarray(codes)
+
+    faulty_mask_bits = inject_cell_faults(enc.bitmask, CELL_CONFIGS[mask_cell], rng)
+    faulty_codes = inject_cell_faults(codes, CELL_CONFIGS[data_cell], rng)
+
+    values = np.asarray(af.af_decode(jnp.asarray(faulty_codes), e_min, fmt))
+    n = int(np.prod(enc.shape))
+    nz = np.unpackbits(faulty_mask_bits, count=n).astype(bool)
+    out = np.zeros(n, dtype=np.float32)
+    # a flipped bitmask bit changes which slots receive values: faithful to
+    # the format, values stream fills 'on' bits in order
+    n_vals = min(int(nz.sum()), len(values))
+    idx = np.nonzero(nz)[0][:n_vals]
+    out[idx] = values[:n_vals]
+    stats = {
+        "n_mask_bit_flips": int(
+            (np.unpackbits(faulty_mask_bits, count=n) != np.unpackbits(enc.bitmask, count=n)).sum()
+        ),
+        "n_code_faults": int((faulty_codes != codes).sum()),
+        "storage": bm.storage_bytes(enc, value_bits=fmt.n_bits),
+    }
+    return out.reshape(enc.shape), stats
+
+
+def area_mm2(n_bytes: int, cell: str) -> float:
+    return CELL_CONFIGS[cell].area_mm2_per_mb * n_bytes / (1024 * 1024)
+
+
+def read_latency_ns(cell: str) -> float:
+    return CELL_CONFIGS[cell].read_latency_ns

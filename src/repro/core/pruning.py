@@ -1,0 +1,217 @@
+"""Movement + magnitude pruning (paper §III-C, Fig. 5, Table IV).
+
+Magnitude pruning: keep weights with |w| above the per-tensor quantile implied
+by the target sparsity; recomputed on a schedule during fine-tuning; applied
+once to the (then frozen, task-shared) embedding table.
+
+Movement pruning (Sanh et al. [47]): learnable importance scores S with the
+same shape as W; forward pass uses W * TopV(S); the straight-through estimator
+routes dL/dS = (dL/d(W*mask)) * W so scores accumulate the *movement* of
+weights during fine-tuning.
+
+``block_size > 1`` scores contiguous (block, block) tiles by L2 norm and prunes
+whole tiles — the beyond-paper structured mode that the TPU block-sparse matmul
+kernel (repro.kernels.block_sparse) can actually skip (DESIGN.md §2: element-
+granular zero-skip has no MXU analogue; tile-granular does).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Sparsity schedule (cubic, Zhu & Gupta style — used by both methods)
+# ---------------------------------------------------------------------------
+
+
+def sparsity_schedule(step, final_sparsity: float, begin_step: int, end_step: int):
+    """Cubic ramp: 0 at begin_step -> final_sparsity at end_step."""
+    step = jnp.asarray(step, jnp.float32)
+    t = jnp.clip((step - begin_step) / jnp.maximum(end_step - begin_step, 1), 0.0, 1.0)
+    return final_sparsity * (1.0 - (1.0 - t) ** 3)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def _block_reduce(score: jnp.ndarray, block: int) -> jnp.ndarray:
+    """L2-reduce a 2D score tensor into (ceil(r/b), ceil(c/b)) block scores."""
+    r, c = score.shape
+    pr, pc = (-r) % block, (-c) % block
+    s = jnp.pad(score, ((0, pr), (0, pc)))
+    s = s.reshape(s.shape[0] // block, block, s.shape[1] // block, block)
+    return jnp.sqrt(jnp.sum(s.astype(jnp.float32) ** 2, axis=(1, 3)))
+
+
+def _expand_block_mask(bmask: jnp.ndarray, shape, block: int) -> jnp.ndarray:
+    m = jnp.repeat(jnp.repeat(bmask, block, axis=0), block, axis=1)
+    return m[: shape[0], : shape[1]]
+
+
+def topv_mask(score: jnp.ndarray, sparsity, block_size: int = 1) -> jnp.ndarray:
+    """Binary keep-mask retaining the top (1-sparsity) fraction by score."""
+    if block_size > 1 and score.ndim == 2:
+        bscore = _block_reduce(score, block_size)
+        bmask = topv_mask(bscore, sparsity, block_size=1)
+        return _expand_block_mask(bmask, score.shape, block_size)
+    flat = score.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    # drop the k = floor(n*sparsity) smallest scores: threshold at the k-th
+    # order statistic (sorted[k-1]); keep strictly-greater values
+    sparsity = jnp.asarray(sparsity, jnp.float32)
+    k = jnp.clip(jnp.floor(n * sparsity).astype(jnp.int32), 0, n)
+    thresh = jnp.sort(flat)[jnp.maximum(k - 1, 0)]
+    mask = (flat > thresh).astype(score.dtype)
+    # sparsity == 0 (or k == 0) keeps everything
+    mask = jnp.where(k <= 0, jnp.ones_like(mask), mask)
+    return mask.reshape(score.shape)
+
+
+def magnitude_mask(w: jnp.ndarray, sparsity, block_size: int = 1) -> jnp.ndarray:
+    return topv_mask(jnp.abs(w), sparsity, block_size)
+
+
+# ---------------------------------------------------------------------------
+# Movement pruning STE
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def movement_masked_weight(w, scores, sparsity, block_size: int = 1):
+    return w * topv_mask(scores, sparsity, block_size)
+
+
+def _mm_fwd(w, scores, sparsity, block_size):
+    mask = topv_mask(scores, sparsity, block_size)
+    return w * mask, (w, mask)
+
+
+def _mm_bwd(block_size, res, g):
+    w, mask = res
+    # dL/dw through the mask; dL/dscores via straight-through = g * w
+    return g * mask, (g * w).astype(w.dtype), None
+
+
+movement_masked_weight.defvjp(_mm_fwd, _mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pruning state plumbing over parameter pytrees
+# ---------------------------------------------------------------------------
+
+# Which leaves are prunable. The paper deliberately does NOT sparsify layer
+# normalization, the early-exit off-ramp, or the final classifier (§IV-B2:
+# EE_perf deteriorates 3.2x on SST-2 otherwise).
+_EXCLUDE_SUBSTRINGS = ("norm", "ln_", "bias", "offramp", "classifier", "span_z", "router")
+
+
+def prunable(path: str, leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    lp = path.lower()
+    return not any(s in lp for s in _EXCLUDE_SUBSTRINGS)
+
+
+def path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+class PruneState(NamedTuple):
+    masks: Any          # pytree of {path: mask} aligned with prunable leaves
+    scores: Any         # movement-pruning importance scores (None for magnitude)
+
+
+def init_prune_state(params: Any, method: str) -> PruneState:
+    def mk_mask(path, leaf):
+        if prunable(path_str(path), leaf):
+            return jnp.ones_like(leaf, dtype=jnp.float32)
+        return None
+
+    def mk_score(path, leaf):
+        if method == "movement" and prunable(path_str(path), leaf):
+            # init scores to |w| so early masking is magnitude-like, then moves
+            return jnp.abs(leaf).astype(jnp.float32)
+        return None
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    masks = jax.tree_util.tree_unflatten(treedef, [mk_mask(p, l) for p, l in flat])
+    scores = jax.tree_util.tree_unflatten(treedef, [mk_score(p, l) for p, l in flat])
+    return PruneState(masks=masks, scores=scores)
+
+
+def update_masks(
+    params: Any,
+    state: PruneState,
+    step,
+    method: str,
+    final_sparsity: float,
+    begin_step: int,
+    end_step: int,
+    block_size: int = 1,
+) -> PruneState:
+    """Recompute masks at the scheduled sparsity (called every `update_every`)."""
+    s = sparsity_schedule(step, final_sparsity, begin_step, end_step)
+
+    def upd(path, leaf, mask, score):
+        if mask is None:
+            return None
+        src = jnp.abs(leaf) if method == "magnitude" else score
+        return topv_mask(src, s, block_size).astype(jnp.float32)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_masks = treedef.flatten_up_to(state.masks)
+    flat_scores = treedef.flatten_up_to(state.scores)
+    new_masks = [
+        upd(p, l, m, sc) for (p, l), m, sc in zip(flat, flat_masks, flat_scores)
+    ]
+    return PruneState(
+        masks=jax.tree_util.tree_unflatten(treedef, new_masks), scores=state.scores
+    )
+
+
+def apply_masks(params: Any, state: PruneState) -> Any:
+    """params * mask for prunable leaves (identity elsewhere)."""
+
+    def ap(leaf, mask):
+        return leaf if mask is None else leaf * mask.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(
+        ap, params, state.masks, is_leaf=lambda x: x is None
+    )
+
+
+def update_movement_scores(state: PruneState, params: Any, grads: Any, lr) -> PruneState:
+    """Movement score update: S <- S - lr * w * grad_w (first-order movement).
+
+    (Equivalent to accumulating -(dL/dW)*W, the movement-pruning importance.)
+    """
+
+    def upd(score, w, g):
+        if score is None:
+            return None
+        return score - lr * (w * g).astype(jnp.float32)
+
+    new_scores = jax.tree_util.tree_map(
+        upd, state.scores, params, grads, is_leaf=lambda x: x is None
+    )
+    return PruneState(masks=state.masks, scores=new_scores)
+
+
+def measured_sparsity(params: Any, state: PruneState) -> Dict[str, float]:
+    """Actual zero fraction over prunable leaves (reported in benchmarks)."""
+    masked = apply_masks(params, state)
+    flat, _ = jax.tree_util.tree_flatten_with_path(masked)
+    zeros = total = 0
+    for path, leaf in flat:
+        if prunable(path_str(path), leaf):
+            arr = np.asarray(leaf)
+            zeros += int((arr == 0).sum())
+            total += arr.size
+    return {"sparsity": zeros / max(total, 1), "zeros": zeros, "total": total}

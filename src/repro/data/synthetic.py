@@ -1,0 +1,120 @@
+"""Deterministic synthetic data pipelines (the substrate EdgeBERT fine-tunes on;
+GLUE corpora are not available offline, so tasks are *planted-structure*
+synthetics that are actually learnable — loss decrease and early-exit /
+span / pruning behaviour are all measurable on them).
+
+* SyntheticLM  — Zipf-distributed tokens + induction patterns (``A B ... A B``)
+  so a real LM can beat the unigram entropy floor.
+* SyntheticCLS — sentence classification: class c plants tokens from a
+  class-specific vocabulary band at random positions; CLS token at position 0.
+  Difficulty is tunable via ``signal_ratio`` (fraction of planted positions):
+  easy sentences exit early, hard ones late — giving the entropy-threshold
+  sweep (Fig. 4) real spread.
+
+Both are: deterministic in (seed, step) — restart-exact for fault tolerance —
+and host-shardable: ``shard=(host_index, host_count)`` slices the global batch,
+matching a multi-host data-parallel launch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    shard: Tuple[int, int] = (0, 1)
+    zipf_a: float = 1.2
+    induction_period: int = 64
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        host, n_hosts = self.shard
+        assert self.global_batch % n_hosts == 0
+        local = self.global_batch // n_hosts
+        rng = np.random.default_rng((self.seed, step, host))
+        # zipf body (clipped to vocab)
+        toks = rng.zipf(self.zipf_a, size=(local, self.seq_len)).astype(np.int64)
+        toks = np.minimum(toks, self.vocab_size - 1)
+        # plant induction: repeat the first half-period later in the sequence
+        p = self.induction_period
+        if self.seq_len >= 2 * p:
+            n_rep = self.seq_len // (2 * p)
+            for i in range(n_rep):
+                src = slice(2 * p * i, 2 * p * i + p)
+                dst = slice(2 * p * i + p, 2 * p * (i + 1))
+                toks[:, dst] = toks[:, src]
+        return {"tokens": toks.astype(np.int32)}
+
+
+@dataclass
+class SyntheticCLS:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_classes: int = 3
+    seed: int = 0
+    shard: Tuple[int, int] = (0, 1)
+    signal_ratio_range: Tuple[float, float] = (0.05, 0.4)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        host, n_hosts = self.shard
+        local = self.global_batch // n_hosts
+        rng = np.random.default_rng((self.seed + 1, step, host))
+        labels = rng.integers(0, self.num_classes, size=(local,))
+        toks = rng.integers(4, self.vocab_size, size=(local, self.seq_len))
+        # class-c signal band: tokens in [band_c, band_c + band) — planted at a
+        # per-sentence signal ratio (easy/hard spread for early exit)
+        band = max((self.vocab_size - 4) // (4 * self.num_classes), 2)
+        ratios = rng.uniform(*self.signal_ratio_range, size=(local,))
+        for i in range(local):
+            n_sig = max(int(self.seq_len * ratios[i]), 1)
+            pos = rng.choice(np.arange(1, self.seq_len), size=n_sig, replace=False)
+            base = 4 + int(labels[i]) * band
+            toks[i, pos] = rng.integers(base, base + band, size=n_sig)
+        toks[:, 0] = 1  # CLS
+        return {
+            "tokens": toks.astype(np.int32),
+            "labels": labels.astype(np.int32),
+            "signal_ratio": ratios.astype(np.float32),
+        }
+
+
+def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.int32):
+    """ShapeDtypeStruct stand-ins for one global batch (the dry-run inputs)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.num_classes:
+            specs["labels"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        if cfg.family == "encdec":
+            specs["enc_input"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq_len, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.family == "encdec":
+            specs["enc_input"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq_len, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+    else:  # decode: one new token, cache of length S supplied separately
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return specs

@@ -1,0 +1,5 @@
+from repro.hwmodel.roofline import (
+    TPUV5E,
+    collective_bytes_from_hlo,
+    roofline_report,
+)

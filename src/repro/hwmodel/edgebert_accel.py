@@ -1,0 +1,216 @@
+"""Analytical model of the EdgeBERT accelerator (paper §V-VI).
+
+First-order energy/latency model of the 12nm/500MHz design, calibrated to the
+paper's measured anchors (Table V breakdown at MAC vector size n=16; Fig. 10
+energy-optimal n=16; Fig. 11 eNVM power-on advantage) and driven by *measured*
+workload statistics from the JAX model (FLOPs, sparsity, spans, exit layers).
+
+The model reproduces the paper's hardware evaluation methodology:
+  * PU: n^2 8-bit FP MACs -> matmul cycles = MACs / n^2 at 500 MHz; datapath
+    power grows ~n^2 with a wiring/accumulator overhead term alpha*n that
+    makes n=32 subdue its latency gains (paper Fig. 10);
+  * zero-skip: sparsity leaves the cycle count unchanged (fixed scheduling)
+    but gates VMAC energy — up to the paper's 2.6x energy saving;
+  * adaptive span: heads with span 0 are skipped outright (predication);
+    surviving heads' score/context MACs scale with span/S;
+  * early exit: everything scales with avg_exit_layer / n_layers; the entropy
+    unit adds its (measured-negligible, 0.02-0.78%) latency;
+  * GB peripherals (softmax/LN/entropy): vector ops at `vpu_lanes`/cycle;
+  * memories: per-access energies for SRAM / ReRAM(MLC2) / LPDDR4 DRAM.
+
+All constants are module-level and documented; anchors marked [TableV]/[Fig10]
+/[Fig11] are fitted to the paper's reported numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+CLOCK_HZ = 500e6
+
+# ---- power (mW) anchors at n=16 [TableV] ----
+PU_DATAPATH_MW_N16 = 40.26
+GB_PERIPH_MW = 6.13
+SRAM_MW = 60.67
+RERAM_MW = 3.48
+ALPHA_WIRE = 0.06            # datapath wiring/accumulator overhead growth:
+                             # calibrated so the energy optimum lands at n=16
+                             # (paper Fig. 10: n=32's power subdues its gains)
+
+# ---- area (mm^2) anchors at n=16 [TableV] ----
+PU_AREA_N16 = 0.45
+GB_AREA = 0.41
+SRAM_AREA = 4.10
+RERAM_AREA = 0.15
+
+# ---- memory access energies (pJ/byte), 12nm-class estimates ----
+E_SRAM_PJ_B = 0.8            # large SRAM banks
+E_RERAM_READ_PJ_B = 2.0      # MLC2 ReRAM read
+E_DRAM_PJ_B = 160.0          # LPDDR4 access incl. PHY/controller
+DRAM_LATENCY_S_PER_MB = 3.2e-4   # effective streaming incl. wakeup [Fig11 ~50x]
+RERAM_LATENCY_S_PER_MB = 6.5e-6  # dense parallel read arrays
+# LPDDR4 power-cycle overhead: self-refresh exit + controller/PHY init +
+# activate energy after SoC power-on (DRAMsim3 thermally-aware run in the
+# paper) — the term that makes Fig. 11's energy gap ~4 orders of magnitude
+DRAM_POWERON_ENERGY_J = 0.25     # [Fig11 anchor ~66,000x at 1.94MB]
+
+# ---- mGPU (Jetson TX2) anchors [Fig10: ~163x energy vs n=16 optimized] ----
+MGPU_POWER_W = 7.5
+MGPU_EFF_GFLOPS = 120.0      # effective (not peak) FP16 throughput on BERT-ish
+MGPU_LATENCY_OVERHEAD_S = 2.0e-3  # kernel-launch/serial logic per sentence
+
+VPU_LANES = 8                # GB vector unit effective width
+GB_CONTROL_CYCLES = 30000    # per layer-pass: bitmask encode/decode streaming,
+                             # AXI handshakes, span-register checks — n-independent
+                             # (gives the paper's ~3.5x latency per n-doubling
+                             # instead of an idealized 4x)
+
+
+@dataclass
+class WorkloadStats:
+    """Measured statistics for ONE task inference (from the JAX model)."""
+    matmul_flops: float               # dense encoder matmul FLOPs per layer-pass
+    attention_score_flops: float      # span-affected score+context FLOPs/layer
+    vector_elems: float               # softmax/LN/add elems per layer-pass
+    n_layers: int = 12
+    seq_len: int = 128
+    avg_exit_layer: float = 12.0
+    span_factor: float = 1.0          # fraction of score FLOPs retained (Table I)
+    heads_active_frac: float = 1.0    # fraction of heads with span > 0
+    weight_sparsity: float = 0.0
+    act_sparsity: float = 0.0
+    model_bytes: float = 11e6         # encoder weights resident in SRAM
+    embedding_bytes: float = 1.73e6   # paper's compact multi-task baseline
+
+
+@dataclass
+class AccelReport:
+    latency_s: float
+    energy_j: float
+    breakdown_mw: Dict[str, float]
+    area_mm2: Dict[str, float]
+    entropy_overhead_frac: float
+
+
+def pu_power_mw(n: int) -> float:
+    """Datapath power ~ n^2 * (1 + alpha*n), anchored at n=16 [TableV]."""
+    base = PU_DATAPATH_MW_N16 / (16 ** 2 * (1 + ALPHA_WIRE * 16))
+    return base * n ** 2 * (1 + ALPHA_WIRE * n)
+
+
+def pu_area_mm2(n: int) -> float:
+    return PU_AREA_N16 * (n / 16) ** 2
+
+
+def simulate(
+    stats: WorkloadStats,
+    n: int = 16,
+    *,
+    use_early_exit: bool = True,
+    use_span: bool = True,
+    use_sparsity: bool = True,
+) -> AccelReport:
+    """Latency + energy for one sentence inference."""
+    layers = stats.avg_exit_layer if use_early_exit else stats.n_layers
+
+    # --- per layer-pass compute ---
+    mm_flops = stats.matmul_flops
+    score_flops = stats.attention_score_flops
+    if use_span:
+        score_flops = score_flops * stats.span_factor
+        # QKV/output projections of fully-off heads are skipped too
+        mm_flops = mm_flops * (
+            0.5 + 0.5 * stats.heads_active_frac  # ~half of encoder matmul FLOPs
+        )                                         # are attention projections
+    macs_per_layer = (mm_flops + score_flops) / 2.0
+    matmul_cycles = macs_per_layer / (n ** 2)
+    vector_cycles = stats.vector_elems / VPU_LANES
+    entropy_cycles = (3 * 32 + stats.seq_len) / VPU_LANES  # Eq. 4 on C classes
+    layer_cycles = matmul_cycles + vector_cycles + entropy_cycles + GB_CONTROL_CYCLES
+    total_cycles = layers * layer_cycles
+    latency = total_cycles / CLOCK_HZ
+
+    # --- power/energy ---
+    pu_mw = pu_power_mw(n)
+    # SRAM power scales with the streaming duty cycle (reads per cycle ~ n)
+    sram_mw = SRAM_MW * (0.5 + 0.5 * n / 16)
+    if use_sparsity:
+        # zero-skip gates VMAC energy [§V-C]; bitmask-compressed weights also
+        # skip the SRAM reads of zero entries — scheduling (latency) unchanged
+        nz = (1.0 - stats.weight_sparsity) * (1.0 - 0.3 * stats.act_sparsity)
+        pu_mw_eff = pu_mw * max(nz, 1.0 / 2.6)
+        sram_mw = sram_mw * max(0.4 + 0.6 * (1.0 - stats.weight_sparsity), 1.0 / 2.6)
+    else:
+        pu_mw_eff = pu_mw
+    total_mw = pu_mw_eff + GB_PERIPH_MW + sram_mw + RERAM_MW
+    energy = total_mw * 1e-3 * latency
+
+    return AccelReport(
+        latency_s=latency,
+        energy_j=energy,
+        breakdown_mw={
+            "pu_datapath": pu_mw_eff,
+            "gb_periph": GB_PERIPH_MW,
+            "sram": sram_mw,
+            "reram": RERAM_MW,
+            "total": total_mw,
+        },
+        area_mm2={
+            "pu_datapath": pu_area_mm2(n),
+            "gb_periph": GB_AREA,
+            "sram": SRAM_AREA,
+            "reram": RERAM_AREA,
+            "total": pu_area_mm2(n) + GB_AREA + SRAM_AREA + RERAM_AREA,
+        },
+        entropy_overhead_frac=(layers * entropy_cycles) / total_cycles,
+    )
+
+
+def simulate_mgpu(stats: WorkloadStats, *, use_early_exit=True, use_span=True) -> Dict[str, float]:
+    """Jetson TX2 baseline: same workload, GPU constants; conditional/serial
+    logic (span predication, exit checks) runs on the embedded CPU — modeled
+    as per-layer overhead the accelerator does not pay [§VI-B]."""
+    layers = stats.avg_exit_layer if use_early_exit else stats.n_layers
+    score = stats.attention_score_flops * (stats.span_factor if use_span else 1.0)
+    flops = layers * (stats.matmul_flops + score)
+    latency = flops / (MGPU_EFF_GFLOPS * 1e9) + layers * MGPU_LATENCY_OVERHEAD_S / 12.0
+    energy = MGPU_POWER_W * latency
+    return {"latency_s": latency, "energy_j": energy}
+
+
+def poweron_embedding_cost(embedding_bytes: float, bitmask_bytes: float) -> Dict[str, float]:
+    """Fig. 11: read all embeddings after power-on.
+
+    EdgeBERT: embeddings pre-loaded in integrated ReRAM -> a single ReRAM read.
+    Conventional: DRAM read, SRAM write, then SRAM read (for first use).
+    """
+    total = embedding_bytes + bitmask_bytes
+    envm_latency = total / 1e6 * RERAM_LATENCY_S_PER_MB
+    envm_energy = total * E_RERAM_READ_PJ_B * 1e-12
+    conv_latency = total / 1e6 * DRAM_LATENCY_S_PER_MB
+    # DRAM read + SRAM write + SRAM read + power-cycle overhead
+    conv_energy = (
+        total * (E_DRAM_PJ_B + 2 * E_SRAM_PJ_B) * 1e-12 + DRAM_POWERON_ENERGY_J
+    )
+    return {
+        "envm_latency_s": envm_latency,
+        "envm_energy_j": envm_energy,
+        "conventional_latency_s": conv_latency,
+        "conventional_energy_j": conv_energy,
+        "latency_advantage": conv_latency / envm_latency,
+        "energy_advantage": conv_energy / envm_energy,
+    }
+
+
+def albert_layer_stats(seq_len: int = 128, d: int = 768, ff: int = 3072, heads: int = 12) -> WorkloadStats:
+    """Analytic ALBERT-base encoder layer workload (paper Fig. 8: ~1.9 GFLOP
+    for the 12-layer pass at S=128 => ~158 MFLOP/layer)."""
+    mm = 2 * seq_len * d * (3 * d) + 2 * seq_len * d * d + 2 * seq_len * d * ff * 2
+    score = 2 * 2 * seq_len * seq_len * d
+    vec = seq_len * (2 * d + heads * seq_len + 4 * d)
+    return WorkloadStats(
+        matmul_flops=float(mm),
+        attention_score_flops=float(score),
+        vector_elems=float(vec),
+        seq_len=seq_len,
+    )

@@ -1,0 +1,384 @@
+"""Trip-count-aware HLO analysis for roofline terms.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop (scan) body ONCE,
+ignoring the trip count — useless for layer-scanned transformers (verified:
+a 10-step scan of a matmul reports 1 matmul of FLOPs).  This module parses
+``compiled.as_text()`` structurally instead:
+
+  * each computation's op lines carry their result type (`%n = TYPE op(...)`),
+    giving an SSA name->shape map; call edges (fusion `calls=`, `call`
+    `to_apply=`, `while` body/condition, `conditional` branches) form a DAG;
+  * while trip counts come from the scheduler's
+    ``backend_config={"known_trip_count":{"n":"N"}}`` (canonical for lax.scan /
+    fori_loop), falling back to the loop condition's compare constant;
+  * FLOPs: 2 * prod(result_dims) * prod(lhs_contracting_dims) per dot,
+    accumulated bottom-up with trip multipliers (MXU work only);
+  * HBM bytes: 2x result bytes per compute op (write + downstream read),
+    parameters 1x, bookkeeping ops (tuple/gte/constant/bitcast) free,
+    fusion-internal computations free (fused intermediates stay in registers/
+    VMEM) — the fusion op's own result pays at the call site;
+  * collective bytes: all-reduce 2x result, others 1x, with trip multipliers.
+
+All quantities are per-device (the post-SPMD module is the per-device
+program).  Conditionals take the max over branches.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+# result type is either a flat tuple "(s32[], bf16[..]{..}, ...)" (no nested
+# parens in HLO tuple types) or a single shape; then the op name.
+_OPNAME_RE = re.compile(r"^((?:\([^)=]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([a-z][\w\-]*)\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "constant", "bitcast", "parameter",
+    "after-all", "partition-id", "replica-id", "iota",
+    # copies of while carries are aliased in-place on TPU (donated buffers)
+    "copy", "copy-start", "copy-done",
+}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# ops the TPU backend fuses into neighbours (the CPU HLO we inspect leaves
+# them unfused): layout/dtype/elementwise — no HBM materialization of their own
+_ELEMENTWISE_FREE = {
+    "convert", "transpose", "reshape", "broadcast", "add", "subtract",
+    "multiply", "divide", "maximum", "minimum", "exponential", "log",
+    "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz", "rsqrt",
+    "sqrt", "power", "tanh", "logistic", "select", "compare", "and", "or",
+    "not", "xor", "clamp", "concatenate", "pad", "slice", "rem", "atan2",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "is-finite",
+    "reverse", "gather", "exponential-minus-one", "log-plus-one", "erf",
+    "cbrt", "reduce-window", "sine", "cosine", "tan", "real", "imag",
+}
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x] if s else []
+
+
+def _shape_bytes_all(text: str) -> float:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return float(total)
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)   # ssa name -> type str
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            cur = Computation(name=m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        if cur is None or not s:
+            continue
+        # strip /*index=N*/ comments (they contain '=' and break type parsing)
+        s = re.sub(r"/\*.*?\*/", "", s)
+        cur.lines.append(s)
+        dm = _DEF_RE.match(s)
+        if dm:
+            rest = dm.group(2)
+            om = _OPNAME_RE.match(rest)
+            if om:
+                cur.types[dm.group(1)] = om.group(1)
+            else:
+                # e.g. "%x = f32[1,2]{1,0} parameter(0)" matches; tuples too
+                tm = re.match(r"^(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", rest)
+                if tm:
+                    cur.types[dm.group(1)] = tm.group(1)
+    return comps, entry
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_io: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+    def add(self, other: "HloCosts", mult: float = 1.0, with_bytes: bool = True):
+        self.flops += mult * other.flops
+        if with_bytes:
+            self.bytes_io += mult * other.bytes_io
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + mult * v
+        self.n_while += other.n_while
+        self.max_trip = max(self.max_trip, other.max_trip)
+
+
+def _op_of(line: str) -> Tuple[str, str]:
+    """(op_name, result_type_str) of a def line, or ("", "")."""
+    dm = _DEF_RE.match(line)
+    if not dm:
+        return "", ""
+    rest = dm.group(2)
+    om = _OPNAME_RE.match(rest)
+    if om:
+        return om.group(2), om.group(1)
+    if " parameter(" in rest:
+        return "parameter", rest.split(" parameter(")[0]
+    return "", ""
+
+
+def _operand_bytes(ln: str, comp: Computation, op: str) -> float:
+    """Sum of operand sizes (HBM reads) via the computation's SSA type map."""
+    m = re.search(rf"\b{re.escape(op)}\((.*?)\)[,)]?", ln)
+    seg = m.group(1) if m else ""
+    total = 0.0
+    for name in _OPERANDS_RE.findall(seg):
+        t = comp.types.get(name)
+        if t:
+            total += _shape_bytes_all(t)
+    return total
+
+
+def _fusion_called(comps: Dict[str, Computation]) -> Set[str]:
+    called = set()
+    for comp in comps.values():
+        for ln in comp.lines:
+            if "fusion(" in ln:
+                m = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if m:
+                    called.add(m.group(1))
+    return called
+
+
+_LAYOUT_OPS = None  # computed lazily: _FREE_OPS | _ELEMENTWISE_FREE
+
+
+def _layout_only(comp: Computation) -> bool:
+    """True if a computation contains only layout/elementwise/bookkeeping ops
+    — XLA:CPU wraps single converts/transposes/broadcasts into kLoop fusions
+    ('wrapped_convert' of a whole KV cache etc.); on TPU these fold into the
+    consumer's tiling (MXU reads bf16 natively) and cost no HBM pass."""
+    for ln in comp.lines:
+        op, _ = _op_of(ln)
+        if not op:
+            continue
+        if op not in _FREE_OPS and op not in _ELEMENTWISE_FREE:
+            return False
+    return True
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_computations(text)
+    fused = _fusion_called(comps)
+    layout_only = {name for name, c in comps.items() if _layout_only(c)}
+    tagged = {
+        name
+        for name, c in comps.items()
+        if any("fused_attn_kernel" in l for l in c.lines)
+    }
+    memo: Dict[str, HloCosts] = {}
+
+    def cost_of(name: str, stack=()) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return HloCosts()
+        comp = comps[name]
+        total = HloCosts()
+        in_fusion = name in fused
+        for ln in comp.lines:
+            op, rtype = _op_of(ln)
+            if not op:
+                continue
+            # ops tagged by the fused-attention named_scope live in VMEM in
+            # the real Pallas kernel: FLOPs/collectives count, HBM bytes don't
+            line_fused = in_fusion or ("fused_attn_kernel" in ln)
+
+            # ---------- control flow ----------
+            if op == "while":
+                cond_m = re.search(r"condition=%?([\w\.\-]+)", ln)
+                body_m = re.search(r"body=%?([\w\.\-]+)", ln)
+                tm = _TRIP_RE.search(ln)
+                if tm:
+                    trip = int(tm.group(1))
+                elif cond_m:
+                    cond = comps.get(cond_m.group(1))
+                    trip = 1
+                    if cond:
+                        for cl in cond.lines:
+                            for c in _CONST_RE.findall(cl):
+                                trip = max(trip, int(c))
+                else:
+                    trip = 1
+                total.n_while += 1
+                total.max_trip = max(total.max_trip, trip)
+                if body_m:
+                    total.add(cost_of(body_m.group(1), stack + (name,)), mult=trip)
+                if cond_m:
+                    total.add(cost_of(cond_m.group(1), stack + (name,)), mult=trip)
+                continue
+            if op == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}", ln)
+                names = []
+                if branches:
+                    names = [b.strip().lstrip("%") for b in branches.group(1).split(",")]
+                else:
+                    names = re.findall(r"(?:true_computation|false_computation)=%?([\w\.\-]+)", ln)
+                subs = [cost_of(b, stack + (name,)) for b in names if b]
+                if subs:
+                    best = max(subs, key=lambda c: c.flops + c.bytes_io)
+                    total.add(best)
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if m:
+                    total.add(cost_of(m.group(1), stack + (name,)), with_bytes=False)
+                    # fusion belongs to the fused-kernel scope if its callee
+                    # carries the tag; pure-layout fusions fold on TPU
+                    if m.group(1) in tagged or m.group(1) in layout_only:
+                        line_fused = True
+                if not line_fused:
+                    dm = _DEF_RE.match(ln)
+                    ssa_name = dm.group(1) if dm else ""
+                    opnd = [
+                        _shape_bytes_all(comp.types.get(n, ""))
+                        for n in _OPERANDS_RE.findall(
+                            re.search(r"fusion\(([^)]*)\)", ln).group(1)
+                        )
+                    ] if re.search(r"fusion\(([^)]*)\)", ln) else []
+                    if "dynamic-update-slice" in ssa_name and opnd:
+                        # in-place update (aliased on TPU): pay the update
+                        # slice (everything but the largest operand), not the
+                        # whole buffer
+                        total.bytes_io += 2.0 * (sum(opnd) - max(opnd))
+                    elif sum(opnd) < 1024 and "broadcast" in ssa_name:
+                        # zero-init of an aliased output buffer: elided
+                        pass
+                    else:
+                        # materialization point: result write + downstream read
+                        total.bytes_io += 2.0 * _shape_bytes_all(rtype)
+                continue
+            if op in ("call", "custom-call", "map", "reduce", "sort", "scatter"):
+                for ref in re.findall(r"(?:to_apply|called_computations?)=\{?%?([\w\.\-]+)\}?", ln):
+                    total.add(cost_of(ref, stack + (name,)))
+                if not line_fused and op != "call":
+                    total.bytes_io += 2.0 * _shape_bytes_all(rtype)
+                continue
+
+            # ---------- collectives ----------
+            matched_coll = None
+            for coll in _COLL_OPS:
+                if op == coll or op == coll + "-start":
+                    matched_coll = coll
+                    break
+                if op == coll + "-done":
+                    matched_coll = "skip"
+                    break
+            if matched_coll == "skip":
+                continue
+            if matched_coll:
+                size = _shape_bytes_all(rtype)
+                w = 2.0 if matched_coll == "all-reduce" else 1.0
+                total.coll_bytes += w * size
+                total.coll_by_kind[matched_coll] = (
+                    total.coll_by_kind.get(matched_coll, 0.0) + w * size
+                )
+                if not line_fused:
+                    total.bytes_io += 2.0 * size
+                continue
+
+            # ---------- dot ----------
+            if op == "dot":
+                res_dims: List[int] = []
+                sm = _SHAPE_RE.search(rtype)
+                if sm:
+                    res_dims = _dims(sm.group(2))
+                flops = 2.0
+                for d in res_dims:
+                    flops *= d
+                cm = _CONTRACT_RE.search(ln)
+                lhs_dims: List[int] = []
+                ops_m = re.search(r"dot\(([^)]*)\)", ln)
+                if ops_m:
+                    operand_names = _OPERANDS_RE.findall(ops_m.group(1))
+                    if operand_names:
+                        lhs_t = comp.types.get(operand_names[0], "")
+                        lm = _SHAPE_RE.search(lhs_t)
+                        if lm:
+                            lhs_dims = _dims(lm.group(2))
+                if cm and lhs_dims:
+                    for i in _dims(cm.group(1)):
+                        if i < len(lhs_dims):
+                            flops *= lhs_dims[i]
+                total.flops += flops
+                if not line_fused:
+                    total.bytes_io += 2.0 * _shape_bytes_all(rtype)
+                continue
+
+            # ---------- in-place update: pays the update column only ----------
+            if op in ("dynamic-update-slice",):
+                if not line_fused:
+                    ops_m = re.search(r"dynamic-update-slice\(([^)]*)\)", ln)
+                    upd = 0.0
+                    if ops_m:
+                        names = _OPERANDS_RE.findall(ops_m.group(1))
+                        if len(names) >= 2:
+                            upd = _shape_bytes_all(comp.types.get(names[1], ""))
+                    total.bytes_io += 2.0 * upd
+                continue
+
+            # ---------- everything else ----------
+            if op in _FREE_OPS:
+                if op == "parameter" and not line_fused and name == entry:
+                    total.bytes_io += _shape_bytes_all(rtype)
+                continue
+            if op == "dynamic-slice":
+                # a read materialization (weight/cache slice out of a stack)
+                if not line_fused:
+                    total.bytes_io += _shape_bytes_all(rtype)
+                continue
+            if op in _ELEMENTWISE_FREE:
+                continue  # fused into neighbours on TPU
+            if not line_fused:
+                total.bytes_io += 2.0 * _shape_bytes_all(rtype)
+
+        memo[name] = total
+        return total
+
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: len(comps[n].lines))
+    if entry is None:
+        return HloCosts()
+    return cost_of(entry)

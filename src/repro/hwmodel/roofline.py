@@ -1,0 +1,158 @@
+"""TPU v5e three-term roofline from compiled dry-run artifacts.
+
+    compute term    = FLOPs_per_device / peak_FLOP/s
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+The post-SPMD HLO module IS the per-device program, so ``cost_analysis()``
+FLOPs/bytes and the collective operand sizes parsed from ``as_text()`` are
+per-device quantities; dividing by per-chip peaks gives seconds directly
+(algebraically identical to the global-quantities/(chips x peak) form).
+
+all-reduce traffic is weighted 2x (ring reduce-scatter + all-gather phases);
+all-gather / reduce-scatter / all-to-all 1x of the LARGER (unsharded) side;
+collective-permute 1x.  (n-1)/n ring factors are folded to 1.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float
+    hbm_bw: float
+    link_bw: float
+    hbm_bytes: float
+
+
+TPUV5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16 * 1024**3,
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\("
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by op kind (weighted: see module doc)."""
+    out = {
+        "all-reduce": 0.0,
+        "all-gather": 0.0,
+        "reduce-scatter": 0.0,
+        "all-to-all": 0.0,
+        "collective-permute": 0.0,
+    }
+    counts = {k: 0 for k in out}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        # skip -done ops (the -start carries the shape; avoid double count)
+        if m.group("suffix") == "-done":
+            continue
+        size = _shape_bytes(m.group("type"))
+        weight = 2.0 if op == "all-reduce" else 1.0
+        out[op] += weight * size
+        counts[op] += 1
+    total = sum(out.values())
+    res = {f"bytes_{k}": v for k, v in out.items()}
+    res.update({f"count_{k}": float(v) for k, v in counts.items()})
+    res["bytes_total"] = total
+    return res
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str) -> float:
+    """Useful-model FLOPs: 6ND train, 2ND forward/prefill/decode-token."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * n_tokens
+
+
+def roofline_report(
+    *,
+    hlo_flops_per_device: float,
+    hlo_bytes_per_device: float,
+    collective_bytes_per_device: float,
+    n_chips: int,
+    model_flops_global: float,
+    useful_bytes_per_device: float = 0.0,
+    chip: ChipSpec = TPUV5E,
+) -> Dict[str, float]:
+    """Three roofline terms + efficiency of the DOMINANT term.
+
+    roofline_fraction = (time the dominant resource would need for the
+    *useful* work) / (time it needs for the work the compiled program actually
+    does).  For compute-bound cells that is model_FLOPs/HLO_FLOPs; for
+    memory-bound cells it is useful_bytes/HLO_bytes (useful bytes = params
+    read once + mandatory state I/O, supplied by the caller); for collective-
+    bound cells we report useful-flops-time/bound (no collective is "useful"
+    in the 6ND sense).
+    """
+    t_compute = hlo_flops_per_device / chip.peak_flops_bf16
+    t_memory = hlo_bytes_per_device / chip.hbm_bw
+    t_coll = collective_bytes_per_device / chip.link_bw
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_compute, t_memory, t_coll)
+    hlo_flops_global = hlo_flops_per_device * n_chips
+    useful_flops_ratio = (
+        model_flops_global / hlo_flops_global if hlo_flops_global else 0.0
+    )
+    memory_efficiency = (
+        useful_bytes_per_device / hlo_bytes_per_device if hlo_bytes_per_device else 0.0
+    )
+    if dominant == "compute":
+        frac = useful_flops_ratio
+    elif dominant == "memory":
+        frac = memory_efficiency
+    else:
+        frac = (
+            (model_flops_global / (n_chips * chip.peak_flops_bf16)) / bound
+            if bound > 0 else 0.0
+        )
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful_flops_ratio,
+        "memory_efficiency": memory_efficiency,
+        "roofline_fraction": frac,
+        "n_chips": n_chips,
+    }

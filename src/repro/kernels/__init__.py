@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for EdgeBERT hot paths + jnp oracles.
+
+Kernels (each <name>.py with pl.pallas_call + BlockSpec, validated in
+interpret mode against ref.py):
+  span_attention   — windowed flash attention with per-head span predication
+  adaptivfloat_k   — AF quantize + AF8-weight matmul (8b mult / 32b acc)
+  block_sparse     — CSR-of-blocks sparse matmul (pruning tile skip)
+  softmax_entropy  — fused Algorithm-1 softmax + Eq.-4 entropy
+  layernorm        — fused two-moment LayerNorm (Eq. 5)
+"""
+from repro.kernels import ref

@@ -1,0 +1,115 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU the same code emits
+Mosaic.  `span_attention_op` implements the full EdgeBERT deploy path: dead
+heads (span 0) are gathered out of the graph, survivors run the windowed
+kernel bucketed by span.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptivfloat import AFFormat
+from repro.core.adaptive_span import active_head_indices
+from repro.kernels import adaptivfloat_k, block_sparse, layernorm, softmax_entropy, span_attention
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-6):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = layernorm.layernorm(x2, gamma, beta, eps=eps, interpret=_interpret())
+    return out.reshape(shape)
+
+
+@jax.jit
+def softmax_entropy_op(logits: jnp.ndarray, mask: Optional[jnp.ndarray] = None):
+    shape = logits.shape
+    x2 = logits.reshape(-1, shape[-1])
+    if mask is None:
+        mask = jnp.ones_like(x2)
+    else:
+        mask = mask.reshape(-1, shape[-1])
+    p, h = softmax_entropy.softmax_entropy(x2, mask, interpret=_interpret())
+    return p.reshape(shape), h.reshape(shape[:-1])
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "n_exp"))
+def af_quantize_op(x: jnp.ndarray, n_bits: int = 8, n_exp: int = 3):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    out = adaptivfloat_k.quantize(x2, fmt=AFFormat(n_bits, n_exp), interpret=_interpret())
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "n_exp"))
+def af_matmul_op(x: jnp.ndarray, w_codes: jnp.ndarray, e_min: jnp.ndarray,
+                 n_bits: int = 8, n_exp: int = 3):
+    return adaptivfloat_k.af_matmul(
+        x, w_codes, e_min, fmt=AFFormat(n_bits, n_exp), interpret=_interpret()
+    )
+
+
+def block_sparse_matmul_op(x, w, block_mask, bk: int = 128, bn: int = 128):
+    """block_mask must be a STATIC numpy occupancy array (deploy-time masks)."""
+    return block_sparse.block_sparse_matmul(
+        x, w, np.asarray(block_mask), bk=bk, bn=bn, interpret=_interpret()
+    )
+
+
+def span_attention_op(
+    q: jnp.ndarray,            # [B, S, H, dh]
+    k: jnp.ndarray,            # [B, S, KV, dh]
+    v: jnp.ndarray,            # [B, S, KV, dh]
+    spans: Sequence[int],      # STATIC per-head integer spans (len H; 0 = off)
+    *,
+    causal: bool,
+    bq: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """EdgeBERT deployed attention: dead heads skipped, survivors windowed.
+
+    Returns [B, S, H, dh] with zero context vectors for span-0 heads (the
+    accelerator writes zeros to the UAB for those heads, §V-D1).
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    spans_np = np.asarray(spans, np.int32)
+    active, window = active_head_indices(spans_np)
+    if len(active) == 0:
+        return jnp.zeros_like(q)
+
+    # gather active heads; expand K/V per head (XLA fuses the gather)
+    qh = q.transpose(0, 2, 1, 3)[:, active]                   # [B, Ha, S, dh]
+    kv_idx = (active // G).astype(np.int32)
+    kh = k.transpose(0, 2, 1, 3)[:, kv_idx]
+    vh = v.transpose(0, 2, 1, 3)[:, kv_idx]
+    Ha = len(active)
+    sp = jnp.asarray(np.tile(spans_np[active], B))
+
+    out = span_attention.span_attention(
+        qh.reshape(B * Ha, Sq, dh),
+        kh.reshape(B * Ha, -1, dh),
+        vh.reshape(B * Ha, -1, dh),
+        sp,
+        int(window),
+        causal=causal,
+        bq=bq,
+        bk=bk,
+        interpret=_interpret(),
+    ).reshape(B, Ha, Sq, dh)
+
+    full = jnp.zeros((B, H, Sq, dh), q.dtype)
+    full = full.at[:, active].set(out)
+    return full.transpose(0, 2, 1, 3)

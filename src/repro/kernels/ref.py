@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel (the `assert_allclose` targets).
+
+These are the semantics contracts: each kernel in this package must match its
+oracle bit-for-bit up to float tolerance across the tested shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptivfloat import AFFormat, af_decode, af_quantize
+from repro.core.entropy import entropy_from_logits
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (paper Eq. 5, E[X^2]-E[X]^2 form)
+# ---------------------------------------------------------------------------
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True) - mean * mean
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused masked softmax + entropy (paper Algorithm 1 + Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def softmax_entropy(
+    logits: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row softmax (optionally span-mask-modulated post-softmax, as the GB
+    unit does) and the entropy of the *unmasked* distribution."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    z = x - m
+    e = jnp.exp(z)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / s
+    ent = jnp.log(s[..., 0]) - jnp.sum(z * e, axis=-1) / s[..., 0]
+    if mask is not None:
+        probs = probs * mask.astype(jnp.float32)
+    return probs.astype(logits.dtype), jnp.maximum(ent, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# AdaptivFloat quantize-dequantize (per-tensor bias)
+# ---------------------------------------------------------------------------
+
+
+def adaptivfloat_quantize(x: jnp.ndarray, fmt: AFFormat = AFFormat()) -> jnp.ndarray:
+    return af_quantize(x, fmt)
+
+
+# ---------------------------------------------------------------------------
+# AF8 weight-dequant matmul (paper PU: 8b multiply, 32b accumulate)
+# ---------------------------------------------------------------------------
+
+
+def af_matmul(
+    x: jnp.ndarray,            # [M, K] float
+    w_codes: jnp.ndarray,      # [K, N] uint8 AF codes
+    e_min: jnp.ndarray,        # scalar int32
+    fmt: AFFormat = AFFormat(),
+) -> jnp.ndarray:
+    w = af_decode(w_codes, e_min, fmt, dtype=jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse matmul (pruned weights; occupancy at tile granularity)
+# ---------------------------------------------------------------------------
+
+
+def block_sparse_matmul(
+    x: jnp.ndarray,            # [M, K]
+    w: jnp.ndarray,            # [K, N] (already zero outside occupied blocks)
+    block_mask: jnp.ndarray,   # [K//bk, N//bn] bool occupancy
+    bk: int,
+    bn: int,
+) -> jnp.ndarray:
+    Kb, Nb = block_mask.shape
+    mask = jnp.repeat(jnp.repeat(block_mask, bk, axis=0), bn, axis=1)
+    w_masked = w * mask[: w.shape[0], : w.shape[1]].astype(w.dtype)
+    return (x.astype(jnp.float32) @ w_masked.astype(jnp.float32)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Span-windowed flash attention (hard integer spans, deploy mode)
+# ---------------------------------------------------------------------------
+
+
+def span_attention(
+    q: jnp.ndarray,            # [B, H, Sq, dh]
+    k: jnp.ndarray,            # [B, KV, Sk, dh]
+    v: jnp.ndarray,            # [B, KV, Sk, dh]
+    spans: jnp.ndarray,        # [H] int32; 0 = head fully off
+    *,
+    causal: bool,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, H, Sq, dh = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kk.astype(jnp.float32))
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[2])[None, :]
+    d = qi - kj
+    if not causal:
+        d = jnp.abs(d)
+    # within span: 0 <= d < span  (d<0 future keys masked when causal)
+    sp = spans[:, None, None].astype(jnp.int32)
+    ok = (d[None] < sp) & (d[None] >= 0 if causal else jnp.ones_like(d[None], bool))
+    if not causal:
+        ok = d[None] < sp
+    s = jnp.where(ok[None], s, -jnp.inf)
+    # rows with no valid key (span 0) -> zero output
+    row_any = jnp.any(ok, axis=-1)  # [H, Sq]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-20), vv.astype(jnp.float32))
+    o = jnp.where(row_any[None, :, :, None], o, 0.0)
+    return o.astype(q.dtype)

@@ -1,0 +1,478 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory/cost analysis and the
+three-term roofline (DESIGN.md §7).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen1_5_110b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # orchestrates subprocesses
+    python -m repro.launch.dryrun --all --mesh multi
+
+Results append to benchmarks/results/dryrun.json (one record per cell),
+which EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/bench_roofline.py
+read back.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.util import human_bytes, logger
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    shape_applicable,
+)
+from repro.data.synthetic import make_batch_specs
+from repro.hwmodel.roofline import (
+    TPUV5E,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_report,
+)
+from repro.hwmodel.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model, build_model
+from repro.sharding.rules import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    rules_for,
+)
+from repro.sharding.zero1 import zero1_opt_shardings
+from repro.training.optim import AdamWConfig, adamw_init
+from repro.training.train_loop import make_loss_fn
+from repro.training.optim import adamw_update
+
+RESULTS_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))),
+    "benchmarks", "results", "dryrun.json",
+)
+
+
+def _abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "shape")))
+
+
+def _active_param_count(cfg: ModelConfig, params_abs) -> int:
+    """Exact param count scaled for MoE activation (top_k/n_experts on expert
+    leaves) — the N in 6ND."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+        if not hasattr(leaf, "shape"):
+            continue
+        n = int(np.prod(leaf.shape))
+        pstr = jax.tree_util.keystr(path)
+        if "embed" in pstr and "proj" not in pstr:
+            continue  # embeddings excluded from 6ND (lookup, not matmul)
+        if cfg.family == "moe" and "/moe'" in pstr.replace('"', "'") or (
+            cfg.family == "moe" and "moe" in pstr and "w_" in pstr and "shared" not in pstr
+        ):
+            n = int(n * cfg.top_k / max(cfg.n_experts, 1))
+        if cfg.shared_layers and "'layer'" in pstr:
+            n = n * cfg.n_layers
+        total += n
+    return total
+
+
+def _useful_bytes_per_device(cfg, shape, params_abs, n_chips: int) -> float:
+    """Minimum mandatory HBM traffic per device per step: every resident
+    param shard read once (+written once with moments for train: x4 for
+    bf16 p+g and fp32 m+v r/w approximation), plus decode KV/state I/O."""
+    from repro.common.util import tree_size_bytes
+
+    params_bytes = tree_size_bytes(params_abs) / n_chips
+    if shape.kind == "train":
+        # read p, write p, read+write m,v (fp32 = 2x bf16), read g
+        useful = params_bytes * (1 + 1 + 1 + 4 * 2)
+    elif shape.kind == "prefill":
+        tokens_local = shape.global_batch * shape.seq_len / n_chips
+        act = tokens_local * cfg.d_model * 2 * cfg.n_layers  # one r/w per layer
+        useful = params_bytes + act
+    else:  # decode: params + full KV/state read + one-column write
+        kv_b = 1 if cfg.kv_cache_dtype == "af8" else 2
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            kv = (
+                2 * cfg.n_layers * shape.global_batch * shape.seq_len
+                * cfg.n_kv_heads * cfg.head_dim * kv_b
+            ) / n_chips
+        elif cfg.family == "hybrid":
+            n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+            kv = (
+                2 * n_attn * shape.global_batch * shape.seq_len
+                * cfg.n_kv_heads * cfg.head_dim * kv_b
+            ) / n_chips
+            kv += (
+                cfg.n_layers * shape.global_batch
+                * (2 * cfg.d_model // cfg.ssm_head_dim) * cfg.ssm_head_dim
+                * cfg.ssm_state * 2 * 2
+            ) / n_chips
+        else:  # ssm
+            kv = (
+                cfg.n_layers * shape.global_batch * cfg.n_heads
+                * cfg.head_dim * cfg.head_dim * 4 * 2
+            ) / n_chips
+        useful = params_bytes + kv
+    return float(useful)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, microbatches: int = 8):
+    """Returns (jitted_fn, example_args_abstract) for this cell's step.
+
+    Training uses `microbatches`-way gradient accumulation (activation memory
+    scales down by the same factor; recorded in the dry-run record)."""
+    model = build_model(cfg)
+    rules = rules_for(cfg, mesh, shape)
+    params_abs = _abstract_params(model)
+    p_shard = param_shardings(params_abs, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        loss_fn = make_loss_fn(model)
+        k = microbatches
+
+        def train_step(params, opt_state, batch):
+            if k > 1:
+                mb = jax.tree_util.tree_map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+                )
+
+                def micro(acc, b):
+                    (loss, metrics), grads = jax.value_and_grad(
+                        lambda p: loss_fn(p, b), has_aux=True
+                    )(params)
+                    acc = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32), acc, grads
+                    )
+                    return acc, loss
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, losses = jax.lax.scan(micro, zeros, mb)
+                grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+                loss = jnp.mean(losses)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, batch), has_aux=True
+                )(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, loss
+
+        opt_abs = _abstract(adamw_init, params_abs)
+        o_shard = zero1_opt_shardings(opt_abs, p_shard, mesh)
+        batch_abs = make_batch_specs(cfg, shape)
+        b_shard = batch_shardings(batch_abs, mesh, rules)
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        args = (params_abs, opt_abs, batch_abs)
+        n_tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        cache_abs = _abstract(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        c_shard = cache_shardings(cache_abs, mesh, rules, cfg)
+        batch_abs = make_batch_specs(cfg, shape)
+        b_shard = batch_shardings(batch_abs, mesh, rules)
+
+        aux_keys = [k for k in batch_abs if k not in ("tokens",)]
+
+        def prefill_fn(params, tokens, cache, aux):
+            return model.prefill(params, tokens, cache, aux=aux)
+
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(
+                p_shard,
+                b_shard["tokens"],
+                c_shard,
+                {k: b_shard[k] for k in aux_keys},
+            ),
+            out_shardings=(NamedSharding(mesh, P()), c_shard),
+            donate_argnums=(2,),
+        )
+        args = (
+            params_abs,
+            batch_abs["tokens"],
+            cache_abs,
+            {k: batch_abs[k] for k in aux_keys},
+        )
+        n_tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        cache_abs = _abstract(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        c_shard = cache_shardings(cache_abs, mesh, rules, cfg)
+        tokens_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        tok_shard = batch_shardings({"tokens": tokens_abs}, mesh, rules)["tokens"]
+        # batch-1 long-context: tokens replicated, KV seq sharded instead
+        cb = rules.mesh_axis("cache_batch")
+        if cb is None:
+            tok_shard = NamedSharding(mesh, P())
+        logits_shard = tok_shard
+
+        def decode_fn(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos)
+
+        fn = jax.jit(
+            decode_fn,
+            in_shardings=(p_shard, c_shard, tok_shard, NamedSharding(mesh, P())),
+            out_shardings=(logits_shard, c_shard),
+            donate_argnums=(1,),
+        )
+        args = (params_abs, cache_abs, tokens_abs, pos_abs)
+        n_tokens = shape.global_batch  # one token per sequence per step
+    return fn, args, params_abs, n_tokens
+
+
+VARIANT_FLAGS = {
+    # beyond-paper optimization stacks for §Perf hillclimbing
+    "fused": dict(fused_attention=True),
+    "sp": dict(sequence_parallel=True),
+    "fused+sp": dict(fused_attention=True, sequence_parallel=True),
+    "af8kv": dict(kv_cache_dtype="af8"),
+    "fused+af8kv": dict(fused_attention=True, kv_cache_dtype="af8"),
+    "moegroup": dict(moe_grouped_dispatch=True),
+    "fused+moegroup": dict(fused_attention=True, moe_grouped_dispatch=True),
+    "moegroup2": dict(moe_grouped_dispatch=True, moe_buffer_sharded=True),
+    "fused+moegroup2": dict(
+        fused_attention=True, moe_grouped_dispatch=True, moe_buffer_sharded=True
+    ),
+    "moeshmap": dict(moe_shardmap_dispatch=True),
+    "fused+moeshmap": dict(fused_attention=True, moe_shardmap_dispatch=True),
+    "fused+sp+moegroup": dict(
+        fused_attention=True, sequence_parallel=True, moe_grouped_dispatch=True
+    ),
+    "ssmrep": dict(ssm_replicated=True),
+    "fused+ssmrep": dict(fused_attention=True, ssm_replicated=True),
+    "hybridgroup": dict(hybrid_grouped=True),
+    "fused+hybridgroup": dict(fused_attention=True, hybrid_grouped=True),
+    "opt": dict(
+        fused_attention=True, sequence_parallel=True,
+        moe_grouped_dispatch=True,
+    ),
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 8,
+             variant: str = "baseline") -> Dict[str, Any]:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if variant != "baseline":
+        over = dict(VARIANT_FLAGS[variant])
+        if over.get("sequence_parallel"):
+            over["sp_batch_axes"] = ("pod", "data") if multi_pod else ("data",)
+        cfg = dataclasses.replace(cfg, **over)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": variant,
+        "time": time.time(),
+    }
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = (
+            "long_500k reserved for sub-quadratic families (ssm/hybrid); "
+            f"{cfg.family} is full-attention — see DESIGN.md §4"
+        )
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    fn, args, params_abs, n_tokens = build_cell(cfg, shape, mesh, microbatches=microbatches)
+    rec["microbatches"] = microbatches if shape.kind == "train" else 1
+    with jax.set_mesh(mesh):  # set_mesh (not `with mesh:`) so shard_map
+        # regions (moeshmap variant) see the abstract mesh
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # ---- memory analysis ----
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+        if not rec["memory_analysis"]:
+            rec["memory_analysis"] = {"repr": str(ma)[:2000]}
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis"] = {"error": str(e)[:200]}
+
+    # ---- cost analysis (recorded for cross-check only: XLA counts scan
+    # bodies ONCE, ignoring trip counts — see hwmodel/hlo_analysis.py) ----
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0))),
+            "caveat": "scan bodies counted once; roofline uses hlo_analysis",
+        }
+    except Exception as e:
+        rec["cost_analysis"] = {"error": str(e)[:200]}
+
+    # ---- trip-count-aware HLO analysis (primary roofline source) ----
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    costs = hlo_analyze(hlo)
+    flops = costs.flops
+    bytes_accessed = costs.bytes_io
+    coll = {
+        "bytes_total": costs.coll_bytes,
+        **{f"bytes_{k}": v for k, v in costs.coll_by_kind.items()},
+        "n_while": costs.n_while,
+        "max_trip": costs.max_trip,
+    }
+    rec["hlo_analysis"] = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": costs.coll_bytes,
+    }
+    rec["collectives"] = coll
+
+    # ---- roofline ----
+    n_active = _active_param_count(cfg, params_abs)
+    mf = model_flops(n_active, n_tokens, shape.kind)
+    rec["n_params"] = _count_params(params_abs)
+    rec["n_params_active"] = n_active
+    rec["roofline"] = roofline_report(
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=coll["bytes_total"],
+        n_chips=n_chips,
+        model_flops_global=mf,
+        useful_bytes_per_device=_useful_bytes_per_device(
+            cfg, shape, params_abs, n_chips
+        ),
+    )
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    return rec
+
+
+def append_result(rec: Dict[str, Any], path: str = RESULTS_PATH):
+    import fcntl
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    lock_path = path + ".lock"
+    with open(lock_path, "w") as lock:
+        fcntl.flock(lock, fcntl.LOCK_EX)   # concurrent sweeps are safe
+        results = []
+        if os.path.exists(path):
+            with open(path) as f:
+                results = json.load(f)
+        # replace same-key record
+        key = (rec["arch"], rec["shape"], rec["mesh"], rec.get("variant", "baseline"))
+        results = [
+            r for r in results
+            if (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline")) != key
+        ]
+        results.append(rec)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(results, f, indent=1)
+        os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline"] + list(VARIANT_FLAGS))
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES_BY_NAME:
+                for mesh in meshes:
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape, "--mesh", mesh,
+                        "--microbatches", str(args.microbatches),
+                    ]
+                    print(f"=== {arch} x {shape} x {mesh} ===", flush=True)
+                    r = subprocess.run(cmd, timeout=args.timeout)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mesh))
+        print("FAILURES:", failures if failures else "none")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    for mesh in meshes:
+        try:
+            rec = run_cell(args.arch, args.shape, multi_pod=(mesh == "multi"),
+                           microbatches=args.microbatches, variant=args.variant)
+        except Exception as e:
+            rec = {
+                "arch": args.arch, "shape": args.shape, "mesh": mesh,
+                "variant": args.variant,
+                "status": "error", "error": str(e)[:500],
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        append_result(rec)
+        status = rec["status"]
+        if status == "ok":
+            rl = rec["roofline"]
+            print(
+                f"{args.arch} {args.shape} {mesh} [{args.variant}]: OK "
+                f"compile={rec['compile_s']}s dominant={rl['dominant']} "
+                f"t=({rl['t_compute_s']:.3e},{rl['t_memory_s']:.3e},{rl['t_collective_s']:.3e})s "
+                f"useful={rl['useful_flops_ratio']:.2f} roofline={rl['roofline_fraction']:.3f}"
+            )
+        else:
+            print(f"{args.arch} {args.shape} {mesh}: {status} {rec.get('reason', rec.get('error',''))}")
+            if status == "error":
+                print(rec.get("traceback", ""))
+                sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax use
+and only then calls ``make_production_mesh``.
+
+Single pod:  (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+The ``pod`` axis is the slowest (DCN-connected) dimension: only data-parallel
+gradient all-reduces cross it (and batch sharding for inference shapes), which
+is the correct hierarchy for 1000+ node scale — model/expert collectives stay
+inside a pod's ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires forced host device count >= n*m)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,212 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel formulation.
+
+Recurrence per head h with state S_t in R^{P x N} (P=head dim, N=ssm_state):
+
+    S_t = exp(a_h * dt_t) * S_{t-1} + dt_t * x_t B_t^T
+    y_t = S_t^T-contract:  y_t = C_t @ S_t^T ... (y_t[p] = sum_n S_t[p,n] C_t[n])
+    out = y + D * x
+
+The chunked algorithm (Mamba2 paper §6) splits the sequence into chunks of
+length Q: intra-chunk contributions via a masked [Q, Q] decay matrix (dual
+"linear attention" form) and inter-chunk via a state carried between chunks
+with a `lax.scan`.  The scan-free intra-chunk math is MXU-friendly; this jnp
+implementation is the oracle for a potential Pallas port and is exact vs the
+step-by-step recurrence (tested).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+CONV_K = 4  # depthwise causal conv width (mamba default)
+
+
+def d_inner(cfg) -> int:
+    return 2 * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba2(rng, cfg, dtype) -> Params:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    H = n_ssm_heads(cfg)
+    N = cfg.ssm_state
+    ks = jax.random.split(rng, 6)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, di + 2 * N), dtype, scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "w_out": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _ssd_chunked(
+    x: jnp.ndarray,    # [B, S, H, P]
+    dt: jnp.ndarray,   # [B, S, H]  (softplus'd, > 0)
+    a: jnp.ndarray,    # [H]        (negative decay rates)
+    Bm: jnp.ndarray,   # [B, S, N]
+    Cm: jnp.ndarray,   # [B, S, N]
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    Q = chunk
+
+    xs = x.reshape(B, nc, Q, H, P)
+    dts = dt.reshape(B, nc, Q, H)
+    Bs = Bm.reshape(B, nc, Q, N)
+    Cs = Cm.reshape(B, nc, Q, N)
+
+    # log-decay per step: da[b,c,q,h] = a[h] * dt
+    da = a[None, None, None, :] * dts                      # <= 0
+    cum = jnp.cumsum(da, axis=2)                           # within-chunk cumulative
+    chunk_total = cum[:, :, -1, :]                         # [B, nc, H]
+
+    # intra-chunk: y_intra[q] = sum_{s<=q} C_q.B_s * exp(cum_q - cum_s) * dt_s * x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nc,Q(q),Q(s),H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cs, Bs)             # [B,nc,Q,Q]
+    w = cb[..., None] * decay * dts[:, :, None, :, :]      # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w, xs)
+
+    # chunk-end states: S_c = sum_s exp(cum_Q - cum_s) * dt_s * x_s B_s^T
+    state_decay = jnp.exp(chunk_total[:, :, None, :] - cum)        # [B,nc,Q,H]
+    su = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", state_decay * dts, xs, Bs)
+
+    # inter-chunk scan over nc
+    def scan_fn(prev, inp):
+        su_c, tot_c = inp                                   # [B,H,P,N], [B,H]
+        new = prev * jnp.exp(tot_c)[:, :, None, None] + su_c
+        return new, prev                                    # emit state BEFORE chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn,
+        init_state.astype(jnp.float32),
+        (su.transpose(1, 0, 2, 3, 4).astype(jnp.float32), chunk_total.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_inter[q] = C_q @ (exp(cum_q) * S_prev)^T
+    inter_decay = jnp.exp(cum)                               # [B,nc,Q,H]
+    y_inter = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Cs, prev_states.astype(jnp.float32), inter_decay
+    )
+
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def _ssd_step(
+    state: jnp.ndarray,  # [B, H, P, N]
+    x: jnp.ndarray,      # [B, H, P]
+    dt: jnp.ndarray,     # [B, H]
+    a: jnp.ndarray,      # [H]
+    Bm: jnp.ndarray,     # [B, N]
+    Cm: jnp.ndarray,     # [B, N]
+):
+    """Single-token recurrent step (decode)."""
+    decay = jnp.exp(a[None, :] * dt)                        # [B, H]
+    state = state * decay[:, :, None, None] + (
+        (dt[:, :, None] * x)[..., None] * Bm[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    return state, y
+
+
+def apply_mamba2(
+    p: Params,
+    u: jnp.ndarray,        # [B, S, d]
+    cfg,
+    *,
+    conv_state: Optional[jnp.ndarray] = None,  # [B, CONV_K-1, di+2N] (decode)
+    ssm_state: Optional[jnp.ndarray] = None,   # [B, H, P, N] (decode)
+    decode: bool = False,
+):
+    """Returns (out [B,S,d], (new_conv_state, new_ssm_state))."""
+    B, S, d = u.shape
+    di = d_inner(cfg)
+    H = n_ssm_heads(cfg)
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+
+    proj = u @ p["w_in"]
+    # split: z [0:di] | xbc [di : 2di+2N] | dt [2di+2N :]
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * N]
+    dt_raw = proj[..., 2 * di + 2 * N :]
+
+    # depthwise causal conv over xbc
+    if decode:
+        assert conv_state is not None
+        window = jnp.concatenate([conv_state, xbc], axis=1)      # [B, K-1+S, di+2N]
+        new_conv_state = window[:, -(CONV_K - 1) :, :]
+        conv_in = window
+    else:
+        conv_in = jnp.pad(xbc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+        new_conv_state = xbc[:, -(CONV_K - 1) :, :] if S >= CONV_K - 1 else None
+    # conv: out[t] = sum_k w[k] * in[t + k]  (causal window ending at t)
+    cw = p["conv_w"].astype(jnp.float32)
+    conv_out = sum(
+        conv_in[:, k : k + (conv_in.shape[1] - CONV_K + 1), :].astype(jnp.float32) * cw[k]
+        for k in range(CONV_K)
+    )
+    conv_out = jax.nn.silu(conv_out).astype(u.dtype)
+
+    x_part = conv_out[..., :di].reshape(B, -1, H, P)
+    Bm = conv_out[..., di : di + N]
+    Cm = conv_out[..., di + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if decode and S == 1:
+        assert ssm_state is not None
+        new_state, y = _ssd_step(
+            ssm_state.astype(jnp.float32),
+            x_part[:, 0].astype(jnp.float32),
+            dt[:, 0],
+            a,
+            Bm[:, 0].astype(jnp.float32),
+            Cm[:, 0].astype(jnp.float32),
+        )
+        y = y[:, None]
+    else:
+        y, new_state = _ssd_chunked(
+            x_part.astype(jnp.float32),
+            dt,
+            a,
+            Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32),
+            cfg.ssm_chunk,
+            init_state=ssm_state,
+        )
+
+    y = y + p["d_skip"][None, None, :, None] * x_part.astype(jnp.float32)
+    y = y.reshape(B, -1, di).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    out = y @ p["w_out"]
+    return out, (new_conv_state, new_state.astype(u.dtype) if new_state is not None else None)

@@ -1,0 +1,216 @@
+"""RWKV6 "Finch" block — attention-free time-mix with data-dependent decay.
+
+Per head (k-dim = v-dim = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state in R^{K x V})
+    y_t = ((S_{t-1} + diag(u) k_t v_t^T)^T r_t)
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0, 1) — the *data-dependent decay*
+that distinguishes RWKV6 from RWKV5.  Token-shift lerps use data-dependent
+mixing coefficients (low-rank).  We implement an exact recurrent scan
+(oracle, decode path) and a chunked parallel form used for training/prefill;
+their equivalence is property-tested.
+
+Adaptive attention span is INAPPLICABLE here (no attention heads) — the decay
+w_t is the native span analogue; see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+LORA_R = 32
+
+
+def init_rwkv6(rng, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    K = cfg.head_dim
+    ks = jax.random.split(rng, 12)
+    return {
+        # time-mix projections
+        "w_r": dense_init(ks[0], (d, d), dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay lora: d -> r -> d
+        "decay_lora_a": dense_init(ks[5], (d, LORA_R), dtype),
+        "decay_lora_b": dense_init(ks[6], (LORA_R, d), dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),  # w0: slow decay init
+        "bonus_u": (jax.random.normal(ks[7], (H, K)) * 0.1).astype(jnp.float32),
+        # token-shift mix coefficients (static part; rwkv6 adds lora on these,
+        # we keep one shared data-dependent lora for economy)
+        "mix_rkvg": (0.5 * jnp.ones((4, d))).astype(dtype),
+        "ts_lora_a": dense_init(ks[8], (d, LORA_R), dtype),
+        "ts_lora_b": dense_init(ks[9], (LORA_R, 4 * d), dtype),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),  # group-norm on wkv output
+    }
+
+
+def _wkv_recurrent(r, k, v, w, u, init_state=None):
+    """Exact scan. r,k,v: [B,S,H,K]; w: [B,S,H,K] decay in (0,1); u: [H,K].
+
+    Returns y [B,S,H,K], final state [B,H,K,K]  (state[k_dim, v_dim])."""
+    B, S, H, K = r.shape
+    if init_state is None:
+        init_state = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,K]
+        kv = k_t[..., :, None] * v_t[..., None, :]            # [B,H,K,K]
+        y = jnp.einsum("bhkv,bhk->bhv", state + u[None, :, :, None] * kv, r_t)
+        state = state * w_t[..., :, None] + kv
+        return state, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w))
+    final, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int, init_state=None):
+    """Chunked-parallel WKV (flash-linear-attention style). Same contract."""
+    B, S, H, K = r.shape
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Sp = S + pad
+    nc = Sp // chunk
+    Q = chunk
+    shp = (B, nc, Q, H, K)
+    rc, kc, vc, wc = (a.reshape(shp).astype(jnp.float32) for a in (r, k, v, w))
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                    # [B,nc,Q,H,K] inclusive
+    tot = cum[:, :, -1]                               # [B,nc,H,K]
+
+    # intra-chunk: y_t = r_t . (S_{t-1} + u k_t v_t); step s<t contributes with
+    # decay prod_{i=s+1..t-1} w_i = exp(cum_{t-1} - cum_s).  Fold the decay into
+    # r and k (FLA-style) so the [Q,Q] score is a plain matmul (MXU-friendly):
+    #   r' = r * exp(cum_{t-1})   (<= 1, relative to chunk start)
+    #   k' = k * exp(-cum_s)      (>= 1; clamped — with realistic decays
+    #                              |cum| over a chunk stays small; the exact
+    #                              recurrent oracle covers adversarial decay)
+    r_fold = rc * jnp.exp(cum - logw)
+    k_fold = kc * jnp.exp(jnp.minimum(-cum, 40.0))
+    att = jnp.einsum("bcqhk,bcshk->bcqsh", r_fold, k_fold)   # [B,nc,Q,Q,H]
+    strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    att = jnp.where(strict[None, None, :, :, None], att, 0.0)
+    # diagonal (s == q) with bonus u
+    diag = jnp.einsum("bcqhk,hk,bcqhk->bcqh", rc, u, kc)
+    y_intra = jnp.einsum("bcqsh,bcshv->bcqhv", att, vc) + diag[..., None] * vc
+
+    # chunk-end states: S_end = S_init * prod(w) + sum_s (prod_{i>s} w_i) k_s v_s
+    state_decay = jnp.exp(tot[:, :, None] - cum)       # [B,nc,Q,H,K]
+    su = jnp.einsum("bcshk,bcshv->bchkv", kc * state_decay, vc)
+
+    def scan_fn(prev, inp):
+        su_c, tot_c = inp
+        new = prev * jnp.exp(tot_c)[..., None] + su_c
+        return new, prev
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, K, K), jnp.float32)
+    final, prevs = jax.lax.scan(
+        scan_fn,
+        init_state.astype(jnp.float32),
+        (su.transpose(1, 0, 2, 3, 4), tot.transpose(1, 0, 2, 3)),
+    )
+    prevs = prevs.transpose(1, 0, 2, 3, 4)             # [B,nc,H,K,V]
+
+    # inter-chunk: y_q += r_q * exp(cum_{q-1}) @ S_prev;  cum_{q-1} = cum_q - logw_q
+    rdec = rc * jnp.exp(cum - logw)
+    y_inter = jnp.einsum("bcqhk,bchkv->bcqhv", rdec, prevs)
+
+    y = (y_intra + y_inter).reshape(B, Sp, H, K)[:, :S]
+    return y, final
+
+
+def apply_rwkv6(
+    p: Params,
+    x: jnp.ndarray,          # [B, S, d] (already layer-normed)
+    cfg,
+    *,
+    last_x: Optional[jnp.ndarray] = None,   # [B, 1, d] token-shift state
+    wkv_state: Optional[jnp.ndarray] = None,  # [B, H, K, K]
+    decode: bool = False,
+    chunked: bool = True,
+):
+    """Time-mix block. Returns (out, (new_last_x, new_wkv_state))."""
+    B, S, d = x.shape
+    H, K = cfg.n_heads, cfg.head_dim
+
+    if last_x is None:
+        last_x = jnp.zeros((B, 1, d), x.dtype)
+    x_prev = jnp.concatenate([last_x, x[:, :-1]], axis=1)
+    new_last_x = x[:, -1:, :]
+
+    # data-dependent token-shift mixing
+    lora = jnp.tanh((x @ p["ts_lora_a"]).astype(jnp.float32)) @ p["ts_lora_b"].astype(jnp.float32)
+    mix = p["mix_rkvg"].astype(jnp.float32)[None, None] + lora.reshape(B, S, 4, d)
+    mix = jax.nn.sigmoid(mix).astype(x.dtype)
+    xr = x * mix[:, :, 0] + x_prev * (1 - mix[:, :, 0])
+    xk = x * mix[:, :, 1] + x_prev * (1 - mix[:, :, 1])
+    xv = x * mix[:, :, 2] + x_prev * (1 - mix[:, :, 2])
+    xg = x * mix[:, :, 3] + x_prev * (1 - mix[:, :, 3])
+
+    r = (xr @ p["w_r"]).reshape(B, S, H, K)
+    k = (xk @ p["w_k"]).reshape(B, S, H, K)
+    v = (xv @ p["w_v"]).reshape(B, S, H, K)
+    g = jax.nn.silu((xg @ p["w_g"]).astype(jnp.float32))
+
+    # data-dependent decay
+    dlora = jnp.tanh((xk @ p["decay_lora_a"]).astype(jnp.float32)) @ p["decay_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay_base"][None, None] + dlora))  # (0,1)
+    w = w.reshape(B, S, H, K)
+
+    u = p["bonus_u"]
+    if decode and S == 1:
+        y, state = _wkv_recurrent(r, k, v, w, u, init_state=wkv_state)
+    elif chunked:
+        y, state = _wkv_chunked(r, k, v, w, u, cfg.ssm_chunk, init_state=wkv_state)
+    else:
+        y, state = _wkv_recurrent(r, k, v, w, u, init_state=wkv_state)
+
+    # per-head group norm then gate
+    y = y.reshape(B, S, H, K)
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, S, d) * p["ln_x_scale"][None, None]
+    y = (y * g).astype(x.dtype)
+    out = y @ p["w_o"]
+    return out, (new_last_x, state)
+
+
+def init_channel_mix(rng, cfg, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mix_k": (0.5 * jnp.ones((d,))).astype(dtype),
+        "w_k": dense_init(ks[0], (d, ff), dtype),
+        "w_v": dense_init(ks[1], (ff, d), dtype),
+        "w_r": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def apply_channel_mix(p: Params, x: jnp.ndarray, last_x: Optional[jnp.ndarray] = None):
+    """RWKV channel-mix (squared-relu FFN with token shift + receptance gate)."""
+    B, S, d = x.shape
+    if last_x is None:
+        last_x = jnp.zeros((B, 1, d), x.dtype)
+    x_prev = jnp.concatenate([last_x, x[:, :-1]], axis=1)
+    new_last = x[:, -1:, :]
+    xk = x * p["mix_k"] + x_prev * (1 - p["mix_k"])
+    k = jnp.square(jax.nn.relu((xk @ p["w_k"]).astype(jnp.float32)))
+    kv = k.astype(x.dtype) @ p["w_v"]
+    rgate = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32)).astype(x.dtype)
+    return rgate * kv, new_last

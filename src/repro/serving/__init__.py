@@ -1,0 +1,1 @@
+from repro.serving.engine import ClassifierServer, DecoderServer, Request, MultiTaskRouter

@@ -1,0 +1,187 @@
+"""Deployed EdgeBERT: the accelerator's dataflow, composed from the Pallas
+kernels (paper Fig. 9).
+
+`deploy_albert` bakes a trained ALBERT-EdgeBERT into its on-chip form:
+  * matmul weights -> AF8 codes (uint8 + per-tensor bias) — §V-C's 8-bit PU,
+    executed by the `af_matmul` kernel (decode at the VMEM edge, f32 acc);
+  * learned spans -> integer registers; attention runs the `span_attention`
+    kernel (dead heads gathered out, survivors windowed) — §V-D1;
+  * LayerNorm -> the fused two-moment kernel — §V-D3;
+  * off-ramp evaluation -> the fused softmax+entropy kernel — Alg. 1 + Eq. 4;
+  * embeddings come back from the eNVM round-trip (bitmask in SLC, AF8 codes
+    in MLC2) — §III-D.
+
+`DeployedAlbert.classify` then runs sentences layer-by-layer with entropy
+early exit — the complete EdgeBERT inference pass, every hot op on a kernel.
+CPU here = interpret mode (correctness); on TPU the same calls emit Mosaic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import envm
+from repro.core.adaptivfloat import AFFormat, af_encode
+from repro.core.adaptive_span import hard_spans
+from repro.kernels import ops
+
+
+@dataclass
+class AFWeight:
+    codes: jnp.ndarray      # uint8 [in, out]
+    e_min: jnp.ndarray      # scalar
+    bias: Optional[jnp.ndarray] = None
+
+
+def _encode_w(w, fmt: AFFormat) -> AFWeight:
+    codes, e_min = af_encode(jnp.asarray(w, jnp.float32), fmt)
+    return AFWeight(codes=codes, e_min=e_min)
+
+
+def _mm(x: jnp.ndarray, w: AFWeight) -> jnp.ndarray:
+    """AF8 matmul kernel over flattened leading dims."""
+    lead = x.shape[:-1]
+    y = ops.af_matmul_op(x.reshape(-1, x.shape[-1]).astype(jnp.float32), w.codes, w.e_min)
+    if w.bias is not None:
+        y = y + w.bias
+    return y.reshape(lead + (y.shape[-1],))
+
+
+@dataclass
+class DeployedAlbert:
+    cfg: ModelConfig
+    embed_tok: jnp.ndarray          # eNVM-readback embeddings
+    embed_proj: Optional[AFWeight]
+    embed_pos: Optional[jnp.ndarray]
+    layer: Dict[str, Any]           # AF-encoded shared encoder layer
+    offramp: Dict[str, Any]
+    spans: np.ndarray               # integer spans (registers)
+    threshold: float
+
+    # ------------------------------------------------------------- layers --
+    def _ln(self, x, scale, bias):
+        lead = x.shape[:-1]
+        y = ops.layernorm_op(
+            x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+            jnp.asarray(scale, jnp.float32), jnp.asarray(bias, jnp.float32),
+        )
+        return y.reshape(x.shape)
+
+    def _encoder_layer(self, h: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        lp = self.layer
+        B, S, d = h.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = _mm(h, lp["wq"]).reshape(B, S, H, hd)
+        k = _mm(h, lp["wk"]).reshape(B, S, KV, hd)
+        v = _mm(h, lp["wv"]).reshape(B, S, KV, hd)
+        attn = ops.span_attention_op(
+            q, k, v, self.spans, causal=False, bq=64, bk=64
+        )
+        attn = _mm(attn.reshape(B, S, H * hd), lp["wo"])
+        h = self._ln(h + attn, lp["norm1_scale"], lp["norm1_bias"])
+        up = _mm(h, lp["w_up"])
+        act = jax.nn.gelu(up)
+        mo = _mm(act, lp["w_down"])
+        h = self._ln(h + mo, lp["norm2_scale"], lp["norm2_bias"])
+        return h
+
+    def _offramp_entropy(self, h: jnp.ndarray):
+        """Pooler + classifier + fused softmax/entropy kernel (GB unit)."""
+        o = self.offramp
+        pooled = jnp.tanh(_mm(h[:, 0, :], o["pooler_w"]) + o["pooler_b"])
+        logits = _mm(pooled, o["cls_w"]) + o["cls_b"]
+        probs, ent = ops.softmax_entropy_op(logits)
+        return logits, ent
+
+    # -------------------------------------------------------------- public --
+    def classify(self, tokens: jnp.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Early-exit classification. tokens [B, S] -> (logits [B,C], exit [B]).
+
+        Layer-by-layer host loop (the accelerator's serial schedule): lanes
+        that clear the entropy threshold stop computing.
+        """
+        cfg = self.cfg
+        h = jnp.take(self.embed_tok, tokens, axis=0)
+        if self.embed_proj is not None:
+            h = _mm(h, self.embed_proj)
+        if self.embed_pos is not None:
+            h = h + self.embed_pos[None, : tokens.shape[1]]
+        B = tokens.shape[0]
+        done = np.zeros(B, bool)
+        out_logits = np.zeros((B, cfg.edgebert.early_exit.num_classes), np.float32)
+        exit_layer = np.full(B, cfg.n_layers, np.int32)
+        h = jnp.asarray(h, jnp.float32)
+        for li in range(cfg.n_layers):
+            active = np.nonzero(~done)[0]
+            if len(active) == 0:
+                break
+            h_act = self._encoder_layer(h[active])
+            h = jnp.asarray(np.asarray(h).copy())
+            h = h.at[jnp.asarray(active)].set(h_act)
+            logits, ent = self._offramp_entropy(h_act)
+            ent = np.asarray(ent)
+            lg = np.asarray(logits)
+            for j, i in enumerate(active):
+                if ent[j] < self.threshold or li == cfg.n_layers - 1:
+                    done[i] = True
+                    out_logits[i] = lg[j]
+                    exit_layer[i] = li + 1
+        return out_logits, exit_layer
+
+
+def deploy_albert(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    fmt: AFFormat = AFFormat(8, 3),
+    envm_cell: str = "MLC2",
+    seed: int = 0,
+) -> DeployedAlbert:
+    assert cfg.family == "albert" and cfg.shared_layers
+    lp = params["layer"]
+    enc = {
+        "wq": _encode_w(lp["attn"]["wq"], fmt),
+        "wk": _encode_w(lp["attn"]["wk"], fmt),
+        "wv": _encode_w(lp["attn"]["wv"], fmt),
+        "wo": _encode_w(lp["attn"]["wo"], fmt),
+        "w_up": _encode_w(lp["mlp"]["w_up"], fmt),
+        "w_down": _encode_w(lp["mlp"]["w_down"], fmt),
+        # LN params stay dense/fp (paper keeps them unpruned/unquantized-critical)
+        "norm1_scale": lp["norm1"]["scale"],
+        "norm1_bias": lp["norm1"]["norm_bias"],
+        "norm2_scale": lp["norm2"]["scale"],
+        "norm2_bias": lp["norm2"]["norm_bias"],
+    }
+    o = params["offramp"]
+    offramp = {
+        "pooler_w": _encode_w(o["offramp_pooler_w"], fmt),
+        "pooler_b": jnp.asarray(o["offramp_pooler_b"], jnp.float32),
+        "cls_w": _encode_w(o["offramp_cls_w"], fmt),
+        "cls_b": jnp.asarray(o["offramp_cls_b"], jnp.float32),
+    }
+    # embeddings through the eNVM round-trip (SLC bitmask + MLC data cells)
+    emb_rb, _ = envm.store_and_readback(
+        np.asarray(params["embed"]["tok"], np.float32), data_cell=envm_cell,
+        fmt=fmt, seed=seed,
+    )
+    spans = (
+        hard_spans(np.asarray(params["span_z"])[0])
+        if "span_z" in params
+        else np.full(cfg.n_heads, cfg.edgebert.span.max_span, np.int32)
+    )
+    return DeployedAlbert(
+        cfg=cfg,
+        embed_tok=jnp.asarray(emb_rb),
+        embed_proj=_encode_w(params["embed"]["proj"], fmt) if "proj" in params["embed"] else None,
+        embed_pos=jnp.asarray(params["embed"]["pos"], jnp.float32) if "pos" in params["embed"] else None,
+        layer=enc,
+        offramp=offramp,
+        spans=spans,
+        threshold=cfg.edgebert.early_exit.entropy_threshold,
+    )

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    param_shardings,
+    batch_shardings,
+    cache_shardings,
+    logical_to_mesh,
+)

@@ -1,0 +1,283 @@
+"""Logical-axis sharding rules (MaxText-style) for every parameter family.
+
+Each parameter leaf is matched by path substring to a tuple of LOGICAL axis
+names per dimension; a per-arch ``logical_to_mesh`` table maps logical axes to
+mesh axes.  Divisibility is enforced at assignment time: a logical axis whose
+dimension does not divide the mesh axis size silently degrades to replicated
+(this is what handles kv_heads=4/8 on a 16-way model axis, and 60 experts on
+qwen2-moe via its expert-TP override).
+
+Stacked-layer leaves (paths containing layers/cross_layers/enc_layers/
+dec_cross) get a leading replicated 'layers' dim prepended automatically.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.util import logger
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# path-pattern -> logical axes (per trailing dim)
+# ---------------------------------------------------------------------------
+
+# order matters: first match wins
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("embed/tok", ("vocab", "embed_small")),
+    ("embed/proj", ("embed_small", None)),
+    ("embed/pos", (None, None)),
+    ("enc_pos", (None, None)),
+    ("lm_head", (None, "vocab")),
+    # attention
+    ("attn/wq", (None, "heads_out")),
+    ("attn/wk", (None, "kv_out")),
+    ("attn/wv", (None, "kv_out")),
+    ("attn/wo", ("heads_out", None)),
+    ("attn/bq", ("heads_out",)),
+    ("attn/bk", ("kv_out",)),
+    ("attn/bv", ("kv_out",)),
+    ("xattn/wq", (None, "heads_out")),
+    ("xattn/wk", (None, "kv_out")),
+    ("xattn/wv", (None, "kv_out")),
+    ("xattn/wo", ("heads_out", None)),
+    ("xattn/bq", ("heads_out",)),
+    ("xattn/bk", ("kv_out",)),
+    ("xattn/bv", ("kv_out",)),
+    # MoE (3D expert-stacked)
+    ("moe/router", (None, None)),
+    ("moe/w_gate", ("experts", None, "moe_ffn")),
+    ("moe/w_up", ("experts", None, "moe_ffn")),
+    ("moe/w_down", ("experts", "moe_ffn", None)),
+    ("shared/w_gate", (None, "ffn")),
+    ("shared/w_up", (None, "ffn")),
+    ("shared/w_down", ("ffn", None)),
+    ("shared/gate_proj", (None, None)),
+    # dense MLP
+    ("mlp/w_gate", (None, "ffn")),
+    ("mlp/w_up", (None, "ffn")),
+    ("mlp/w_down", ("ffn", None)),
+    # rwkv6
+    ("tmix/w_r", (None, "heads_out")),
+    ("tmix/w_k", (None, "heads_out")),
+    ("tmix/w_v", (None, "heads_out")),
+    ("tmix/w_g", (None, "heads_out")),
+    ("tmix/w_o", ("heads_out", None)),
+    ("cmix/w_k", (None, "ffn")),
+    ("cmix/w_v", ("ffn", None)),
+    ("cmix/w_r", (None, None)),
+    # mamba2
+    ("mixer/w_in", (None, "ssm_inner")),
+    ("mixer/w_out", ("ssm_inner_in", None)),
+    ("mixer/conv_w", (None, None)),
+    # zamba shared attn out projection
+    ("shared_attn/out_proj", ("heads_out", None)),
+    # classifiers / off-ramps / norms / scalars: replicated
+)
+
+STACK_MARKERS = ("layers", "cross_layers", "enc_layers", "dec_cross")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or None). Per-arch overridable."""
+
+    table: Dict[str, Optional[str]] = field(
+        default_factory=lambda: {
+            "vocab": "model",
+            "heads_out": "model",
+            "kv_out": "model",
+            "ffn": "model",
+            "moe_ffn": None,          # MoE default: experts sharded instead
+            "experts": "model",
+            "ssm_inner": "model",
+            "ssm_inner_in": "model",
+            "embed_small": None,
+            "batch": ("pod", "data"),
+            "cache_batch": "data",
+            "cache_seq": None,
+            "cache_kv": "model",
+        }
+    )
+
+    def mesh_axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, shape: Optional[ShapeConfig] = None) -> ShardingRules:
+    """Arch- and shape-specific rule table."""
+    table = dict(ShardingRules().table)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = axis_sizes.get("model", 1)
+    # batch axes present in this mesh
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    table["batch"] = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+
+    if cfg.family == "moe":
+        if cfg.n_experts % model_size == 0:
+            table["experts"] = "model"
+            table["moe_ffn"] = None
+        else:
+            # qwen2-moe: 60 experts don't divide 16 -> expert-TP on ffn dim
+            table["experts"] = None
+            table["moe_ffn"] = "model"
+
+    if getattr(cfg, "ssm_replicated", False):
+        table["ssm_inner"] = None
+        table["ssm_inner_in"] = None
+
+    if shape is not None:
+        dp_total = int(np.prod([axis_sizes[a] for a in dp_axes])) if dp_axes else 1
+        if shape.kind in ("decode", "prefill"):
+            if shape.global_batch % dp_total == 0 and shape.global_batch >= dp_total:
+                table["cache_batch"] = table["batch"]
+                table["cache_seq"] = None
+            else:
+                # batch-1 long-context decode: shard the KV sequence instead
+                # (flash-decode style; XLA partitions the softmax reduction)
+                table["cache_batch"] = None
+                table["cache_seq"] = table["batch"]
+    return ShardingRules(table=table)
+
+
+# ---------------------------------------------------------------------------
+# Param tree -> NamedSharding tree
+# ---------------------------------------------------------------------------
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], rules: ShardingRules, mesh: Mesh):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    stacked = any(m in path for m in STACK_MARKERS)
+    for pat, logical_axes in PARAM_RULES:
+        if pat in path:
+            n_stack_dims = len(shape) - len(logical_axes)
+            spec: list = [None] * n_stack_dims
+            if stacked and n_stack_dims == 0:
+                # rule length == ndim but leaf is stacked: shouldn't happen
+                pass
+            for dim, logical in zip(shape[n_stack_dims:], logical_axes):
+                ax = rules.mesh_axis(logical)
+                if ax is None:
+                    spec.append(None)
+                    continue
+                size = (
+                    int(np.prod([axis_sizes[a] for a in ax]))
+                    if isinstance(ax, tuple)
+                    else axis_sizes.get(ax, 1)
+                )
+                if dim % size == 0:
+                    spec.append(ax)
+                else:
+                    spec.append(None)
+            return P(*spec)
+    return P()  # replicated (norms, scalars, classifiers, off-ramps)
+
+
+def path_to_str(path) -> str:
+    """('layers','mlp','w_up') key path -> 'layers/mlp/w_up' (rules match on
+    slash-joined names; jax.tree_util.keystr's bracket form does not)."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params: Any, mesh: Mesh, rules: ShardingRules):
+    """Pytree of NamedSharding matching `params` (works on ShapeDtypeStructs)."""
+
+    def assign(path, leaf):
+        pstr = path_to_str(path)
+        if not hasattr(leaf, "shape"):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _spec_for_leaf(pstr, tuple(leaf.shape), rules, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch: Any, mesh: Mesh, rules: ShardingRules):
+    """tokens/labels [B, S] or [B] -> batch over dp axes; aux embeds too."""
+    b_ax = rules.mesh_axis("batch")
+
+    def assign(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        size = (
+            int(np.prod([axis_sizes[a] for a in b_ax]))
+            if isinstance(b_ax, tuple)
+            else axis_sizes.get(b_ax, 1) if b_ax else 1
+        )
+        if leaf.shape[0] % size == 0 and b_ax is not None:
+            return NamedSharding(mesh, P(*((b_ax,) + (None,) * (nd - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, rules: ShardingRules, cfg: ModelConfig):
+    """Decode caches: [L, B, S, KV, hd] (k/v), mamba/rwkv states, etc."""
+    cb = rules.mesh_axis("cache_batch")
+    cs = rules.mesh_axis("cache_seq")
+    kv_ax = rules.mesh_axis("cache_kv")
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def sz(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            return int(np.prod([axis_sizes[a] for a in ax]))
+        return axis_sizes.get(ax, 1)
+
+    def assign(path, leaf):
+        parts = path_to_str(path).split("/")
+        pstr = "/".join(parts)
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if any(key in parts for key in ("k", "v", "img_k", "img_v", "enc_k", "enc_v")):
+            # [L, B, S, KV, hd]
+            if cb is not None and shape[1] % sz(cb) == 0 and shape[1] >= sz(cb):
+                spec[1] = cb
+            if cs is not None and shape[2] % sz(cs) == 0:
+                spec[2] = cs
+            if kv_ax is not None and shape[3] % sz(kv_ax) == 0:
+                spec[3] = kv_ax
+            elif kv_ax is not None and spec[2] is None and shape[2] % sz(kv_ax) == 0:
+                # kv_heads don't divide the model axis (GQA kv=4/8 on 16-way):
+                # replicating the cache over model would blow HBM (146 GiB/chip
+                # for internlm2 decode_32k) — shard the SEQUENCE dim over model
+                # instead (flash-decode: XLA partitions the softmax reduction)
+                spec[2] = kv_ax
+        elif any(key in parts for key in ("conv", "ssm", "last_tm", "last_cm", "wkv")):
+            # [L, B, ...] state tensors: shard batch; wkv heads over model
+            if cb is not None and shape[1] % sz(cb) == 0 and shape[1] >= sz(cb):
+                spec[1] = cb
+            if "wkv" in pstr or "ssm" in pstr:
+                if kv_ax is not None and len(shape) > 2 and shape[2] % sz(kv_ax) == 0:
+                    spec[2] = kv_ax
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def logical_to_mesh(rules: ShardingRules, *logical: Optional[str]) -> P:
+    return P(*(rules.mesh_axis(l) for l in logical))

@@ -1,0 +1,43 @@
+"""ZeRO-1 optimizer-state sharding: Adam moments get the `data` axis added on
+their largest dimension that is (a) not already sharded and (b) divisible —
+optimizer memory scales down by the DP degree with zero extra collectives at
+update time beyond what XLA already schedules for the (sharded) update.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.training.optim import AdamWState
+
+
+def zero1_param_sharding(spec: P, shape, mesh: Mesh, dp_axis="data") -> P:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if dp_axis not in axis_sizes:
+        return spec
+    dp = axis_sizes[dp_axis]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # pick the largest unsharded, divisible dim
+    best, best_dim = -1, -1
+    for i, (d, e) in enumerate(zip(shape, entries)):
+        if e is None and d % dp == 0 and d > best:
+            best, best_dim = d, i
+    if best_dim >= 0:
+        entries[best_dim] = dp_axis
+    return P(*entries)
+
+
+def zero1_opt_shardings(opt_state: AdamWState, param_shardings: Any, mesh: Mesh) -> AdamWState:
+    """NamedSharding tree for AdamWState given the params' sharding tree."""
+
+    def moment(ns: NamedSharding, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, zero1_param_sharding(ns.spec, leaf.shape, mesh))
+
+    m_sh = jax.tree_util.tree_map(moment, param_shardings, opt_state.m)
+    v_sh = jax.tree_util.tree_map(moment, param_shardings, opt_state.v)
+    return AdamWState(count=NamedSharding(mesh, P()), m=m_sh, v=v_sh)

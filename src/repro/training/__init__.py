@@ -1,0 +1,2 @@
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.training.losses import lm_loss, cls_loss

@@ -1,0 +1,62 @@
+"""Gradient compression for the data-parallel all-reduce (distributed-
+optimization trick for 1000+ node scale).
+
+int8 uniform quantization with ERROR FEEDBACK: each worker quantizes
+(grad + residual) to int8 against a globally-agreed scale (psum-max of
+|g|), all-reduces the int8 payload (as int32 accumulate — the 4x wire
+saving is the int8 payload; XLA all-reduces the widened type, a real
+deployment uses the ICI int8 reduction path), dequantizes, and carries the
+quantization error into the next step.  Error feedback keeps SGD/Adam
+convergence unbiased (Karimireddy et al. 2019).
+
+Used inside a shard_map'd train-step variant (``dp_axis`` is a mesh axis
+name); validated for convergence parity in tests/test_compress.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any    # same structure as grads, fp32
+
+
+def ef_init(grads_shape: Any) -> EFState:
+    return EFState(
+        residual=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape
+        )
+    )
+
+
+def compressed_psum(
+    grads: Any,
+    ef: EFState,
+    axis_name: str,
+    n_devices: int,
+) -> Tuple[Any, EFState]:
+    """All-reduce mean of grads over `axis_name` with int8 + error feedback.
+
+    Must be called inside shard_map/pmap with `axis_name` bound.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        # globally-agreed scale so dequantization is consistent
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name)
+        scale = jnp.maximum(amax, 1e-20) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = total.astype(jnp.float32) * scale / n_devices
+        return mean.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, EFState(residual=new_r)

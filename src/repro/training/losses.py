@@ -1,0 +1,63 @@
+"""Task losses: next-token LM CE, classification CE, EdgeBERT composite
+(task CE + distillation + span regularizer + router aux + multi-off-ramp)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive_span import span_loss
+from repro.core.distill import cross_entropy, distill_objective
+
+
+def lm_loss(logits: jnp.ndarray, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token CE: logits [B, S, V] predict tokens shifted left."""
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(lg, -1) == tgt).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}
+
+
+def cls_loss(cls_logits: jnp.ndarray, labels: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    loss = cross_entropy(cls_logits, labels)
+    acc = jnp.mean((jnp.argmax(cls_logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}
+
+
+def offramp_loss(all_cls_logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Phase-2 (DeeBERT): sum of CE over every off-ramp layer [L, B, C]."""
+    L = all_cls_logits.shape[0]
+    losses = jax.vmap(lambda lg: cross_entropy(lg, labels))(all_cls_logits)
+    return jnp.sum(losses)
+
+
+def edgebert_phase1_loss(
+    cls_logits: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    teacher_logits: Optional[jnp.ndarray] = None,
+    distill_alpha: float = 0.0,
+    span_z: Optional[jnp.ndarray] = None,
+    max_span: int = 128,
+    span_coef: float = 0.0,
+    aux: jnp.ndarray = 0.0,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Paper Fig. 6 phase 1: task CE (+KD) while pruning + span learning."""
+    if teacher_logits is not None and distill_alpha > 0:
+        task = distill_objective(cls_logits, teacher_logits, labels, distill_alpha)
+    else:
+        task = cross_entropy(cls_logits, labels)
+    total = task + aux
+    metrics = {"task_loss": task}
+    if span_z is not None and span_coef > 0:
+        sl = span_loss(span_z, max_span, span_coef)
+        total = total + sl
+        metrics["span_loss"] = sl
+        metrics["mean_span"] = jnp.mean(span_z)
+    acc = jnp.mean((jnp.argmax(cls_logits.astype(jnp.float32), -1) == labels).astype(jnp.float32))
+    metrics.update({"loss": total, "acc": acc})
+    return total, metrics

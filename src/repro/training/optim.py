@@ -1,0 +1,124 @@
+"""AdamW + LR schedules from scratch (no optax in this environment).
+
+Functional: ``state = adamw_init(params)``; ``params, state = adamw_update(
+grads, state, params, cfg, lr)``.  Moments are fp32 regardless of param dtype
+(bf16-safe).  Weight decay is masked off 1-D leaves (biases, norms, spans).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"     # cosine | linear | constant
+    # span parameters move O(tens of tokens) while weights move O(1e-2):
+    # Adam normalizes magnitudes away, so spans get their own LR multiplier
+    # (Sukhbaatar et al. train spans with a much larger effective step)
+    span_lr_mult: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32) if hasattr(p, "shape") else jnp.zeros((), jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        t = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - t
+    else:  # cosine
+        t = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _decay_mask(path, leaf) -> bool:
+    """True if weight decay applies (2D+ weights only; not norms/biases/spans)."""
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    p = jax.tree_util.keystr(path).lower()
+    return not any(s in p for s in ("norm", "span_z", "bias"))
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    cfg: AdamWConfig,
+    lr: Optional[jnp.ndarray] = None,
+):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    count = state.count + 1
+    if lr is None:
+        lr = lr_schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m / b1c
+        vhat = v / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path, p):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        if cfg.span_lr_mult != 1.0 and "span_z" in jax.tree_util.keystr(path):
+            upd = upd * cfg.span_lr_mult
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        AdamWState(
+            count=count,
+            m=jax.tree_util.tree_unflatten(treedef, new_m),
+            v=jax.tree_util.tree_unflatten(treedef, new_v),
+        ),
+        {"grad_norm": gnorm, "lr": lr},
+    )

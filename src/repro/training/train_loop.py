@@ -1,0 +1,265 @@
+"""Training loop: pjit-able step functions + the EdgeBERT two-phase trainer.
+
+``make_train_step`` builds the generic distributed step (grad accumulation via
+microbatch scan, AdamW, span-z projection).  ``EdgeBertTrainer`` orchestrates
+the paper's Fig. 6 procedure: phase 1 fine-tunes with pruning (magnitude or
+movement) + adaptive-span learning + optional distillation; phase 2 freezes
+the backbone and trains the early-exit off-ramp.  Pruning masks are updated
+on a host-side schedule (every ``update_every`` steps) and passed into the
+jitted step as arguments, keeping one compiled executable throughout.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.util import logger
+from repro.configs.base import ModelConfig
+from repro.core import adaptive_span, pruning
+from repro.core.early_exit import exit_all_layers, OfframpParams
+from repro.models.model import Model
+from repro.training import losses as losses_mod
+from repro.training.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Loss functions
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(model: Model) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch, teacher_logits=None):
+        out = model.apply_train(params, batch)
+        if cfg.num_classes and "labels" in batch:
+            eb = cfg.edgebert
+            if out.all_cls_logits is not None:
+                # early-exit enabled: train against the FINAL layer's off-ramp
+                cls = out.all_cls_logits[-1]
+            else:
+                cls = out.cls_logits
+            total, metrics = losses_mod.edgebert_phase1_loss(
+                cls,
+                batch["labels"],
+                teacher_logits=teacher_logits,
+                distill_alpha=eb.distill_alpha,
+                span_z=params.get("span_z"),
+                max_span=eb.span.max_span,
+                span_coef=eb.span.loss_coef if eb.span.enabled else 0.0,
+                aux=out.aux_loss,
+            )
+        else:
+            total, metrics = losses_mod.lm_loss(out.logits, batch["tokens"])
+            total = total + out.aux_loss
+            if cfg.edgebert.span.enabled and "span_z" in params:
+                sl = adaptive_span.span_loss(
+                    params["span_z"], cfg.edgebert.span.max_span, cfg.edgebert.span.loss_coef
+                )
+                total = total + sl
+                metrics["mean_span"] = jnp.mean(params["span_z"])
+            metrics["loss"] = total
+        return total, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    with_masks: bool = False,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch[, masks]) -> (params,
+    opt_state, metrics).  Microbatching: the global batch's leading dim is
+    split into `microbatches` chunks scanned with gradient accumulation —
+    activation memory scales down by the same factor."""
+    loss_fn = make_loss_fn(model)
+    cfg = model.cfg
+
+    def effective_params(params, masks):
+        if masks is None:
+            return params
+        return pruning.apply_masks(params, pruning.PruneState(masks=masks, scores=None))
+
+    def grads_of(params, batch, masks):
+        def inner(p):
+            return loss_fn(effective_params(p, masks), batch)
+
+        (loss, metrics), grads = jax.value_and_grad(inner, has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, masks=None):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mb_batch):
+                acc = carry
+                g, metrics = grads_of(params, mb_batch, masks)
+                acc = jax.tree_util.tree_map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, metrics
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, metrics = jax.lax.scan(acc_fn, zero, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m), metrics)
+        else:
+            grads, metrics = grads_of(params, batch, masks)
+
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        # span projection: z stays in [0, max_span]
+        if "span_z" in params and cfg.edgebert.span.enabled:
+            params = dict(
+                params,
+                span_z=adaptive_span.clamp_spans(params["span_z"], cfg.edgebert.span.max_span),
+            )
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# EdgeBERT two-phase trainer (paper Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainerConfig:
+    phase1_steps: int = 200
+    phase2_steps: int = 100
+    opt: AdamWConfig = None           # type: ignore
+
+    def __post_init__(self):
+        if self.opt is None:
+            object.__setattr__(self, "opt", AdamWConfig())
+
+
+class EdgeBertTrainer:
+    """Host-side orchestration of phase 1 (prune + span + KD) and phase 2
+    (off-ramp highway fine-tuning with frozen backbone)."""
+
+    def __init__(self, model: Model, tcfg: TrainerConfig, teacher_params=None):
+        self.model = model
+        self.cfg = model.cfg
+        self.tcfg = tcfg
+        self.teacher_params = teacher_params
+        self.loss_fn = make_loss_fn(model)
+        self._step1 = None
+        self._step2 = None
+
+    # ---------------- phase 1 ----------------
+    def phase1(self, params, data, log_every: int = 50, callbacks=()):
+        eb = self.cfg.edgebert
+        opt_state = adamw_init(params)
+        prune_state = (
+            pruning.init_prune_state(params, eb.prune.method) if eb.prune.enabled else None
+        )
+        loss_fn = self.loss_fn
+        teacher = self.teacher_params
+        model = self.model
+
+        @jax.jit
+        def step_fn(params, opt_state, batch, masks):
+            def inner(p):
+                pm = (
+                    pruning.apply_masks(p, pruning.PruneState(masks=masks, scores=None))
+                    if masks is not None
+                    else p
+                )
+                tl = None
+                if teacher is not None:
+                    t_out = model.apply_train(teacher, batch)
+                    tl = jax.lax.stop_gradient(
+                        t_out.all_cls_logits[-1] if t_out.all_cls_logits is not None else t_out.cls_logits
+                    )
+                return loss_fn(pm, batch, teacher_logits=tl)
+
+            (loss, metrics), grads = jax.value_and_grad(inner, has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params, self.tcfg.opt)
+            if "span_z" in params and eb.span.enabled:
+                params = dict(
+                    params,
+                    span_z=adaptive_span.clamp_spans(params["span_z"], eb.span.max_span),
+                )
+            metrics = dict(metrics)
+            metrics.update(om)
+            return params, opt_state, grads, metrics
+
+        history = []
+        masks = prune_state.masks if prune_state else None
+        for step in range(self.tcfg.phase1_steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(step).items() if k != "signal_ratio"}
+            params, opt_state, grads, metrics = step_fn(params, opt_state, batch, masks)
+            if prune_state is not None:
+                if eb.prune.method == "movement":
+                    prune_state = pruning.update_movement_scores(
+                        prune_state, params, grads, float(metrics["lr"])
+                    )
+                if step % eb.prune.update_every == 0 or step == self.tcfg.phase1_steps - 1:
+                    prune_state = pruning.update_masks(
+                        params, prune_state, step, eb.prune.method,
+                        eb.prune.encoder_sparsity, eb.prune.begin_step,
+                        eb.prune.end_step, eb.prune.block_size,
+                    )
+                    masks = prune_state.masks
+            if step % log_every == 0:
+                logger.info(
+                    "phase1 step=%d loss=%.4f acc=%.3f", step,
+                    float(metrics["loss"]), float(metrics.get("acc", 0.0)),
+                )
+            history.append({k: float(v) for k, v in metrics.items()})
+            for cb in callbacks:
+                cb(step, params, metrics)
+        # bake masks in (deploy form)
+        if prune_state is not None:
+            params = pruning.apply_masks(params, prune_state)
+        return params, prune_state, history
+
+    # ---------------- phase 2 ----------------
+    def phase2(self, params, data, log_every: int = 50):
+        """Freeze everything except the off-ramp; train off-ramps at every
+        layer (DeeBERT).  Requires early_exit enabled + albert-family model."""
+        assert "offramp" in params, "phase2 needs early-exit off-ramp params"
+        model = self.model
+        opt_state = adamw_init(params["offramp"])
+
+        @jax.jit
+        def step_fn(offramp, opt_state, frozen, batch):
+            def inner(oramp):
+                p = dict(frozen, offramp=oramp)
+                out = model.apply_train(p, batch)
+                return losses_mod.offramp_loss(out.all_cls_logits, batch["labels"]), out
+
+            (loss, out), grads = jax.value_and_grad(inner, has_aux=True)(offramp)
+            offramp, opt_state, om = adamw_update(grads, opt_state, offramp, self.tcfg.opt)
+            return offramp, opt_state, {"loss": loss, **om}
+
+        frozen = {k: v for k, v in params.items() if k != "offramp"}
+        offramp = params["offramp"]
+        history = []
+        for step in range(self.tcfg.phase2_steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(10_000 + step).items() if k != "signal_ratio"}
+            offramp, opt_state, metrics = step_fn(offramp, opt_state, frozen, batch)
+            if step % log_every == 0:
+                logger.info("phase2 step=%d loss=%.4f", step, float(metrics["loss"]))
+            history.append({k: float(v) for k, v in metrics.items()})
+        return dict(frozen, offramp=offramp), history

@@ -1,0 +1,21 @@
+# NOTE: no XLA_FLAGS here by design — unit tests see the 1 real CPU device.
+# Sharding/dry-run tests that need multiple devices spawn subprocesses with
+# --xla_force_host_platform_device_count set (see test_dryrun_small.py).
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

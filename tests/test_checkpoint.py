@@ -1,0 +1,94 @@
+"""Checkpointing: atomic commit, integrity, resume, GC, preemption, elastic."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,))},
+        "opt": {"m": jnp.ones((8, 4)), "count": jnp.array(7, jnp.int32)},
+    }
+
+
+class TestSaveRestore:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        save_checkpoint(str(tmp_path), 10, t)
+        restored, manifest = restore_checkpoint(str(tmp_path), t)
+        assert manifest["step"] == 10
+        for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_pointer(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        save_checkpoint(str(tmp_path), 5, _tree(1))
+        assert latest_step(str(tmp_path)) == 5
+
+    def test_integrity_check(self, tmp_path):
+        save_checkpoint(str(tmp_path), 3, _tree())
+        npz = os.path.join(str(tmp_path), "step_00000003", "arrays.npz")
+        with open(npz, "r+b") as f:
+            f.seek(100)
+            f.write(b"\xde\xad")
+        with pytest.raises(IOError):
+            restore_checkpoint(str(tmp_path), _tree())
+
+    def test_missing_key_detected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 3, {"a": jnp.zeros(3)})
+        with pytest.raises(KeyError):
+            restore_checkpoint(str(tmp_path), {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+    def test_elastic_dtype_cast(self, tmp_path):
+        """Mesh-elastic restore recasts to the target tree's dtype (e.g. a
+        bf16 run restoring an fp32-written checkpoint)."""
+        t = {"w": jnp.ones((4, 4), jnp.float32)}
+        save_checkpoint(str(tmp_path), 1, t)
+        target = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+        restored, _ = restore_checkpoint(str(tmp_path), target)
+        assert restored["w"].dtype == jnp.bfloat16
+
+    def test_no_partial_checkpoint_visible(self, tmp_path):
+        """A .tmp dir must never be considered a checkpoint."""
+        os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+        assert latest_step(str(tmp_path)) is None
+
+
+class TestManager:
+    def test_cadence_and_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), save_every=2, keep=2)
+        for step in range(1, 8):
+            mgr.maybe_save(step, _tree(step))
+        dirs = sorted(d for d in os.listdir(str(tmp_path)) if d.startswith("step_"))
+        assert len(dirs) == 2  # GC keeps 2
+        assert mgr.latest_step() == 6
+
+    def test_preemption_forces_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), save_every=1000)
+        mgr.simulate_preemption()
+        assert mgr.preempted
+        path = mgr.maybe_save(3, _tree())
+        assert path is not None and mgr.latest_step() == 3
+        assert not mgr.preempted  # cleared after save
+
+    def test_resume_matches(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), save_every=1)
+        t = _tree(9)
+        mgr.maybe_save(4, t)
+        restored, manifest = mgr.restore_latest(t)
+        assert manifest["step"] == 4
+        np.testing.assert_array_equal(
+            np.asarray(t["params"]["w"]), np.asarray(restored["params"]["w"])
+        )

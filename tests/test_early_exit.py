@@ -1,0 +1,104 @@
+"""Entropy-based early exit (§III-A): mode equivalence + threshold semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import early_exit as ee
+
+
+def _setup(d=16, C=3, L=6, B=4, S=8, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    offramp = ee.init_offramp(rng, d, C)
+    ws = jax.random.normal(jax.random.PRNGKey(seed + 1), (L, d, d)) * (1.0 / np.sqrt(d))
+
+    def layer_fn(i, h):
+        w = ws[i]
+        return jnp.tanh(h @ w)
+
+    h0 = jax.random.normal(jax.random.PRNGKey(seed + 2), (B, S, d))
+    return layer_fn, offramp, h0, L
+
+
+class TestModes:
+    def test_all_layers_shapes(self):
+        layer_fn, offramp, h0, L = _setup()
+        logits, ent = ee.exit_all_layers(layer_fn, L, h0, offramp)
+        assert logits.shape == (L, 4, 3) and ent.shape == (L, 4)
+        assert np.isfinite(np.asarray(ent)).all()
+
+    def test_threshold_semantics(self):
+        layer_fn, offramp, h0, L = _setup()
+        _, ent = ee.exit_all_layers(layer_fn, L, h0, offramp)
+        # infinite threshold -> exit at layer 1; zero threshold -> last layer
+        exit_inf, _ = ee.exit_decisions(ent, np.inf)
+        exit_zero, _ = ee.exit_decisions(ent, 0.0)
+        assert (np.asarray(exit_inf) == 1).all()
+        assert (np.asarray(exit_zero) == L).all()
+
+    def test_monotone_in_threshold(self):
+        layer_fn, offramp, h0, L = _setup()
+        _, ent = ee.exit_all_layers(layer_fn, L, h0, offramp)
+        prev = None
+        for t in (0.01, 0.3, 0.6, 1.0, np.inf):
+            el = np.asarray(ee.exit_decisions(ent, t)[0])
+            if prev is not None:
+                assert (el <= prev).all()
+            prev = el
+
+    def test_while_loop_matches_all_layers(self):
+        layer_fn, offramp, h0, L = _setup()
+        logits_all, ent = ee.exit_all_layers(layer_fn, L, h0, offramp)
+        threshold = float(np.median(np.asarray(ent)))
+        exit_layer, _ = ee.exit_decisions(ent, threshold)
+        sel = ee.select_exit_logits(logits_all, exit_layer)
+        for b in range(h0.shape[0]):
+            lg, el, e = ee.exit_while_loop(
+                lambda i, h: layer_fn(i, h[None])[0], L, h0[b], offramp, threshold
+            )
+            assert int(el) == int(exit_layer[b])
+            np.testing.assert_allclose(np.asarray(lg), np.asarray(sel[b]), atol=1e-5)
+
+    def test_batched_masked_matches_all_layers(self):
+        layer_fn, offramp, h0, L = _setup()
+        logits_all, ent = ee.exit_all_layers(layer_fn, L, h0, offramp)
+        threshold = float(np.median(np.asarray(ent)))
+        exit_layer, _ = ee.exit_decisions(ent, threshold)
+        lg, el = ee.exit_batched_masked(layer_fn, L, h0, offramp, threshold)
+        np.testing.assert_array_equal(np.asarray(el), np.asarray(exit_layer))
+        sel = ee.select_exit_logits(logits_all, exit_layer)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(sel), atol=1e-5)
+
+    def test_runtime_savings_eq2(self):
+        el = jnp.array([6, 6, 6, 6])
+        assert abs(float(ee.runtime_savings(el, 12)) - 0.5) < 1e-6
+        assert abs(ee.ee_perf(0.9, 0.5) - 1.8) < 1e-9
+
+
+class TestTokenLevelExit:
+    """Beyond-paper CALM-style per-token exit for decoder LMs."""
+
+    def _model(self):
+        import dataclasses
+        from repro.configs.base import get_smoke_config
+        from repro.models.model import build_model
+
+        cfg = dataclasses.replace(
+            get_smoke_config("deepseek_7b"), dtype="float32", remat_policy="none"
+        )
+        m = build_model(cfg)
+        params = m.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+        return m, params, toks, cfg
+
+    def test_zero_threshold_equals_full_forward(self):
+        m, params, toks, cfg = self._model()
+        logits, exit_layer = m.forward_token_exit(params, toks, threshold=0.0)
+        full = m.apply_train(params, {"tokens": toks}).logits
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full), atol=1e-5)
+        assert (np.asarray(exit_layer) == cfg.n_layers).all()
+
+    def test_inf_threshold_exits_first_layer(self):
+        m, params, toks, cfg = self._model()
+        logits, exit_layer = m.forward_token_exit(params, toks, threshold=np.inf)
+        assert (np.asarray(exit_layer) == 1).all()
+        assert np.isfinite(np.asarray(logits)).all()

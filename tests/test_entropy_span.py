@@ -1,0 +1,86 @@
+"""Entropy (Eq. 1/4) and adaptive attention span (§III-B) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.adaptive_span import (
+    active_head_indices,
+    clamp_spans,
+    hard_spans,
+    span_flop_factor,
+    span_loss,
+    span_soft_mask,
+)
+from repro.core.entropy import entropy_from_logits
+
+
+class TestEntropy:
+    @given(st.integers(2, 64), st.floats(0.1, 50.0))
+    def test_bounds(self, n, scale):
+        x = jax.random.normal(jax.random.PRNGKey(n), (8, n)) * scale
+        h = np.asarray(entropy_from_logits(x))
+        assert (h >= 0).all()
+        assert (h <= np.log(n) + 1e-5).all()
+
+    def test_uniform_is_log_n(self):
+        h = entropy_from_logits(jnp.zeros((3, 7)))
+        np.testing.assert_allclose(np.asarray(h), np.log(7), rtol=1e-6)
+
+    def test_confident_is_zero(self):
+        x = jnp.array([[100.0, 0.0, 0.0]])
+        assert float(entropy_from_logits(x)[0]) < 1e-4
+
+    def test_matches_definition(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, 10)) * 3
+        p = jax.nn.softmax(x, axis=-1)
+        ref = -jnp.sum(p * jnp.log(p + 1e-30), axis=-1)
+        np.testing.assert_allclose(
+            np.asarray(entropy_from_logits(x)), np.asarray(ref), atol=1e-5
+        )
+
+    def test_shift_invariant(self):
+        """The max-trick form must be invariant to logit shifts (incl. huge)."""
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 5))
+        h1 = entropy_from_logits(x)
+        h2 = entropy_from_logits(x + 1e4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+
+
+class TestSpan:
+    def test_soft_mask_range_and_shape(self):
+        z = jnp.array([0.0, 16.0, 128.0])
+        m = span_soft_mask(z, 32, 32, ramp=8, causal=False)
+        assert m.shape == (3, 32, 32)
+        assert float(m.min()) >= 0 and float(m.max()) <= 1
+
+    def test_mask_monotone_in_distance(self):
+        z = jnp.array([10.0])
+        m = np.asarray(span_soft_mask(z, 1, 64, ramp=8, causal=False))[0, 0]
+        assert (np.diff(m) <= 1e-7).all()  # decays away from the query
+
+    def test_causal_future_zero(self):
+        z = jnp.array([100.0])
+        m = np.asarray(span_soft_mask(z, 8, 8, ramp=4, causal=True))[0]
+        assert (m[np.triu_indices(8, 1)] == 0).all()
+
+    def test_hard_spans_paper_table1(self):
+        """MNLI learned spans from paper Table I — 8/12 heads off."""
+        z = jnp.array([20, 0.1, 0.2, 0, 0, 0.3, 36, 81, 0, 0.4, 0, 10.0])
+        s = hard_spans(z)
+        assert (s == np.array([20, 0, 0, 0, 0, 0, 36, 81, 0, 0, 0, 10])).all()
+        idx, window = active_head_indices(s)
+        assert list(idx) == [0, 6, 7, 11] and window == 81
+
+    def test_flop_factor_matches_paper(self):
+        """Paper: MNLI spans give ~1.22x FLOP reduction on attention-score
+        work at S=128... the factor here is score-FLOPs retained."""
+        spans = [20, 0, 0, 0, 0, 0, 36, 81, 0, 0, 0, 10]
+        f = span_flop_factor(spans, 12, 128)
+        assert 0.05 < f < 0.15  # 147/1536 ~= 0.096 of dense score FLOPs
+
+    def test_span_loss_and_clamp(self):
+        z = jnp.array([-5.0, 300.0])
+        zc = clamp_spans(z, 128)
+        assert float(zc[0]) == 0.0 and float(zc[1]) == 128.0
+        assert float(span_loss(jnp.array([64.0]), 128, 1.0)) == 0.5

@@ -1,0 +1,147 @@
+"""Per-arch smoke tests (reduced configs, one forward + decode step on CPU,
+shape + finiteness asserts) and sequence-mixer equivalence properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models import mamba2, rwkv6
+from repro.models.model import build_model, count_params
+
+
+def _cpu_cfg(arch):
+    return dataclasses.replace(
+        get_smoke_config(arch), dtype="float32", remat_policy="none"
+    )
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["enc_input"] = (
+            jax.random.normal(rng, (B, cfg.enc_seq_len, cfg.d_model)) * 0.1
+        )
+    if cfg.family == "vlm":
+        batch["image_embeds"] = (
+            jax.random.normal(rng, (B, cfg.n_image_tokens, cfg.d_model)) * 0.1
+        )
+    if cfg.num_classes:
+        batch["labels"] = jax.random.randint(rng, (B,), 0, cfg.num_classes)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + ("albert_base", "albert_edgebert"))
+def test_arch_smoke(arch):
+    cfg = _cpu_cfg(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    assert count_params(params) > 0
+    out = jax.jit(model.apply_train)(params, _batch(cfg))
+    lg = out.logits if out.logits is not None else out.cls_logits
+    assert lg is not None
+    assert np.isfinite(np.asarray(lg, np.float32)).all(), f"{arch}: non-finite"
+    if out.logits is not None:
+        assert out.logits.shape[-1] == cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_110b", "zamba2_1p2b", "rwkv6_7b", "whisper_medium"])
+def test_decode_consistency(arch):
+    """prefill(prompt) + decode_step(token) logits == full forward logits at
+    the same position (cache path correctness)."""
+    cfg = _cpu_cfg(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    B, S = 2, 24
+    batch = _batch(cfg, B, S, seed=2)
+    tokens = batch["tokens"]
+    out = model.apply_train(params, batch)
+
+    cache = model.init_cache(B, 64)
+    aux = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    lg_prefill, cache = model.prefill(params, tokens[:, : S - 1], cache, aux=aux or None)
+    # prefill's last-token logits must match forward logits at S-2
+    np.testing.assert_allclose(
+        np.asarray(lg_prefill[:, 0]), np.asarray(out.logits[:, S - 2]),
+        atol=2e-2, rtol=2e-2,
+    )
+    lg_dec, cache = model.decode_step(params, cache, tokens[:, S - 1 :], S - 1)
+    np.testing.assert_allclose(
+        np.asarray(lg_dec[:, 0]), np.asarray(out.logits[:, S - 1]),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+class TestWKV6:
+    def test_chunked_equals_recurrent(self):
+        B, S, H, K = 2, 50, 3, 8
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        r, k, v = (jax.random.normal(ks[i], (B, S, H, K)) for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, K)) + 2.0)
+        u = jax.random.normal(ks[4], (H, K)) * 0.1
+        y1, s1 = rwkv6._wkv_recurrent(r, k, v, w, u)
+        y2, s2 = rwkv6._wkv_chunked(r, k, v, w, u, chunk=16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+    def test_state_carry(self):
+        """Splitting a sequence across two chunked calls == one call."""
+        B, S, H, K = 1, 32, 2, 8
+        ks = jax.random.split(jax.random.PRNGKey(4), 5)
+        r, k, v = (jax.random.normal(ks[i], (B, S, H, K)) for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, K)) + 2.0)
+        u = jax.random.normal(ks[4], (H, K)) * 0.1
+        y_full, s_full = rwkv6._wkv_chunked(r, k, v, w, u, chunk=8)
+        y1, s1 = rwkv6._wkv_chunked(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u, 8)
+        y2, s2 = rwkv6._wkv_chunked(
+            r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, 8, init_state=s1
+        )
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-4
+        )
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+class TestSSD:
+    def test_chunked_equals_stepwise(self):
+        B, S, H, P, N = 2, 29, 3, 8, 6
+        ks = jax.random.split(jax.random.PRNGKey(5), 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (B, S, N))
+        Cm = jax.random.normal(ks[4], (B, S, N))
+        y1, f1 = mamba2._ssd_chunked(x, dt, a, Bm, Cm, chunk=8)
+        st = jnp.zeros((B, H, P, N))
+        ys = []
+        for t in range(S):
+            st, y = mamba2._ssd_step(st, x[:, t], dt[:, t], a, Bm[:, t], Cm[:, t])
+            ys.append(y)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(jnp.stack(ys, 1)), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(f1), np.asarray(st), atol=1e-4)
+
+
+def test_albert_weight_sharing():
+    """ALBERT: one shared layer — param count independent of depth."""
+    cfg4 = _cpu_cfg("albert_base")
+    cfg8 = dataclasses.replace(cfg4, n_layers=8)
+    p4 = build_model(cfg4).init_params(jax.random.PRNGKey(0))
+    p8 = build_model(cfg8).init_params(jax.random.PRNGKey(0))
+    assert count_params(p4) == count_params(p8)
+
+
+def test_span_changes_attention():
+    """Enabling small spans changes ALBERT outputs (mask actually applies)."""
+    cfg = _cpu_cfg("albert_edgebert")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 32, seed=6)
+    out1 = model.apply_train(params, batch)
+    p2 = dict(params, span_z=jnp.full_like(params["span_z"], 1.0))
+    out2 = model.apply_train(p2, batch)
+    a = np.asarray(out1.all_cls_logits if out1.all_cls_logits is not None else out1.cls_logits)
+    b = np.asarray(out2.all_cls_logits if out2.all_cls_logits is not None else out2.cls_logits)
+    assert not np.allclose(a, b)

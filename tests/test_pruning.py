@@ -1,0 +1,88 @@
+"""Movement + magnitude pruning (§III-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pruning
+
+
+class TestMasks:
+    def test_magnitude_mask_sparsity(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        m = np.asarray(pruning.magnitude_mask(w, 0.75))
+        assert abs(m.mean() - 0.25) < 0.02
+        # surviving weights are the largest
+        kept = np.abs(np.asarray(w))[m == 1]
+        dropped = np.abs(np.asarray(w))[m == 0]
+        assert kept.min() >= dropped.max() - 1e-6
+
+    def test_zero_sparsity_keeps_all(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+        m = np.asarray(pruning.magnitude_mask(w, 0.0))
+        assert m.mean() == 1.0
+
+    def test_block_mask_structure(self):
+        """block_size>1 prunes whole (b,b) tiles — TPU-structured mode."""
+        w = jax.random.normal(jax.random.PRNGKey(2), (64, 64))
+        m = np.asarray(pruning.magnitude_mask(w, 0.5, block_size=16))
+        blocks = m.reshape(4, 16, 4, 16).transpose(0, 2, 1, 3).reshape(16, 256)
+        assert set(np.unique(blocks.mean(axis=1))) <= {0.0, 1.0}
+
+    def test_schedule_cubic(self):
+        s0 = float(pruning.sparsity_schedule(0, 0.8, 0, 100))
+        s50 = float(pruning.sparsity_schedule(50, 0.8, 0, 100))
+        s100 = float(pruning.sparsity_schedule(100, 0.8, 0, 100))
+        s200 = float(pruning.sparsity_schedule(200, 0.8, 0, 100))
+        assert s0 == 0.0 and abs(s100 - 0.8) < 1e-6 and s200 == s100
+        assert s50 > 0.8 / 2  # cubic front-loads sparsification
+
+
+class TestMovement:
+    def test_ste_gradients(self):
+        """dL/dscores = dL/d(masked_w) * w  (straight-through)."""
+        w = jnp.array([[1.0, -2.0], [0.5, 3.0]])
+        s = jnp.array([[1.0, 4.0], [2.0, 3.0]])
+
+        def loss(w, s):
+            return jnp.sum(pruning.movement_masked_weight(w, s, 0.5) * 2.0)
+
+        gw, gs = jax.grad(loss, argnums=(0, 1))(w, s)
+        mask = np.asarray(pruning.topv_mask(s, 0.5))
+        np.testing.assert_allclose(np.asarray(gw), 2.0 * mask)
+        np.testing.assert_allclose(np.asarray(gs), 2.0 * np.asarray(w))
+
+    def test_movement_differs_from_magnitude(self):
+        """Movement keeps weights moving AWAY from zero even if small now."""
+        w = jnp.array([0.01, 1.0, -0.02, 0.5])
+        scores = jnp.array([10.0, -5.0, 8.0, -2.0])  # movement favors 0 and 2
+        mv = np.asarray(pruning.topv_mask(scores, 0.5))
+        mag = np.asarray(pruning.magnitude_mask(w, 0.5))
+        assert (mv != mag).any()
+        assert mv[0] == 1 and mv[2] == 1  # small-but-moving kept
+
+
+class TestTreePlumbing:
+    def _params(self):
+        k = jax.random.PRNGKey(3)
+        return {
+            "layers": {"attn": {"wq": jax.random.normal(k, (16, 16))}},
+            "norm1": {"scale": jnp.ones((16,))},
+            "offramp_cls_w": jax.random.normal(k, (16, 4)),
+        }
+
+    def test_excludes_norm_and_offramp(self):
+        """Paper §IV-B2: LN / off-ramp / classifier stay dense."""
+        p = self._params()
+        st = pruning.init_prune_state(p, "magnitude")
+        st = pruning.update_masks(p, st, 1000, "magnitude", 0.9, 0, 10)
+        masked = pruning.apply_masks(p, st)
+        assert np.asarray(masked["norm1"]["scale"]).all()  # untouched
+        assert (np.asarray(masked["offramp_cls_w"]) != 0).all()
+        assert (np.asarray(masked["layers"]["attn"]["wq"]) == 0).mean() > 0.8
+
+    def test_measured_sparsity(self):
+        p = self._params()
+        st = pruning.init_prune_state(p, "magnitude")
+        st = pruning.update_masks(p, st, 1000, "magnitude", 0.5, 0, 10)
+        m = pruning.measured_sparsity(p, st)
+        assert 0.4 < m["sparsity"] < 0.6

@@ -1,0 +1,75 @@
+"""End-to-end system test: the full EdgeBERT pipeline (paper Fig. 6) on CPU —
+phase-1 fine-tune with pruning+span, phase-2 off-ramp training, AdaptivFloat
+post-quantization, eNVM embedding storage, then early-exit serving — and the
+accuracy/latency bookkeeping the paper reports.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PruneConfig, SpanConfig, get_smoke_config
+from repro.core import envm, pruning
+from repro.core.adaptivfloat import AFFormat, quantize_pytree
+from repro.data.synthetic import SyntheticCLS
+from repro.models.model import build_model
+from repro.serving.engine import ClassifierServer, Request
+from repro.training.optim import AdamWConfig
+from repro.training.train_loop import EdgeBertTrainer, TrainerConfig
+
+
+def test_full_edgebert_pipeline():
+    cfg = get_smoke_config("albert_edgebert")
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="none")
+    cfg = cfg.with_edgebert(
+        prune=PruneConfig(enabled=True, method="magnitude", encoder_sparsity=0.4,
+                          embedding_sparsity=0.5, end_step=25, update_every=5),
+        span=SpanConfig(enabled=True, max_span=128, ramp=16, loss_coef=0.02,
+                        init_span=96.0),
+    )
+    model = build_model(cfg)
+    data = SyntheticCLS(cfg.vocab_size, 32, 8, num_classes=3, seed=0)
+    trainer = EdgeBertTrainer(
+        model,
+        TrainerConfig(phase1_steps=35, phase2_steps=25,
+                      opt=AdamWConfig(lr=2e-3, warmup_steps=3, total_steps=60)),
+    )
+
+    # phase 1: prune + learn spans
+    params = model.init_params(jax.random.PRNGKey(0))
+    params, prune_state, hist1 = trainer.phase1(params, data, log_every=1000)
+    assert pruning.measured_sparsity(params, prune_state)["sparsity"] > 0.3
+
+    # phase 2: off-ramp
+    params, hist2 = trainer.phase2(params, data)
+    assert np.isfinite(hist2[-1]["loss"])
+
+    # post-finetuning AdaptivFloat quantization (weights)
+    params_q = quantize_pytree(
+        params, AFFormat(8, 3),
+        predicate=lambda path, leaf: "norm" not in str(path).lower(),
+    )
+
+    # embeddings -> eNVM MLC2 round-trip (faults injected on stored codes)
+    emb = np.asarray(params_q["embed"]["tok"])
+    emb_readback, stats = envm.store_and_readback(emb, data_cell="MLC2", seed=1)
+    params_q = dict(params_q)
+    params_q["embed"] = dict(params_q["embed"], tok=jnp.asarray(emb_readback))
+
+    # early-exit serving on the deployed model
+    server = ClassifierServer(model, params_q, batch_lanes=4)
+    batch = data.batch(777)
+    for i in range(8):
+        server.submit(Request(uid=i, tokens=batch["tokens"][i]))
+    served = server.run()
+    assert served["sentences"] == 8
+    assert 1.0 <= served["avg_exit_layer"] <= cfg.n_layers
+
+    # deployed accuracy sanity: quantized+faulted model close to trained model
+    test_batch = {k: jnp.asarray(v) for k, v in data.batch(999).items()
+                  if k != "signal_ratio"}
+    out_f = model.apply_train(params, test_batch)
+    out_q = model.apply_train(params_q, test_batch)
+    acc = lambda o: float(jnp.mean((jnp.argmax(o.cls_logits, -1) == test_batch["labels"])))
+    assert acc(out_q) >= acc(out_f) - 0.25  # <1%-pt in the paper; slack on toy

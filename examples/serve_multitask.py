@@ -1,8 +1,12 @@
-"""Multi-task serving with eNVM-shared embeddings (paper §III-D / Fig. 11).
+"""Multi-task serving with eNVM-shared embeddings (paper §III-D / Fig. 11)
+and sentence-level DVFS (paper Alg. 1).
 
 One frozen, pruned embedding table serves N task-specific encoder+classifier
 weight sets; task switches never touch the embeddings (they live in on-chip
-ReRAM in the paper; here: a single shared array). Prints the power-on cost
+ReRAM in the paper; here: a single shared array).  Every server drains its
+queue through the fixed-shape continuation-batching engine with a latency-
+aware DVFS controller attached, so each task reports modeled accelerator
+energy at the prescribed target latency alongside the power-on cost
 advantage from the hardware model.
 
     PYTHONPATH=src python examples/serve_multitask.py
@@ -18,8 +22,9 @@ import numpy as np
 from repro.configs.base import get_smoke_config
 from repro.core import bitmask as bm
 from repro.data.synthetic import SyntheticCLS
-from repro.hwmodel.edgebert_accel import poweron_embedding_cost
+from repro.hwmodel.edgebert_accel import albert_layer_stats, poweron_embedding_cost
 from repro.models.model import build_model
+from repro.serving.dvfs import LatencyAwareDVFSController, no_early_exit_baseline
 from repro.serving.engine import MultiTaskRouter, Request
 
 cfg = dataclasses.replace(
@@ -29,10 +34,30 @@ model = build_model(cfg)
 
 # four "GLUE tasks": task-specific encoder/classifier, SHARED embeddings
 base = model.init_params(jax.random.PRNGKey(0))
+
+# pick an entropy threshold that actually spreads exits on these (untrained)
+# weights: the median off-ramp entropy of a dense profiling pass
+import jax.numpy as jnp
+
+_probe = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3)
+_out = model.apply_train(base, {"tokens": jnp.asarray(_probe.batch(0)["tokens"])})
+cfg = cfg.with_edgebert(
+    early_exit=dataclasses.replace(
+        cfg.edgebert.early_exit,
+        entropy_threshold=float(np.quantile(np.asarray(_out.all_entropies), 0.5)),
+    )
+)
+model = build_model(cfg)
 tasks = {}
 for i, task in enumerate(("mnli", "qqp", "sst2", "qnli")):
     tasks[task] = model.init_params(jax.random.PRNGKey(i))
-router = MultiTaskRouter(model, shared_embed=base["embed"], task_params=tasks)
+
+# latency-aware DVFS (Alg. 1): the target is the conventional full-model
+# latency, so every Joule below the no-early-exit baseline is pure win
+hw = albert_layer_stats(seq_len=32)
+hw.n_layers = cfg.n_layers
+dvfs = LatencyAwareDVFSController(hw, no_early_exit_baseline(hw)["latency_s"])
+router = MultiTaskRouter(model, shared_embed=base["embed"], task_params=tasks, dvfs=dvfs)
 
 data = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3)
 b = data.batch(0)
@@ -41,11 +66,16 @@ for i, task in enumerate(("mnli", "qqp", "sst2", "qnli")):
         router.submit(task, Request(uid=i * 4 + j, tokens=b["tokens"][(i * 4 + j) % 16]))
 
 stats = router.run_all()
+e_noee_each = dvfs.no_early_exit_baseline()["energy_j"]
 for task, st in stats.items():
+    e_noee = st["sentences"] * e_noee_each
     print(f"{task}: {st['sentences']} sentences, avg exit "
-          f"{st['avg_exit_layer']:.1f}/{cfg.n_layers}, savings {st['runtime_savings']:.0%}")
+          f"{st['avg_exit_layer']:.1f}/{cfg.n_layers}, savings {st['runtime_savings']:.0%}, "
+          f"energy {st['energy_j']*1e3:.2f}mJ ({e_noee / st['energy_j']:.1f}x vs no-early-exit, "
+          f"{st['deadline_misses']} deadline misses)")
 print(f"task switches: {router.switches}, embedding reloads: {router.embed_reloads} "
-      "(embeddings are eNVM-resident)")
+      "(embeddings are eNVM-resident); fused step traces/server: "
+      f"{[st['step_traces'] for st in stats.values()]}")
 
 enc = bm.encode(np.asarray(base["embed"]["tok"]))
 s = bm.storage_bytes(enc, value_bits=8)

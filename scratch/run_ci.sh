@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 CI: unit-test suite + a DVFS-benchmark smoke pass.
+#
+#   bash scratch/run_ci.sh
+#
+# The suite must COLLECT cleanly with or without `hypothesis` installed
+# (property tests skip when it's absent — see tests/hypothesis_compat.py),
+# and the DVFS smoke pass asserts the paper's headline result end-to-end:
+# lower energy than the no-early-exit baseline at equal target latency, with
+# the fused engine step compiling exactly once for the whole queue drain.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q
+tier1=$?
+
+echo "== bench_dvfs --smoke =="
+python benchmarks/bench_dvfs.py --smoke
+smoke=$?
+
+echo "== summary: tier1=$tier1 smoke=$smoke =="
+exit $(( tier1 || smoke ))

@@ -17,10 +17,11 @@ Execution modes (DESIGN.md §2):
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.entropy import entropy_from_logits
 
@@ -175,6 +176,69 @@ def exit_batched_masked(
     )
     (h, done, logits, exit_layer), _ = jax.lax.scan(body, init, jnp.arange(n_layers))
     return logits, exit_layer
+
+
+# ---------------------------------------------------------------------------
+# Exit-layer prediction (paper Alg. 1: LUT trained offline, indexed by the
+# first off-ramp's entropy — the signal driving sentence-level DVFS)
+# ---------------------------------------------------------------------------
+
+
+class ExitPredictor(NamedTuple):
+    """Binned LUT: first-off-ramp entropy -> expected total exit layer.
+
+    Mirrors the ASIC's small SRAM lookup table: ``bin_edges`` are the
+    programmable comparator thresholds, ``bin_exit`` the stored predictions.
+    """
+
+    bin_edges: np.ndarray    # [n_bins - 1] interior entropy bin edges
+    bin_exit: np.ndarray     # [n_bins] expected exit layer (1-based, float)
+
+
+def fit_exit_predictor(
+    first_layer_entropy: np.ndarray,
+    exit_layers: np.ndarray,
+    n_bins: int = 16,
+    quantile: Optional[float] = None,
+) -> ExitPredictor:
+    """Calibrate the LUT from a profiling run (dense all-layers forward).
+
+    ``quantile=None`` stores each bin's MEAN exit layer (minimum expected
+    energy); a quantile (e.g. 0.9 or 1.0) stores that quantile instead —
+    conservative prediction that trades energy for fewer latency-target
+    violations when a sentence runs deeper than its bin's average (the DVFS
+    controller escalates to max V/f past the predicted layer, which cannot
+    recapture time already spent at a slow operating point).
+
+    Empty bins are filled by interpolation between their filled neighbours so
+    ``predict_exit_layer`` is total over the observed entropy range.
+    """
+    e = np.asarray(first_layer_entropy, np.float64).ravel()
+    x = np.asarray(exit_layers, np.float64).ravel()
+    assert e.shape == x.shape and e.size > 0
+    lo, hi = float(e.min()), float(e.max())
+    if hi <= lo:
+        hi = lo + 1e-6
+    edges = np.linspace(lo, hi, n_bins + 1)[1:-1]
+    idx = np.digitize(e, edges)
+    mean = np.full(n_bins, np.nan)
+    for b in range(n_bins):
+        sel = idx == b
+        if sel.any():
+            mean[b] = (
+                x[sel].mean() if quantile is None else np.quantile(x[sel], quantile)
+            )
+    filled = ~np.isnan(mean)
+    centers = np.arange(n_bins, dtype=np.float64)
+    mean = np.interp(centers, centers[filled], mean[filled])
+    return ExitPredictor(bin_edges=edges, bin_exit=mean)
+
+
+def predict_exit_layer(predictor: ExitPredictor, entropy: float) -> float:
+    """Expected total exit layer (1-based) for a sentence whose FIRST
+    off-ramp entropy is ``entropy``."""
+    b = int(np.digitize([float(entropy)], predictor.bin_edges)[0])
+    return float(predictor.bin_exit[b])
 
 
 def runtime_savings(exit_layers: jnp.ndarray, n_layers: int) -> jnp.ndarray:

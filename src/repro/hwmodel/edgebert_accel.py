@@ -27,6 +27,8 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 CLOCK_HZ = 500e6
+VDD_NOM = 0.80               # 12nm nominal supply; the DVFS table (serving/
+                             # dvfs.py) scales 0.50-0.80V via the on-die LDO
 
 # ---- power (mW) anchors at n=16 [TableV] ----
 PU_DATAPATH_MW_N16 = 40.26
@@ -102,18 +104,12 @@ def pu_area_mm2(n: int) -> float:
     return PU_AREA_N16 * (n / 16) ** 2
 
 
-def simulate(
-    stats: WorkloadStats,
-    n: int = 16,
-    *,
-    use_early_exit: bool = True,
-    use_span: bool = True,
-    use_sparsity: bool = True,
-) -> AccelReport:
-    """Latency + energy for one sentence inference."""
-    layers = stats.avg_exit_layer if use_early_exit else stats.n_layers
+def layer_cycles(stats: WorkloadStats, n: int = 16, *, use_span: bool = True) -> float:
+    """Accelerator cycles for ONE encoder layer pass (frequency-independent).
 
-    # --- per layer-pass compute ---
+    This is the quantity the DVFS controller needs: at operating frequency f
+    the per-layer latency is ``layer_cycles / f`` regardless of voltage.
+    """
     mm_flops = stats.matmul_flops
     score_flops = stats.attention_score_flops
     if use_span:
@@ -125,12 +121,17 @@ def simulate(
     macs_per_layer = (mm_flops + score_flops) / 2.0
     matmul_cycles = macs_per_layer / (n ** 2)
     vector_cycles = stats.vector_elems / VPU_LANES
-    entropy_cycles = (3 * 32 + stats.seq_len) / VPU_LANES  # Eq. 4 on C classes
-    layer_cycles = matmul_cycles + vector_cycles + entropy_cycles + GB_CONTROL_CYCLES
-    total_cycles = layers * layer_cycles
-    latency = total_cycles / CLOCK_HZ
+    layer = matmul_cycles + vector_cycles + entropy_cycles(stats) + GB_CONTROL_CYCLES
+    return layer
 
-    # --- power/energy ---
+
+def entropy_cycles(stats: WorkloadStats) -> float:
+    """GB-unit cycles for one off-ramp softmax+entropy evaluation (Eq. 4)."""
+    return (3 * 32 + stats.seq_len) / VPU_LANES
+
+
+def accel_power_mw(stats: WorkloadStats, n: int = 16, *, use_sparsity: bool = True) -> Dict[str, float]:
+    """Total + per-block power at the NOMINAL operating point (VDD_NOM, CLOCK_HZ)."""
     pu_mw = pu_power_mw(n)
     # SRAM power scales with the streaming duty cycle (reads per cycle ~ n)
     sram_mw = SRAM_MW * (0.5 + 0.5 * n / 16)
@@ -143,6 +144,65 @@ def simulate(
     else:
         pu_mw_eff = pu_mw
     total_mw = pu_mw_eff + GB_PERIPH_MW + sram_mw + RERAM_MW
+    return {
+        "pu_datapath": pu_mw_eff,
+        "gb_periph": GB_PERIPH_MW,
+        "sram": sram_mw,
+        "reram": RERAM_MW,
+        "total": total_mw,
+    }
+
+
+def layer_energy_j(
+    stats: WorkloadStats,
+    n: int = 16,
+    *,
+    vdd: float = VDD_NOM,
+    use_span: bool = True,
+    use_sparsity: bool = True,
+) -> float:
+    """Energy of ONE layer pass at supply ``vdd``.
+
+    Dynamic CMOS energy per cycle scales ~VDD^2 and is frequency-independent
+    (E = P*t = [P0 * (V/V0)^2 * f/f0] * [cycles/f] = E0 * (V/V0)^2), which is
+    exactly the knob the paper's sentence-level DVFS exploits: finishing *just
+    in time* at a lower voltage is quadratically cheaper than racing to idle.
+    """
+    cyc = layer_cycles(stats, n, use_span=use_span)
+    p_nom_mw = accel_power_mw(stats, n, use_sparsity=use_sparsity)["total"]
+    return p_nom_mw * 1e-3 * (cyc / CLOCK_HZ) * (vdd / VDD_NOM) ** 2
+
+
+def simulate(
+    stats: WorkloadStats,
+    n: int = 16,
+    *,
+    use_early_exit: bool = True,
+    use_span: bool = True,
+    use_sparsity: bool = True,
+    freq_hz: float = CLOCK_HZ,
+    vdd: float = VDD_NOM,
+) -> AccelReport:
+    """Latency + energy for one sentence inference at an operating point.
+
+    ``freq_hz``/``vdd`` default to the nominal design point [TableV]; passing
+    a DVFS table entry scales latency as cycles/f and power as (V/V0)^2 * f/f0
+    (so energy scales purely as (V/V0)^2).
+    """
+    layers = stats.avg_exit_layer if use_early_exit else stats.n_layers
+
+    per_layer = layer_cycles(stats, n, use_span=use_span)
+    total_cycles = layers * per_layer
+    latency = total_cycles / freq_hz
+
+    # --- power/energy ---
+    op_scale = (vdd / VDD_NOM) ** 2 * (freq_hz / CLOCK_HZ)
+    power = accel_power_mw(stats, n, use_sparsity=use_sparsity)
+    pu_mw_eff = power["pu_datapath"] * op_scale
+    sram_mw = power["sram"] * op_scale
+    gb_mw = GB_PERIPH_MW * op_scale
+    reram_mw = RERAM_MW * op_scale
+    total_mw = power["total"] * op_scale
     energy = total_mw * 1e-3 * latency
 
     return AccelReport(
@@ -150,9 +210,9 @@ def simulate(
         energy_j=energy,
         breakdown_mw={
             "pu_datapath": pu_mw_eff,
-            "gb_periph": GB_PERIPH_MW,
+            "gb_periph": gb_mw,
             "sram": sram_mw,
-            "reram": RERAM_MW,
+            "reram": reram_mw,
             "total": total_mw,
         },
         area_mm2={
@@ -162,7 +222,7 @@ def simulate(
             "reram": RERAM_AREA,
             "total": pu_area_mm2(n) + GB_AREA + SRAM_AREA + RERAM_AREA,
         },
-        entropy_overhead_frac=(layers * entropy_cycles) / total_cycles,
+        entropy_overhead_frac=(layers * entropy_cycles(stats)) / total_cycles,
     )
 
 

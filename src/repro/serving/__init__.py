@@ -1,1 +1,10 @@
 from repro.serving.engine import ClassifierServer, DecoderServer, Request, MultiTaskRouter
+from repro.serving.dvfs import (
+    DEFAULT_DVFS_TABLE,
+    DVFSReport,
+    LatencyAwareDVFSController,
+    OperatingPoint,
+    calibrate_predictor,
+    default_albert_controller,
+    no_early_exit_baseline,
+)

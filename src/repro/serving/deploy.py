@@ -17,7 +17,7 @@ CPU here = interpret mode (correctness); on TPU the same calls emit Mosaic.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -62,6 +62,9 @@ class DeployedAlbert:
     offramp: Dict[str, Any]
     spans: np.ndarray               # integer spans (registers)
     threshold: float
+    # off-ramp entropy traces of the most recent classify() batch, one list
+    # per sentence — replayed by the DVFS controller (Alg. 1)
+    last_entropy_traces: List[List[float]] = field(default_factory=list)
 
     # ------------------------------------------------------------- layers --
     def _ln(self, x, scale, bias):
@@ -104,7 +107,9 @@ class DeployedAlbert:
         """Early-exit classification. tokens [B, S] -> (logits [B,C], exit [B]).
 
         Layer-by-layer host loop (the accelerator's serial schedule): lanes
-        that clear the entropy threshold stop computing.
+        that clear the entropy threshold stop computing.  Each sentence's
+        off-ramp entropy trace is kept in ``self.last_entropy_traces`` so a
+        DVFS controller can replay Alg. 1 over it (``classify_with_dvfs``).
         """
         cfg = self.cfg
         h = jnp.take(self.embed_tok, tokens, axis=0)
@@ -116,6 +121,7 @@ class DeployedAlbert:
         done = np.zeros(B, bool)
         out_logits = np.zeros((B, cfg.edgebert.early_exit.num_classes), np.float32)
         exit_layer = np.full(B, cfg.n_layers, np.int32)
+        self.last_entropy_traces = [[] for _ in range(B)]
         h = jnp.asarray(h, jnp.float32)
         for li in range(cfg.n_layers):
             active = np.nonzero(~done)[0]
@@ -128,11 +134,26 @@ class DeployedAlbert:
             ent = np.asarray(ent)
             lg = np.asarray(logits)
             for j, i in enumerate(active):
+                self.last_entropy_traces[i].append(float(ent[j]))
                 if ent[j] < self.threshold or li == cfg.n_layers - 1:
                     done[i] = True
                     out_logits[i] = lg[j]
                     exit_layer[i] = li + 1
         return out_logits, exit_layer
+
+    def classify_with_dvfs(self, tokens: jnp.ndarray, controller):
+        """Kernel-path classification + per-sentence DVFS schedule (Alg. 1).
+
+        Returns (logits [B, C], exit_layer [B], reports: List[DVFSReport]) —
+        the deployed counterpart of the serving engine's DVFS telemetry, with
+        every hot op running on the Pallas kernels.
+        """
+        logits, exit_layer = self.classify(tokens)
+        reports = [
+            controller.sentence_report(trace, exit_layer=int(el))
+            for trace, el in zip(self.last_entropy_traces, exit_layer)
+        ]
+        return logits, exit_layer, reports
 
 
 def deploy_albert(

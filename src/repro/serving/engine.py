@@ -1,34 +1,49 @@
 """Serving engine: the system layer that converts EdgeBERT's per-sentence
 early exit into real throughput on batched hardware.
 
-* ``ClassifierServer`` — ALBERT-style classification with entropy early exit.
-  Runs the encoder LAYER-BY-LAYER over a batch of lanes; after each layer the
-  off-ramp entropy retires finished lanes and REFILLS them from the queue
-  (continuation batching).  Unlike the dense masked formulation, lanes never
-  idle: average depth/sentence ~ average exit layer, the multi-batch
-  generalization of the paper's single-stream latency saving.
-* ``DecoderServer`` — LM decode with KV cache, EOS retirement + refill, and
-  optional token-level entropy exit (beyond-paper CALM-style adaptation).
+* ``ClassifierServer`` — ALBERT-style classification with entropy early exit,
+  run as a FIXED-SHAPE, mask-vectorized continuation-batching engine.  The
+  server owns a static ``[lanes, S, H]`` hidden-state tensor plus an active
+  mask; one fused, jitted step runs encoder layer -> off-ramp logits ->
+  entropy -> retire-mask.  Traced shapes never change, so jit compiles the
+  step EXACTLY ONCE per lane count (the previous engine concatenated a
+  variable-size active-lane set every layer, recompiling for every distinct
+  active count).  Retired lanes are refilled from the queue between steps
+  (continuation batching), so lanes never idle: average depth/sentence ~
+  average exit layer — the multi-batch generalization of the paper's
+  single-stream latency saving.  An optional ``LatencyAwareDVFSController``
+  (serving/dvfs.py, paper Alg. 1) converts each sentence's entropy trace into
+  a per-sentence (voltage, frequency) schedule and energy/latency report.
+* ``DecoderServer`` — LM decode with KV cache, EOS retirement + refill, and a
+  jitted fixed-shape prefill (masked single-lane cache merge) replacing the
+  old per-token Python prefill loop.
 * ``MultiTaskRouter`` — the paper's multi-task scenario: one shared (eNVM-
   resident) embedding + per-task encoder/classifier weights; switching tasks
   swaps only task weights, never embeddings (paper §III-D).
+
+Trace-count telemetry: every jitted function increments a host-side counter
+*inside its traced body*, i.e. the counter only advances when XLA actually
+retraces.  ``run()`` reports these counts (``step_traces`` must stay 1 across
+a full queue drain) so recompile regressions fail loudly in tests.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.util import logger
-from repro.configs.base import ModelConfig
-from repro.core.early_exit import OfframpParams, offramp_logits
+from repro.core.early_exit import offramp_logits
 from repro.core.entropy import entropy_from_logits
 from repro.models.model import Model
+
+if TYPE_CHECKING:  # typing-only: dvfs is not a runtime dependency of the engine
+    from repro.serving.dvfs import LatencyAwareDVFSController
 
 
 @dataclass
@@ -41,102 +56,182 @@ class Request:
     generated: List[int] = field(default_factory=list)
     submit_time: float = 0.0
     finish_time: float = 0.0
+    # per-layer off-ramp entropies observed while the sentence was in flight;
+    # the DVFS controller replays this trace through Alg. 1
+    entropy_trace: List[float] = field(default_factory=list)
+    energy_j: Optional[float] = None    # modeled accelerator energy (DVFS)
+    latency_s: Optional[float] = None   # modeled accelerator latency (DVFS)
+    op_vdd: Optional[float] = None      # selected operating point
+    op_freq_hz: Optional[float] = None
 
 
 # ===========================================================================
-# Classifier (early-exit) server
+# Classifier (early-exit) server — fixed-shape masked continuation batching
 # ===========================================================================
 
 
 class ClassifierServer:
-    def __init__(self, model: Model, params: Any, batch_lanes: int = 8):
+    """Continuation-batching early-exit classifier with static traced shapes.
+
+    The engine state is a dense ``[lanes, S, D]`` tensor; per-step work is
+    always the full lane set with an active mask, so the fused step function
+    has one trace per (lanes, S) shape.  ``layer_calls`` telemetry still
+    counts *active* lane-layer executions — the quantity the accelerator
+    would actually compute — so throughput accounting matches the paper's
+    runtime-savings form.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        batch_lanes: int = 8,
+        dvfs: Optional["LatencyAwareDVFSController"] = None,
+    ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.cfg = model.cfg
         self.threshold = model.cfg.edgebert.early_exit.entropy_threshold
+        self.dvfs = dvfs
         self.queue: deque[Request] = deque()
         self.done: Dict[int, Request] = {}
-        self._layer_calls = 0       # telemetry: total layer x lane executions
+        self._layer_calls = 0       # telemetry: total ACTIVE layer x lane executions
+        self._dense_steps = 0       # telemetry: fused steps (dense over lanes)
         self._sentences = 0
+        self._traces = {"embed": 0, "step": 0, "insert": 0}
 
-        lp = self.params["layer"]
-
-        @jax.jit
         def embed_fn(params, tokens):
+            self._traces["embed"] += 1          # advances only on retrace
             return model.embed(params, tokens)
 
-        @jax.jit
-        def layer_fn(params, h):
+        def step_fn(params, h, active, threshold):
+            """Fused: encoder layer -> off-ramp -> entropy -> retire mask.
+
+            h:      [lanes, S, D] static-shape hidden states
+            active: [lanes] bool — inactive lanes are frozen by the mask
+            """
+            self._traces["step"] += 1           # advances only on retrace
             span_z = model._span_for_layer(params, 0)
-            h2, _, _ = model._dense_layer_step(params["layer"], h, causal=False, span_z=span_z)
-            return h2
-
-        @jax.jit
-        def offramp_fn(params, h):
+            h_new, _, _ = model._dense_layer_step(
+                params["layer"], h, causal=False, span_z=span_z
+            )
+            h = jnp.where(active[:, None, None], h_new, h)
             lg = offramp_logits(h, model._offramp(params))
-            return lg, entropy_from_logits(lg)
+            ent = entropy_from_logits(lg)
+            retire = jnp.logical_and(active, ent < threshold)
+            return h, lg, ent, retire
 
-        self._embed = embed_fn
-        self._layer = layer_fn
-        self._offramp = offramp_fn
+        def insert_fn(h, lane, h_new):
+            self._traces["insert"] += 1         # advances only on retrace
+            return jax.lax.dynamic_update_slice_in_dim(h, h_new, lane, axis=0)
+
+        self._embed = jax.jit(embed_fn)
+        self._step = jax.jit(step_fn)
+        self._insert = jax.jit(insert_fn)
 
     def submit(self, req: Request):
         req.submit_time = time.time()
         self.queue.append(req)
 
+    # ------------------------------------------------------------- internals
+    def _refill(self, h, lane_req, lane_depth, active):
+        """Fill every free lane from the queue; returns the updated h."""
+        for i in range(self.lanes):
+            if lane_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                toks = jnp.asarray(req.tokens)[None]
+                h = self._insert(h, jnp.int32(i), self._embed(self.params, toks))
+                lane_req[i] = req
+                lane_depth[i] = 0
+                active[i] = True
+        return h
+
+    def _finish(self, req: Request, logits: np.ndarray, depth: int):
+        req.result = logits
+        req.exit_layer = depth
+        req.finish_time = time.time()
+        if self.dvfs is not None:
+            rep = self.dvfs.sentence_report(req.entropy_trace, exit_layer=depth)
+            req.energy_j = rep.energy_j
+            req.latency_s = rep.latency_s
+            req.op_vdd = rep.op.vdd
+            req.op_freq_hz = rep.op.freq_hz
+        self.done[req.uid] = req
+        self._sentences += 1
+
+    # ---------------------------------------------------------------- public
     def run(self) -> Dict[str, float]:
         """Drain the queue with continuation batching. Returns telemetry."""
-        S = None
-        lane_h: List[Optional[jnp.ndarray]] = [None] * self.lanes
+        if not self.queue:
+            return self.telemetry()
+        S = len(self.queue[0].tokens)
+        assert all(
+            len(r.tokens) == S for r in self.queue
+        ), "fixed-shape engine drains one sequence length per run()"
+        D = self.cfg.d_model
+        h = jnp.zeros((self.lanes, S, D), jnp.asarray(self.params["embed"]["tok"]).dtype)
+
         lane_req: List[Optional[Request]] = [None] * self.lanes
-        lane_depth = [0] * self.lanes
+        lane_depth = np.zeros(self.lanes, np.int32)
+        active = np.zeros(self.lanes, bool)
+        thr = jnp.float32(self.threshold)
 
-        def refill():
+        while self.queue or active.any():
+            h = self._refill(h, lane_req, lane_depth, active)
+            if not active.any():
+                break
+            h, lg, ent, retire = self._step(self.params, h, jnp.asarray(active), thr)
+            n_active = int(active.sum())
+            self._layer_calls += n_active
+            self._dense_steps += 1
+            lane_depth[active] += 1
+            ent_np = np.asarray(ent)
+            lg_np = np.asarray(lg)
+            retire_np = np.asarray(retire)
             for i in range(self.lanes):
-                if lane_req[i] is None and self.queue:
-                    req = self.queue.popleft()
-                    toks = jnp.asarray(req.tokens)[None]
-                    lane_h[i] = self._embed(self.params, toks)
-                    lane_req[i] = req
-                    lane_depth[i] = 0
-
-        refill()
-        while any(r is not None for r in lane_req) or self.queue:
-            active = [i for i in range(self.lanes) if lane_req[i] is not None]
-            if not active:
-                refill()
-                continue
-            h = jnp.concatenate([lane_h[i] for i in active], axis=0)
-            h = self._layer(self.params, h)
-            self._layer_calls += len(active)
-            lg, ent = self._offramp(self.params, h)
-            ent = np.asarray(ent)
-            lg = np.asarray(lg)
-            for j, i in enumerate(active):
-                lane_h[i] = h[j : j + 1]
-                lane_depth[i] += 1
+                if not active[i]:
+                    continue
                 req = lane_req[i]
-                if ent[j] < self.threshold or lane_depth[i] >= self.cfg.n_layers:
-                    req.result = lg[j]
-                    req.exit_layer = lane_depth[i]
-                    req.finish_time = time.time()
-                    self.done[req.uid] = req
-                    self._sentences += 1
+                req.entropy_trace.append(float(ent_np[i]))
+                if retire_np[i] or lane_depth[i] >= self.cfg.n_layers:
+                    self._finish(req, lg_np[i], int(lane_depth[i]))
                     lane_req[i] = None
-                    lane_h[i] = None
-            refill()
+                    active[i] = False
+        return self.telemetry()
 
+    def telemetry(self) -> Dict[str, float]:
         avg_exit = (
-            np.mean([r.exit_layer for r in self.done.values()]) if self.done else 0.0
+            float(np.mean([r.exit_layer for r in self.done.values()]))
+            if self.done
+            else 0.0
         )
-        return {
+        out = {
             "sentences": self._sentences,
             "layer_calls": self._layer_calls,
-            "avg_exit_layer": float(avg_exit),
+            "dense_steps": self._dense_steps,
+            "avg_exit_layer": avg_exit,
             "runtime_savings": 1.0 - avg_exit / self.cfg.n_layers,
+            "step_traces": self._traces["step"],
+            "embed_traces": self._traces["embed"],
+            "insert_traces": self._traces["insert"],
+            "lane_occupancy": (
+                self._layer_calls / (self._dense_steps * self.lanes)
+                if self._dense_steps
+                else 0.0
+            ),
         }
+        if self.dvfs is not None and self.done:
+            done = self.done.values()
+            out["energy_j"] = float(sum(r.energy_j or 0.0 for r in done))
+            out["modeled_latency_s"] = float(
+                max((r.latency_s or 0.0) for r in done)
+            )
+            out["deadline_misses"] = sum(
+                1 for r in done if (r.latency_s or 0.0) > self.dvfs.target_latency_s * (1 + 1e-9)
+            )
+        return out
 
 
 # ===========================================================================
@@ -160,12 +255,39 @@ class DecoderServer:
         self.eos_id = eos_id
         self.queue: deque[Request] = deque()
         self.done: Dict[int, Request] = {}
+        self._traces = {"decode": 0, "prefill": 0}
 
-        @jax.jit
         def decode_fn(params, cache, tokens, pos):
+            self._traces["decode"] += 1         # advances only on retrace
             return model.decode_step(params, cache, tokens, pos)
 
-        self._decode = decode_fn
+        def prefill_fn(params, cache, tokens, lane, length):
+            """Write one lane's prompt[:length-1] into the KV cache.
+
+            tokens: [max_seq] zero-padded prompt; lane/length: scalars.  The
+            prompt is decoded step-by-step in a fori_loop on a scratch cache,
+            then merged back under a lane one-hot so other lanes' cache rows
+            are untouched — the whole prefill is ONE fixed-shape trace instead
+            of a Python loop of per-token dispatches.
+            """
+            self._traces["prefill"] += 1        # advances only on retrace
+            lane_ids = jnp.arange(self.lanes)
+
+            def body(t, c):
+                tok = jnp.where(lane_ids == lane, tokens[t], 0)[:, None]
+                _, c = model.decode_step(params, c, tok, t)
+                return c
+
+            scratch = jax.lax.fori_loop(0, length - 1, body, cache)
+
+            def merge(new, old):
+                mask = (lane_ids == lane).reshape((1, self.lanes) + (1,) * (new.ndim - 2))
+                return jnp.where(mask, new, old)
+
+            return jax.tree_util.tree_map(merge, scratch, cache)
+
+        self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn)
 
     def submit(self, req: Request):
         req.submit_time = time.time()
@@ -180,30 +302,24 @@ class DecoderServer:
         cur_tok = np.zeros((self.lanes, 1), np.int32)
         steps = 0
 
-        def prefill_lane(i, req):
-            # prefill via stepwise decode of the prompt (lane-local positions)
-            nonlocal cache
-            for t, tok in enumerate(req.tokens):
-                logits, cache = self._decode(
-                    params, cache, jnp.asarray(_one_lane(cur_tok, i, tok)), int(t)
-                )
-            return logits
-
         # NOTE: per-lane positions differ; for simplicity this server steps all
-        # lanes in lock-step using the max position (correct because K/V for
-        # unwritten positions are zero-masked by kv_len bounds per lane is not
+        # lanes in lock-step using the max position.  Per-lane KV length is not
         # tracked — acceptable for the CPU demo; the multi-pod serving path
-        # uses uniform-length batches from the shape sheet).
+        # uses uniform-length batches from the shape sheet (see ROADMAP).
         while self.queue or any(r is not None for r in lane_req):
             for i in range(self.lanes):
                 if lane_req[i] is None and self.queue:
                     req = self.queue.popleft()
                     lane_req[i] = req
-                    # write prompt into lane i step by step
-                    for t, tok in enumerate(req.tokens[:-1]):
-                        one = np.zeros((self.lanes, 1), np.int32)
-                        one[i, 0] = tok
-                        _, cache = self._decode(params, cache, jnp.asarray(one), int(t))
+                    toks = np.zeros(self.max_seq, np.int32)
+                    toks[: len(req.tokens)] = req.tokens
+                    cache = self._prefill(
+                        params,
+                        cache,
+                        jnp.asarray(toks),
+                        jnp.int32(i),
+                        jnp.int32(len(req.tokens)),
+                    )
                     lane_pos[i] = len(req.tokens) - 1
                     cur_tok[i, 0] = req.tokens[-1]
             active = [i for i in range(self.lanes) if lane_req[i] is not None]
@@ -228,13 +344,12 @@ class DecoderServer:
                     if lane_req[i] is not None:
                         self.done[lane_req[i].uid] = lane_req[i]
                         lane_req[i] = None
-        return {"decode_steps": steps, "completed": len(self.done)}
-
-
-def _one_lane(cur: np.ndarray, i: int, tok: int) -> np.ndarray:
-    out = np.zeros_like(cur)
-    out[i, 0] = tok
-    return out
+        return {
+            "decode_steps": steps,
+            "completed": len(self.done),
+            "decode_traces": self._traces["decode"],
+            "prefill_traces": self._traces["prefill"],
+        }
 
 
 # ===========================================================================
@@ -250,7 +365,13 @@ class MultiTaskRouter:
     weights only; embedding reload cost is paid once at power-on.
     """
 
-    def __init__(self, model: Model, shared_embed: Any, task_params: Dict[str, Any]):
+    def __init__(
+        self,
+        model: Model,
+        shared_embed: Any,
+        task_params: Dict[str, Any],
+        dvfs: Optional["LatencyAwareDVFSController"] = None,
+    ):
         self.model = model
         self.shared_embed = shared_embed
         self.tasks: Dict[str, ClassifierServer] = {}
@@ -258,7 +379,7 @@ class MultiTaskRouter:
         self.embed_reloads = 1          # power-on load only
         for name, tp in task_params.items():
             params = dict(tp, embed=shared_embed)
-            self.tasks[name] = ClassifierServer(model, params)
+            self.tasks[name] = ClassifierServer(model, params, dvfs=dvfs)
 
     def submit(self, task: str, req: Request):
         self.tasks[task].submit(req)

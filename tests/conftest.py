@@ -7,11 +7,14 @@ import sys
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
-from hypothesis import settings
+# `hypothesis` is optional: property tests skip (not error) when it's absent.
+from hypothesis_compat import HAS_HYPOTHESIS, settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+if HAS_HYPOTHESIS:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, st
 
 from repro.core.adaptivfloat import (
     AFFormat,

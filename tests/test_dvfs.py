@@ -1,0 +1,154 @@
+"""Latency-aware sentence-level DVFS (paper Alg. 1) properties."""
+import numpy as np
+import pytest
+
+from repro.core.early_exit import (
+    ExitPredictor,
+    fit_exit_predictor,
+    predict_exit_layer,
+)
+from repro.hwmodel.edgebert_accel import VDD_NOM, albert_layer_stats
+from repro.serving.dvfs import (
+    DEFAULT_DVFS_TABLE,
+    LatencyAwareDVFSController,
+    OperatingPoint,
+    no_early_exit_baseline,
+)
+
+N_LAYERS = 12
+
+
+def _stats():
+    s = albert_layer_stats(seq_len=64)
+    s.n_layers = N_LAYERS
+    return s
+
+
+def _controller(target_mult=1.0, predictor=None):
+    """Controller whose target is `target_mult` x the full-model latency."""
+    target = no_early_exit_baseline(_stats())["latency_s"] * target_mult
+    return LatencyAwareDVFSController(_stats(), target, predictor=predictor)
+
+
+def _perfect_predictor(exit_layer: int) -> ExitPredictor:
+    """A LUT that always predicts `exit_layer`."""
+    return ExitPredictor(
+        bin_edges=np.array([]), bin_exit=np.array([float(exit_layer)])
+    )
+
+
+def _trace(exit_layer: int):
+    """Synthetic off-ramp entropy trace ending at `exit_layer`: entropy decays
+    toward the exit (the shape the paper's Fig. 4 thresholds act on)."""
+    return [1.0 * 0.8 ** i for i in range(exit_layer)]
+
+
+class TestController:
+    def test_meets_target_latency_without_predictor(self):
+        # no predictor -> conservative full-depth prediction -> max V/f -> the
+        # target (full-model latency) is met for every exit layer
+        c = _controller(1.0)
+        for exit_layer in (1, 4, 12):
+            r = c.sentence_report(_trace(exit_layer))
+            assert r.deadline_met
+            assert r.latency_s <= c.target_latency_s * (1 + 1e-9)
+
+    def test_meets_target_with_correct_prediction(self):
+        c = _controller(1.0, predictor=_perfect_predictor(6))
+        r = c.sentence_report(_trace(6))
+        assert r.deadline_met
+        assert r.exit_layer == 6 and r.predicted_exit == 6.0
+        # the selected point is slower than nominal: that's the DVFS win
+        assert r.op.freq_hz < c.max_op.freq_hz
+        assert r.escalated_layers == 0
+
+    def test_energy_monotone_as_budget_loosens(self):
+        trace = _trace(6)
+        energies = []
+        for mult in (1.0, 1.25, 1.5, 2.0, 3.0, 5.0, 10.0):
+            r = _controller(mult, predictor=_perfect_predictor(6)).sentence_report(trace)
+            assert r.deadline_met
+            energies.append(r.energy_j)
+        assert all(a >= b - 1e-18 for a, b in zip(energies, energies[1:])), energies
+
+    def test_max_freq_baseline_upper_bounds_controller(self):
+        for mult in (1.0, 2.0, 5.0):
+            for exit_layer in (1, 3, 9, 12):
+                for pred in (None, _perfect_predictor(exit_layer)):
+                    c = _controller(mult, predictor=pred)
+                    r = c.sentence_report(_trace(exit_layer))
+                    assert r.energy_j <= r.energy_max_freq_j * (1 + 1e-12)
+
+    def test_misprediction_escalates_to_max_point(self):
+        # predicted exit 4, actual exit 9: layers past the prediction run at
+        # the max point; overshoot is bounded by the escalated layers
+        c = _controller(1.5, predictor=_perfect_predictor(4))
+        r = c.sentence_report(_trace(9))
+        assert r.escalated_layers == 5
+        t_max = c.layer_time_s(c.max_op)
+        slow_budget = c.target_latency_s  # slow phase fits the target by design
+        assert r.latency_s <= slow_budget + r.escalated_layers * t_max + 1e-12
+
+    def test_select_op_is_slowest_sufficient(self):
+        c = _controller(1.0)
+        t_layer_max = c.layer_time_s(c.max_op)
+        # 2 remaining layers, budget of 8 max-speed layers -> f >= fmax/4
+        op = c.select_op(2.0, 8 * t_layer_max)
+        assert op.freq_hz >= 2.0 * c.cycles_per_layer / (8 * t_layer_max)
+        slower = [p for p in c.table if p.freq_hz < op.freq_hz]
+        for p in slower:
+            assert p.freq_hz < 2.0 * c.cycles_per_layer / (8 * t_layer_max)
+        # no budget left -> max point
+        assert c.select_op(2.0, 0.0) is c.max_op
+
+    def test_table_energy_monotone_in_voltage(self):
+        c = _controller(1.0)
+        energies = [c.layer_energy(op) for op in c.table]
+        assert all(a <= b + 1e-18 for a, b in zip(energies, energies[1:]))
+        # top of table is the nominal design point
+        assert c.max_op.vdd == VDD_NOM
+
+    def test_no_early_exit_baseline_shape(self):
+        c = _controller(1.0)
+        b = c.no_early_exit_baseline()
+        assert b["latency_s"] == pytest.approx(N_LAYERS * c.layer_time_s(c.max_op))
+        assert b["energy_j"] == pytest.approx(N_LAYERS * c.layer_energy(c.max_op))
+
+    def test_rejects_unsorted_voltage_table(self):
+        bad = (OperatingPoint(0.8, 100e6), OperatingPoint(0.5, 500e6))
+        with pytest.raises(AssertionError):
+            LatencyAwareDVFSController(_stats(), 1.0, table=bad)
+
+
+class TestExitPredictor:
+    def test_fit_recovers_monotone_mapping(self):
+        # low first-layer entropy -> early exit; high -> late (paper Fig. 4)
+        rng = np.random.default_rng(0)
+        ent = rng.uniform(0.0, 1.0, size=2000)
+        exits = np.clip(np.round(1 + 10 * ent + rng.normal(0, 0.3, 2000)), 1, 12)
+        p = fit_exit_predictor(ent, exits, n_bins=8)
+        lo = predict_exit_layer(p, 0.05)
+        hi = predict_exit_layer(p, 0.95)
+        assert lo < hi
+        assert abs(lo - 1.5) < 1.5 and abs(hi - 10.5) < 1.5
+
+    def test_quantile_one_is_conservative(self):
+        rng = np.random.default_rng(1)
+        ent = rng.uniform(0.0, 1.0, size=500)
+        exits = np.clip(np.round(1 + 10 * ent + rng.normal(0, 1.0, 500)), 1, 12)
+        mean_p = fit_exit_predictor(ent, exits, n_bins=4)
+        max_p = fit_exit_predictor(ent, exits, n_bins=4, quantile=1.0)
+        for e in (0.1, 0.5, 0.9):
+            assert predict_exit_layer(max_p, e) >= predict_exit_layer(mean_p, e)
+
+    def test_empty_bins_interpolated(self):
+        # two entropy clusters leave middle bins empty
+        ent = np.concatenate([np.full(50, 0.1), np.full(50, 0.9)])
+        exits = np.concatenate([np.full(50, 2.0), np.full(50, 10.0)])
+        p = fit_exit_predictor(ent, exits, n_bins=16)
+        mid = predict_exit_layer(p, 0.5)
+        assert 2.0 <= mid <= 10.0
+
+    def test_degenerate_single_value(self):
+        p = fit_exit_predictor(np.full(10, 0.5), np.full(10, 3.0), n_bins=4)
+        assert predict_exit_layer(p, 0.5) == pytest.approx(3.0)

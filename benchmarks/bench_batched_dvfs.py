@@ -1,0 +1,245 @@
+"""Shared-clock batched DVFS arbitration vs per-sentence replay.
+
+The EdgeBERT accelerator has ONE LDO/ADPLL pair, so a batched deployment
+cannot give every sentence its own (V, f) schedule: the clock is shared by
+all in-flight lanes.  This benchmark drains a mixed-length queue through the
+length-bucketed ``ClassifierServer`` and compares modeled accelerator energy
+at the SAME per-sentence target latency under four accountings:
+
+  * ``replay_max_vf``     — per-sentence race-to-idle: every sentence runs its
+    exit schedule at the maximum point (the only FEASIBLE per-sentence policy
+    on shared hardware, and the paper's latency-unbounded baseline);
+  * ``per_sentence_alg1`` — Alg. 1 replayed per sentence as if each owned the
+    clock.  INFEASIBLE on the real hardware (one LDO/ADPLL, no switching
+    cost) — the paper's single-stream accounting, reported for reference.
+    NOT a lower bound: Alg. 1 line 1 charges layer 1 at the maximum point
+    unconditionally, while the live arbiter budgets pre-prediction layers
+    at conservative-full-depth rate — identical at a slack-free target but
+    cheaper when the target has headroom, so the feasible shared clock can
+    legitimately undercut it;
+  * ``shared_clock``      — the ``BatchedDVFSArbiter``: ONE (V, f) decision
+    per fused step (max over per-lane required frequencies), misprediction
+    escalation, LDO/ADPLL switching stall charged on every point change;
+  * ``shared_clock_online`` — same arbiter but with NO offline calibration
+    pass: the controller's per-bin exit quantiles update online as sentences
+    retire (cold start predicts full depth, then tightens).
+
+At a slack-free target (``--target-mult 1.0``) the shared clock degenerates
+to race-to-idle — any lane predicted full-depth pins the single LDO at the
+maximum point, a hardware reality the per-sentence analysis hides.  With
+deployment-style headroom (default 1.5x the full-model latency) the arbiter
+recovers most of the per-sentence savings while staying feasible.
+
+Also regression-checks the bucketed engine's compile telemetry: the fused
+step must trace EXACTLY once per length bucket across the whole drain (the
+CI grep-gate in scratch/run_ci.sh parses the ``step_traces``/``bucket_count``
+pair emitted below).
+
+Usage:
+  python benchmarks/bench_batched_dvfs.py            # trained toy EdgeBERT
+  python benchmarks/bench_batched_dvfs.py --smoke    # untrained, CI-fast
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, trained_albert
+from repro.configs.base import get_smoke_config
+from repro.core.early_exit import OnlineExitCalibrator
+from repro.data.synthetic import SyntheticCLS
+from repro.hwmodel.edgebert_accel import albert_layer_stats
+from repro.models.model import build_model
+from repro.serving.dvfs import (
+    BatchedDVFSArbiter,
+    LatencyAwareDVFSController,
+    calibrate_predictor,
+    no_early_exit_baseline,
+)
+from repro.serving.engine import ClassifierServer, Request
+
+LANES = 4
+
+
+def _with_threshold(cfg, threshold: float):
+    return cfg.with_edgebert(
+        early_exit=dataclasses.replace(
+            cfg.edgebert.early_exit, entropy_threshold=float(threshold)
+        )
+    )
+
+
+def _setup(smoke: bool):
+    if smoke:
+        cfg = dataclasses.replace(
+            get_smoke_config("albert_edgebert"), dtype="float32", remat_policy="none"
+        )
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        data = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3, seed=0)
+    else:
+        model, params, _, data, cfg = trained_albert()
+    # spread exits across layers: threshold at the 30th pct of FIRST-off-ramp
+    # entropies -> ~30% exit at layer 1, the rest deeper
+    out = model.apply_train(params, {"tokens": jnp.asarray(data.batch(0)["tokens"])})
+    thr = float(np.quantile(np.asarray(out.all_entropies[0]), 0.3))
+    cfg = _with_threshold(cfg, thr)
+    model = build_model(cfg)
+    return model, params, cfg, data, thr
+
+
+def _mixed_queue(data, buckets, n_queue: int, seed: int = 0):
+    """Requests with lengths spread across (and inside) the buckets."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_queue):
+        b = data.batch(200 + i // data.global_batch)
+        toks = b["tokens"][i % data.global_batch]
+        bucket = buckets[i % len(buckets)]
+        length = int(rng.integers(max(4, bucket // 2 + 1), bucket + 1))
+        reqs.append(Request(uid=i, tokens=np.asarray(toks[:length], np.int32)))
+    return reqs
+
+
+def _drain(model, params, buckets, reqs, arbiter) -> dict:
+    server = ClassifierServer(
+        model, params, batch_lanes=LANES, arbiter=arbiter, buckets=buckets
+    )
+    for r in reqs:
+        server.submit(
+            Request(uid=r.uid, tokens=r.tokens, max_new_tokens=r.max_new_tokens)
+        )
+    stats = server.run()
+    stats["exits"] = [server.done[r.uid].exit_layer for r in reqs]
+    stats["traces"] = {r.uid: server.done[r.uid].entropy_trace for r in reqs}
+    return stats
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--smoke", action="store_true", help="untrained weights, CI-fast")
+    parser.add_argument("--queue", type=int, default=None, help="sentences to drain")
+    parser.add_argument(
+        "--target-mult", type=float, default=1.5,
+        help="per-sentence latency target as a multiple of the full-model "
+             "latency (1.0 = slack-free: the shared clock degenerates to "
+             "race-to-idle)",
+    )
+    args, _ = parser.parse_known_args()  # tolerate the suite runner's argv
+
+    model, params, cfg, data, thr = _setup(args.smoke)
+    n_queue = args.queue if args.queue is not None else (24 if args.smoke else 48)
+    assert n_queue > 0, "--queue must be positive"
+    buckets = (16, 32) if data.seq_len <= 32 else (32, 64, data.seq_len)
+
+    # the arbiter models the WORST-CASE bucket's per-layer cost (conservative:
+    # short-bucket sentences are overcharged a little, deadlines never under-
+    # budgeted); stats therefore use the largest bucket's sequence length
+    stats = albert_layer_stats(seq_len=max(buckets))
+    stats.n_layers = cfg.n_layers
+    target = no_early_exit_baseline(stats)["latency_s"] * args.target_mult
+
+    predictor = calibrate_predictor(
+        model,
+        params,
+        [data.batch(100 + i) for i in range(2 if args.smoke else 6)],
+        quantile=1.0,
+    )
+    reqs = _mixed_queue(data, buckets, n_queue)
+
+    # ---- shared clock, offline-calibrated LUT --------------------------------
+    ctrl = LatencyAwareDVFSController(stats, target, predictor=predictor)
+    arb = BatchedDVFSArbiter(ctrl)
+    st = _drain(model, params, buckets, reqs, arb)
+    e_shared = st["arb_energy_j"]
+    misses = st["deadline_misses"]
+
+    # ---- shared clock, ONLINE calibration (no offline profiling pass) -------
+    ctrl_on = LatencyAwareDVFSController(
+        stats, target,
+        online_calibrator=OnlineExitCalibrator(
+            cfg.n_layers, hi=float(np.log(cfg.edgebert.early_exit.num_classes)) + 0.1
+        ),
+    )
+    st_on = _drain(model, params, buckets, reqs, BatchedDVFSArbiter(ctrl_on))
+    e_online = st_on["arb_energy_j"]
+
+    # ---- per-sentence accountings over the SAME drain ------------------------
+    exits = st["exits"]
+    e_max_vf = float(sum(exits)) * ctrl.layer_energy(ctrl.max_op)
+    e_alg1 = float(
+        sum(
+            ctrl.sentence_report(st["traces"][i], exit_layer=exits[i]).energy_j
+            for i in range(n_queue)
+        )
+    )
+
+    emit(
+        "batched_dvfs_replay_max_vf", 0.0,
+        f"energy_j={e_max_vf:.4e};target_s={target:.4e};queue={n_queue}",
+    )
+    emit(
+        "batched_dvfs_per_sentence_alg1", 0.0,
+        f"energy_j={e_alg1:.4e};vs_max_vf={e_max_vf / e_alg1:.2f}x;feasible=no",
+    )
+    emit(
+        "batched_dvfs_shared_clock", 0.0,
+        f"energy_j={e_shared:.4e};vs_max_vf={e_max_vf / e_shared:.2f}x;"
+        f"op_switches={st['op_switches']};switch_energy_j={st['switch_energy_j']:.2e};"
+        f"deadline_misses={misses};avg_exit={np.mean(exits):.2f}/{cfg.n_layers}",
+    )
+    emit(
+        "batched_dvfs_shared_clock_online", 0.0,
+        f"energy_j={e_online:.4e};vs_max_vf={e_max_vf / e_online:.2f}x;"
+        f"deadline_misses={st_on['deadline_misses']};calibration=online",
+    )
+    emit(
+        "batched_engine_compiles", 0.0,
+        f"step_traces={st['step_traces']};bucket_count={len(buckets)};"
+        f"per_bucket={st['step_traces_per_bucket']};lane_occupancy={st['lane_occupancy']:.2f}",
+    )
+
+    ok = True
+    if e_shared >= e_max_vf:
+        print(
+            f"FAIL: shared-clock energy {e_shared:.3e} !< per-sentence "
+            f"max-V/f replay {e_max_vf:.3e} at equal target latency"
+        )
+        ok = False
+    if st["step_traces"] > len(buckets):
+        print(
+            f"FAIL: fused step traced {st['step_traces']}x for "
+            f"{len(buckets)} buckets (want exactly one compile per bucket)"
+        )
+        ok = False
+    for name, s in (("shared_clock", st), ("online", st_on)):
+        if s["deadline_misses"]:
+            print(
+                f"WARN: {name}: {s['deadline_misses']}/{n_queue} sentences "
+                "overshot the target (entropy outside the calibration range)"
+            )
+    if not ok:
+        sys.exit(1)
+    print(
+        f"OK: shared-clock arbitration {e_max_vf / e_shared:.2f}x below "
+        f"max-V/f replay (single-stream Alg. 1 accounting: "
+        f"{e_max_vf / e_alg1:.2f}x, infeasible on shared hardware) at target "
+        f"{target * 1e3:.2f} ms; one compile per bucket "
+        f"({st['step_traces']}/{len(buckets)}); online calibration "
+        f"{e_max_vf / e_online:.2f}x with no profiling pass"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ BENCHES = [
     "bench_accelerator",       # Fig. 10 + Table V
     "bench_nvm_poweron",       # Fig. 11
     "bench_dvfs",              # Alg. 1: sentence-level DVFS vs baselines
+    "bench_batched_dvfs",      # shared-clock (single LDO/ADPLL) arbitration
     "bench_kernels",           # Pallas kernel suite
     "bench_roofline",          # §Roofline table (from dry-run)
 ]

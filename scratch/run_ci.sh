@@ -1,13 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 CI: unit-test suite + a DVFS-benchmark smoke pass.
+# Tier-1 CI: unit-test suite + DVFS-benchmark smoke passes.
 #
 #   bash scratch/run_ci.sh
 #
 # The suite must COLLECT cleanly with or without `hypothesis` installed
-# (property tests skip when it's absent — see tests/hypothesis_compat.py),
-# and the DVFS smoke pass asserts the paper's headline result end-to-end:
-# lower energy than the no-early-exit baseline at equal target latency, with
-# the fused engine step compiling exactly once for the whole queue drain.
+# (property tests skip when it's absent — see tests/hypothesis_compat.py).
+# Two benchmark smoke passes assert the paper's headline results end-to-end:
+#   * bench_dvfs:          lower energy than the no-early-exit baseline at
+#                          equal target latency (per-sentence Alg. 1);
+#   * bench_batched_dvfs:  shared-clock arbitration (one LDO/ADPLL) below
+#                          per-sentence max-V/f replay at equal target
+#                          latency, with exactly one compile per length
+#                          bucket.
+# A grep-gate re-checks the bucketed engine's compile telemetry from the
+# emitted `step_traces=N;bucket_count=M` pair: N > M means the fused step
+# recompiled inside a bucket — fail even if the benchmark's own asserts
+# were loosened.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,5 +29,28 @@ echo "== bench_dvfs --smoke =="
 python benchmarks/bench_dvfs.py --smoke
 smoke=$?
 
-echo "== summary: tier1=$tier1 smoke=$smoke =="
-exit $(( tier1 || smoke ))
+echo "== bench_batched_dvfs --smoke =="
+batched_log=$(mktemp)
+python benchmarks/bench_batched_dvfs.py --smoke | tee "$batched_log"
+batched=$?
+
+echo "== grep-gate: step_traces <= bucket_count =="
+gate=0
+pair=$(grep -o 'step_traces=[0-9]*;bucket_count=[0-9]*' "$batched_log" | head -1)
+if [ -z "$pair" ]; then
+    echo "GATE FAIL: no step_traces/bucket_count telemetry emitted"
+    gate=1
+else
+    traces=${pair#step_traces=}; traces=${traces%%;*}
+    count=${pair##*bucket_count=}
+    if [ "$traces" -gt "$count" ]; then
+        echo "GATE FAIL: fused step traced ${traces}x for ${count} buckets"
+        gate=1
+    else
+        echo "gate ok: ${traces} traces / ${count} buckets"
+    fi
+fi
+rm -f "$batched_log"
+
+echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched gate=$gate =="
+exit $(( tier1 || smoke || batched || gate ))

@@ -1,0 +1,37 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``) but must
+also run on jax 0.4.x, where ``shard_map`` still lives under
+``jax.experimental`` and meshes have neither the ``axis_types`` kwarg nor the
+``AxisType`` enum (all axes behave as Auto).  Import from here instead of
+feature-detecting at every call site.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental namespace
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_auto_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with every axis Auto, on any supported jax version.
+
+    Newer jax wants explicit ``axis_types`` (sharding-in-types makes the
+    default Explicit on some versions); older jax rejects the kwarg and is
+    Auto-only anyway.
+    """
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(shape),
+            tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axis_names))

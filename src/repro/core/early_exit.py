@@ -17,6 +17,7 @@ Execution modes (DESIGN.md §2):
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -239,6 +240,59 @@ def predict_exit_layer(predictor: ExitPredictor, entropy: float) -> float:
     off-ramp entropy is ``entropy``."""
     b = int(np.digitize([float(entropy)], predictor.bin_edges)[0])
     return float(predictor.bin_exit[b])
+
+
+class OnlineExitCalibrator:
+    """Streaming replacement for the offline ``calibrate_predictor`` pass.
+
+    Keeps a bounded window of (first-off-ramp entropy, exit layer) pairs per
+    entropy bin and re-estimates each bin's exit-layer *quantile* on every
+    observation, so the LUT adapts DURING a drain instead of requiring a
+    profiling pass up front.  Bins with no observations yet predict the full
+    ``n_layers`` — the conservative cold-start (never misses a deadline,
+    saves no energy) that the running quantiles then tighten.
+
+    ``quantile=1.0`` tracks each bin's windowed max (safest for slack-free
+    latency targets); lower quantiles trade occasional escalation for energy,
+    exactly like the offline ``fit_exit_predictor`` knob.
+    """
+
+    def __init__(
+        self,
+        n_layers: int,
+        *,
+        lo: float = 0.0,
+        hi: float = 1.1,
+        n_bins: int = 16,
+        quantile: float = 1.0,
+        window: int = 256,
+    ):
+        assert hi > lo and n_bins >= 1 and window >= 1
+        assert 0.0 <= quantile <= 1.0
+        self.n_layers = int(n_layers)
+        self.quantile = float(quantile)
+        self.bin_edges = np.linspace(lo, hi, n_bins + 1)[1:-1]
+        self._windows = [deque(maxlen=window) for _ in range(n_bins)]
+        self.bin_exit = np.full(n_bins, float(n_layers))
+        self.count = 0
+
+    def observe(self, first_entropy: float, exit_layer: int) -> None:
+        """Fold one retired sentence into its bin's running quantile."""
+        b = int(np.digitize([float(first_entropy)], self.bin_edges)[0])
+        w = self._windows[b]
+        w.append(float(np.clip(exit_layer, 1, self.n_layers)))
+        self.bin_exit[b] = float(np.quantile(np.asarray(w), self.quantile))
+        self.count += 1
+
+    def predict(self, first_entropy: float) -> float:
+        b = int(np.digitize([float(first_entropy)], self.bin_edges)[0])
+        return float(self.bin_exit[b])
+
+    def predictor(self) -> ExitPredictor:
+        """Snapshot as an ``ExitPredictor`` LUT (the ASIC's SRAM table image)."""
+        return ExitPredictor(
+            bin_edges=self.bin_edges.copy(), bin_exit=self.bin_exit.copy()
+        )
 
 
 def runtime_savings(exit_layers: jnp.ndarray, n_layers: int) -> jnp.ndarray:

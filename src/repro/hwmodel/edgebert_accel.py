@@ -61,6 +61,16 @@ MGPU_POWER_W = 7.5
 MGPU_EFF_GFLOPS = 120.0      # effective (not peak) FP16 throughput on BERT-ish
 MGPU_LATENCY_OVERHEAD_S = 2.0e-3  # kernel-launch/serial logic per sentence
 
+# ---- DVFS operating-point switching (paper §IV: the single on-die fast-
+# switching LDO + ADPLL pair; transitions are sub-us, but a SHARED clock means
+# every (V, f) change stalls all in-flight lanes, so batched arbitration must
+# charge it per change, not per sentence) ----
+LDO_STEP_V = 0.025               # LDO programmable voltage step granularity
+LDO_SETTLE_S_PER_STEP = 25e-9    # per-25mV settle (full 0.5->0.8V swing ~300ns)
+ADPLL_RELOCK_S = 0.5e-6          # ADPLL frequency retarget lock time
+SWITCH_IDLE_POWER_FRAC = 0.30    # fraction of nominal power burned while the
+                                 # datapath stalls during a transition
+
 VPU_LANES = 8                # GB vector unit effective width
 GB_CONTROL_CYCLES = 30000    # per layer-pass: bitmask encode/decode streaming,
                              # AXI handshakes, span-register checks — n-independent
@@ -236,6 +246,31 @@ def simulate_mgpu(stats: WorkloadStats, *, use_early_exit=True, use_span=True) -
     latency = flops / (MGPU_EFF_GFLOPS * 1e9) + layers * MGPU_LATENCY_OVERHEAD_S / 12.0
     energy = MGPU_POWER_W * latency
     return {"latency_s": latency, "energy_j": energy}
+
+
+def op_switch_overhead(
+    vdd_from: float,
+    freq_from_hz: float,
+    vdd_to: float,
+    freq_to_hz: float,
+    *,
+    power_mw_nom: float,
+) -> Dict[str, float]:
+    """Latency + energy of one LDO/ADPLL operating-point transition.
+
+    The LDO walks ``|dV| / LDO_STEP_V`` 25mV steps; a frequency retarget adds
+    one ADPLL relock.  During the transition the accelerator stalls at an idle
+    power fraction of ``power_mw_nom`` (the workload's nominal total power).
+    Identical points cost zero — callers charge this ONLY on a change.
+    """
+    steps = round(abs(vdd_to - vdd_from) / LDO_STEP_V)
+    t = steps * LDO_SETTLE_S_PER_STEP
+    if freq_to_hz != freq_from_hz:
+        t += ADPLL_RELOCK_S
+    return {
+        "time_s": t,
+        "energy_j": power_mw_nom * 1e-3 * SWITCH_IDLE_POWER_FRAC * t,
+    }
 
 
 def poweron_embedding_cost(embedding_bytes: float, bitmask_bytes: float) -> Dict[str, float]:

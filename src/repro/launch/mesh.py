@@ -15,19 +15,15 @@ inside a pod's ICI domain.
 """
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.common.jax_compat import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_auto_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for CPU tests (requires forced host device count >= n*m)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=_auto(2))
+    return make_auto_mesh((n_data, n_model), ("data", "model"))

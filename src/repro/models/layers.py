@@ -254,7 +254,10 @@ def attention_layer(
     cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (k, v) [B, Smax, KV, hd]
     cache_pos: Any = None,          # write position for decode
     kv_source: Optional[jnp.ndarray] = None,  # cross-attention keys/values input
+    kv_len: Any = None,             # valid key length (right-padded inputs);
+                                    # cache-free paths only — decode derives it
 ) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    assert kv_len is None or cache is None, "kv_len is derived from the cache"
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     src = kv_source if kv_source is not None else x
@@ -276,7 +279,6 @@ def attention_layer(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     q_offset = 0
-    kv_len = None
     if cache is not None:
         ck, cv = cache
         if ck.dtype == jnp.uint8:

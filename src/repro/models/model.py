@@ -256,6 +256,7 @@ class Model:
         positions=None,
         cache=None,
         cache_pos=None,
+        kv_len=None,
     ):
         cfg = self.cfg
         post_ln = cfg.family == "albert"
@@ -264,7 +265,7 @@ class Model:
             attn_out, cache = L.attention_layer(
                 lp["attn"], h, cfg, causal=causal, positions=positions,
                 span_z=span_z, span_ramp=cfg.edgebert.span.ramp,
-                cache=cache, cache_pos=cache_pos,
+                cache=cache, cache_pos=cache_pos, kv_len=kv_len,
             )
             h = L.apply_norm(lp["norm1"], h + attn_out, cfg.norm)
             if "moe" in lp:
@@ -277,7 +278,7 @@ class Model:
                 lp["attn"], L.apply_norm(lp["norm1"], h, cfg.norm), cfg,
                 causal=causal, positions=positions,
                 span_z=span_z, span_ramp=cfg.edgebert.span.ramp,
-                cache=cache, cache_pos=cache_pos,
+                cache=cache, cache_pos=cache_pos, kv_len=kv_len,
             )
             h = self._sp_constrain(h + attn_out)
             hn = L.apply_norm(lp["norm2"], h, cfg.norm)

@@ -1,7 +1,11 @@
 from repro.serving.engine import ClassifierServer, DecoderServer, Request, MultiTaskRouter
+from repro.serving.scheduler import LaneEngine, LaneScheduler
 from repro.serving.dvfs import (
     DEFAULT_DVFS_TABLE,
+    ArbiterStepDecision,
+    BatchedDVFSArbiter,
     DVFSReport,
+    LaneDVFSReport,
     LatencyAwareDVFSController,
     OperatingPoint,
     calibrate_predictor,

@@ -141,18 +141,31 @@ class DeployedAlbert:
                     exit_layer[i] = li + 1
         return out_logits, exit_layer
 
-    def classify_with_dvfs(self, tokens: jnp.ndarray, controller):
-        """Kernel-path classification + per-sentence DVFS schedule (Alg. 1).
+    def classify_with_dvfs(self, tokens: jnp.ndarray, controller, arbiter=None):
+        """Kernel-path classification + DVFS schedule.
 
-        Returns (logits [B, C], exit_layer [B], reports: List[DVFSReport]) —
-        the deployed counterpart of the serving engine's DVFS telemetry, with
-        every hot op running on the Pallas kernels.
+        Returns (logits [B, C], exit_layer [B], reports) — the deployed
+        counterpart of the serving engine's DVFS telemetry, with every hot op
+        running on the Pallas kernels.
+
+        Without ``arbiter``: per-sentence Alg. 1 replay (``DVFSReport`` each)
+        — the single-stream analysis.  With a ``BatchedDVFSArbiter``: the
+        batch shares ONE LDO/ADPLL, so the whole lock-step batch is
+        arbitrated step-by-step (one (V, f) per layer step, switching stalls
+        charged) and per-sentence ``LaneDVFSReport``s come back instead.
         """
         logits, exit_layer = self.classify(tokens)
-        reports = [
-            controller.sentence_report(trace, exit_layer=int(el))
-            for trace, el in zip(self.last_entropy_traces, exit_layer)
-        ]
+        if arbiter is not None:
+            assert arbiter.c is controller, (
+                "arbiter was built over a different controller than the one "
+                "passed — its reports would reflect the wrong target/table"
+            )
+            reports = arbiter.replay_batch(self.last_entropy_traces, exit_layer)
+        else:
+            reports = [
+                controller.sentence_report(trace, exit_layer=int(el))
+                for trace, el in zip(self.last_entropy_traces, exit_layer)
+            ]
         return logits, exit_layer, reports
 
 

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.early_exit import (
     ExitPredictor,
+    OnlineExitCalibrator,
     fit_exit_predictor,
     predict_exit_layer,
 )
@@ -47,9 +48,11 @@ from repro.hwmodel.edgebert_accel import (
     CLOCK_HZ,
     VDD_NOM,
     WorkloadStats,
+    accel_power_mw,
     albert_layer_stats,
     layer_cycles,
     layer_energy_j,
+    op_switch_overhead,
 )
 
 
@@ -129,6 +132,7 @@ class LatencyAwareDVFSController:
         table: Sequence[OperatingPoint] = DEFAULT_DVFS_TABLE,
         n: int = 16,
         predictor: Optional[ExitPredictor] = None,
+        online_calibrator: Optional[OnlineExitCalibrator] = None,
         use_span: bool = True,
         use_sparsity: bool = True,
     ):
@@ -142,6 +146,10 @@ class LatencyAwareDVFSController:
         self.table = table
         self.n = n
         self.predictor = predictor
+        # online mode: the LUT is a set of RUNNING per-bin quantiles updated
+        # by observe_exit() as sentences retire (no offline profiling pass);
+        # takes precedence over a static ``predictor`` once armed
+        self.online = online_calibrator
         self.cycles_per_layer = layer_cycles(stats, n, use_span=use_span)
         # per-layer energy at each table point: E ~ (V/V_nom)^2, f-independent
         self._e_layer = {
@@ -162,21 +170,37 @@ class LatencyAwareDVFSController:
     def layer_energy(self, op: OperatingPoint) -> float:
         return self._e_layer[op]
 
-    def select_op(self, predicted_remaining: float, remaining_time_s: float) -> OperatingPoint:
-        """Alg. 1 lines 3-4: slowest point meeting the remaining budget."""
-        if remaining_time_s <= 0:
-            return self.max_op
-        need_hz = max(predicted_remaining, 0.0) * self.cycles_per_layer / remaining_time_s
+    def op_for_freq(self, need_hz: float) -> OperatingPoint:
+        """Slowest table point with freq >= need_hz (max point if none) —
+        the single op-selection rule shared by per-sentence Alg. 1 and the
+        batched arbiter, so the two cannot drift apart."""
         for op in self.table:
             if op.freq_hz >= need_hz:
                 return op
         return self.max_op
 
+    def select_op(self, predicted_remaining: float, remaining_time_s: float) -> OperatingPoint:
+        """Alg. 1 lines 3-4: slowest point meeting the remaining budget."""
+        if remaining_time_s <= 0:
+            return self.max_op
+        need_hz = max(predicted_remaining, 0.0) * self.cycles_per_layer / remaining_time_s
+        return self.op_for_freq(need_hz)
+
     def predict(self, first_entropy: float) -> float:
-        if self.predictor is None:
+        if self.online is not None:
+            p = self.online.predict(first_entropy)
+        elif self.predictor is not None:
+            p = predict_exit_layer(self.predictor, first_entropy)
+        else:
             return float(self.stats.n_layers)
-        p = predict_exit_layer(self.predictor, first_entropy)
         return float(np.clip(p, 1.0, self.stats.n_layers))
+
+    def observe_exit(self, first_entropy: float, exit_layer: int) -> None:
+        """Online calibration: fold a retired sentence's (first entropy, exit
+        layer) into the running per-bin quantiles — the LUT adapts DURING a
+        drain instead of needing the offline ``calibrate_predictor`` pass."""
+        if self.online is not None:
+            self.online.observe(first_entropy, exit_layer)
 
     # -------------------------------------------------------------- Alg. 1
     def sentence_report(
@@ -253,6 +277,230 @@ class LatencyAwareDVFSController:
         }
 
 
+# ===========================================================================
+# Batched shared-clock arbitration (single LDO/ADPLL across all lanes)
+# ===========================================================================
+
+
+@dataclass
+class _LaneClock:
+    """Arbiter-side state of one in-flight lane."""
+
+    admit_s: float                        # modeled admission time
+    deadline_s: float                     # admit + target latency
+    depth: int = 0                        # encoder layers completed
+    predicted_exit: Optional[float] = None  # set after the first off-ramp
+    first_entropy: Optional[float] = None
+    energy_j: float = 0.0
+    slowest_op: Optional[OperatingPoint] = None
+
+
+@dataclass
+class ArbiterStepDecision:
+    """Outcome of one fused-step arbitration."""
+
+    op: OperatingPoint
+    dt_s: float                           # step duration incl. any switch stall
+    switched: bool
+    need_hz: Dict[int, float]             # per-lane required frequency (inf =
+                                          # first layer / escalation / no slack)
+
+
+@dataclass
+class LaneDVFSReport:
+    """Per-sentence outcome under shared-clock arbitration."""
+
+    exit_layer: int
+    predicted_exit: float
+    latency_s: float
+    energy_j: float
+    deadline_met: bool
+    escalated_layers: int
+    slowest_op: OperatingPoint            # lowest point the sentence ran at
+
+
+class BatchedDVFSArbiter:
+    """ONE (V, f) decision per fused step across all in-flight lanes.
+
+    The EdgeBERT accelerator has a single LDO/ADPLL pair, so a batched
+    deployment cannot replay Alg. 1 per sentence — the clock is shared.  The
+    arbiter generalizes Alg. 1 to the lane set: every fused step it computes
+    each active lane's *required* frequency (predicted remaining layers over
+    remaining time-to-deadline, exactly Alg. 1 lines 3-4 evaluated live) and
+    drives the shared clock at the slowest table point satisfying the MAX of
+    those requirements.  Lanes that have not evaluated their first off-ramp
+    yet (Alg. 1 line 1) and lanes past their predicted exit (misprediction
+    escalation) require the maximum point.  Every operating-point change is
+    charged the LDO/ADPLL switching stall (`hwmodel.op_switch_overhead`) —
+    the cost a per-sentence replay never models.
+
+    The arbiter advances a MODELED clock (`now_s`); per-sentence latency is
+    measured from lane admission, matching the per-sentence controller's
+    accounting (queue wait is a scheduler concern, not a DVFS one).
+    """
+
+    def __init__(self, controller: LatencyAwareDVFSController):
+        self.c = controller
+        self.now_s = 0.0
+        self.cur_op: Optional[OperatingPoint] = None
+        self._lanes: Dict[int, _LaneClock] = {}
+        # ---- drain-level telemetry ----
+        self.op_switches = 0
+        self.switch_time_s = 0.0
+        self.switch_energy_j = 0.0
+        self.compute_energy_j = 0.0
+        self.steps = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def admit(self, lane: int) -> None:
+        """A request entered a lane: its deadline clock starts now."""
+        assert lane not in self._lanes, f"lane {lane} already in flight"
+        self._lanes[lane] = _LaneClock(
+            admit_s=self.now_s, deadline_s=self.now_s + self.c.target_latency_s
+        )
+
+    def observe_entropy(self, lane: int, entropy: float) -> None:
+        """First off-ramp evaluated: Alg. 1 line 2 prediction for this lane."""
+        st = self._lanes[lane]
+        if st.predicted_exit is None:
+            st.first_entropy = float(entropy)
+            st.predicted_exit = max(self.c.predict(entropy), float(st.depth + 1))
+
+    def required_hz(self, lane: int) -> float:
+        """Frequency this lane needs from the SHARED clock right now.
+
+        Before the first off-ramp there is no prediction (Alg. 1 line 1), so
+        the lane conservatively budgets the FULL remaining depth — at a
+        slack-free target that is exactly the nominal frequency, the paper's
+        run-layer-1-at-nominal rule, and it scales down when the target has
+        headroom.  inf encodes 'maximum point, unconditionally': a lane past
+        its predicted exit escalates (misprediction guard), and exhausted
+        slack leaves no choice.
+        """
+        st = self._lanes[lane]
+        predicted = st.predicted_exit
+        if predicted is None:
+            predicted = float(self.c.stats.n_layers)   # conservative line 1
+        elif st.depth + 1 > predicted + 1e-9:
+            return float("inf")          # escalation: past the predicted exit
+        t_rem = st.deadline_s - self.now_s
+        if t_rem <= 0:
+            return float("inf")
+        remaining = predicted - st.depth
+        return remaining * self.c.cycles_per_layer / t_rem
+
+    def step(self, active_lanes: Sequence[int]) -> ArbiterStepDecision:
+        """Arbitrate + account ONE fused step over ``active_lanes``."""
+        lanes = list(active_lanes)
+        assert lanes, "step() needs at least one active lane"
+        need = {i: self.required_hz(i) for i in lanes}
+        op = self.c.op_for_freq(max(need.values()))
+
+        switched = self.cur_op is not None and op != self.cur_op
+        if switched:
+            ov = op_switch_overhead(
+                self.cur_op.vdd, self.cur_op.freq_hz, op.vdd, op.freq_hz,
+                power_mw_nom=self._power_mw_nom(),
+            )
+            self.op_switches += 1
+            self.switch_time_s += ov["time_s"]
+            self.switch_energy_j += ov["energy_j"]
+            self.now_s += ov["time_s"]   # the stall spends every lane's slack
+        self.cur_op = op
+
+        e_layer = self.c.layer_energy(op)
+        for i in lanes:
+            st = self._lanes[i]
+            st.depth += 1
+            st.energy_j += e_layer
+            if st.slowest_op is None or op.freq_hz < st.slowest_op.freq_hz:
+                st.slowest_op = op
+        self.compute_energy_j += len(lanes) * e_layer
+        dt = self.c.cycles_per_layer / op.freq_hz
+        self.now_s += dt
+        self.steps += 1
+        return ArbiterStepDecision(op=op, dt_s=dt, switched=switched, need_hz=need)
+
+    def retire(self, lane: int, exit_layer: int) -> LaneDVFSReport:
+        """Lane exited: close its clock, emit its report, free the lane."""
+        st = self._lanes.pop(lane)
+        assert st.depth == exit_layer, (st.depth, exit_layer)
+        latency = self.now_s - st.admit_s
+        predicted = (
+            st.predicted_exit if st.predicted_exit is not None else float(exit_layer)
+        )
+        # layers whose index exceeded the prediction ran escalated (matches
+        # the per-sentence controller: li > predicted -> max point)
+        escalated = max(0, exit_layer - int(np.floor(predicted + 1e-9)))
+        # online calibration: the retired sentence feeds the running LUT
+        if st.first_entropy is not None:
+            self.c.observe_exit(st.first_entropy, exit_layer)
+        return LaneDVFSReport(
+            exit_layer=int(exit_layer),
+            predicted_exit=predicted,
+            latency_s=latency,
+            energy_j=st.energy_j,
+            deadline_met=latency <= self.c.target_latency_s * (1 + 1e-9),
+            escalated_layers=escalated,
+            slowest_op=st.slowest_op if st.slowest_op is not None else self.c.max_op,
+        )
+
+    # ------------------------------------------------------------ accounting
+    def _power_mw_nom(self) -> float:
+        return accel_power_mw(self.c.stats, self.c.n)["total"]
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._lanes)
+
+    @property
+    def total_energy_j(self) -> float:
+        """Compute + switching energy of everything arbitrated so far."""
+        return self.compute_energy_j + self.switch_energy_j
+
+    def telemetry(self) -> Dict[str, float]:
+        return {
+            "arb_steps": self.steps,
+            "op_switches": self.op_switches,
+            "switch_time_s": self.switch_time_s,
+            "switch_energy_j": self.switch_energy_j,
+            "compute_energy_j": self.compute_energy_j,
+            "total_energy_j": self.total_energy_j,
+            "modeled_time_s": self.now_s,
+        }
+
+    # ------------------------------------------------------------- batch API
+    def replay_batch(
+        self, entropy_traces: Sequence[Sequence[float]], exit_layers: Sequence[int]
+    ) -> List[LaneDVFSReport]:
+        """Arbitrate a lock-step batch (the kernel-path ``classify`` schedule).
+
+        All sentences are admitted at once (no refill — the deployed
+        accelerator's layer-serial batch), stepped together while active, and
+        retired at their recorded exit layers.  This is the batched
+        counterpart of replaying ``sentence_report`` per sentence.
+        """
+        assert self.in_flight == 0, "replay_batch needs an idle arbiter"
+        exits = [int(e) for e in exit_layers]
+        assert len(entropy_traces) == len(exits) and all(e >= 1 for e in exits)
+        for i in range(len(exits)):
+            self.admit(i)
+        reports: Dict[int, LaneDVFSReport] = {}
+        depth = 0
+        while True:
+            active = [i for i, e in enumerate(exits) if depth < e]
+            if not active:
+                break
+            self.step(active)
+            depth += 1
+            for i in active:
+                if depth == 1:
+                    self.observe_entropy(i, entropy_traces[i][0])
+                if depth == exits[i]:
+                    reports[i] = self.retire(i, depth)
+        return [reports[i] for i in range(len(exits))]
+
+
 def calibrate_predictor(
     model, params, batches, n_bins: int = 16, quantile: Optional[float] = None
 ) -> ExitPredictor:
@@ -285,6 +533,7 @@ def default_albert_controller(
     n_layers: int = 12,
     avg_exit_layer: Optional[float] = None,
     predictor: Optional[ExitPredictor] = None,
+    online_calibrator: Optional[OnlineExitCalibrator] = None,
 ) -> LatencyAwareDVFSController:
     """Controller over the analytic ALBERT-base layer workload (Fig. 8)."""
     stats = albert_layer_stats(seq_len=seq_len)
@@ -292,5 +541,6 @@ def default_albert_controller(
     if avg_exit_layer is not None:
         stats.avg_exit_layer = avg_exit_layer
     return LatencyAwareDVFSController(
-        stats, target_latency_s, n=n, predictor=predictor
+        stats, target_latency_s, n=n, predictor=predictor,
+        online_calibrator=online_calibrator,
     )

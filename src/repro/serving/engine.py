@@ -1,35 +1,50 @@
-"""Serving engine: the system layer that converts EdgeBERT's per-sentence
-early exit into real throughput on batched hardware.
+"""Serving engines on the unified lane scheduler: length-bucketed fixed
+shapes + shared-clock batched DVFS.
 
-* ``ClassifierServer`` — ALBERT-style classification with entropy early exit,
-  run as a FIXED-SHAPE, mask-vectorized continuation-batching engine.  The
-  server owns a static ``[lanes, S, H]`` hidden-state tensor plus an active
-  mask; one fused, jitted step runs encoder layer -> off-ramp logits ->
-  entropy -> retire-mask.  Traced shapes never change, so jit compiles the
-  step EXACTLY ONCE per lane count (the previous engine concatenated a
-  variable-size active-lane set every layer, recompiling for every distinct
-  active count).  Retired lanes are refilled from the queue between steps
-  (continuation batching), so lanes never idle: average depth/sentence ~
-  average exit layer — the multi-batch generalization of the paper's
-  single-stream latency saving.  An optional ``LatencyAwareDVFSController``
-  (serving/dvfs.py, paper Alg. 1) converts each sentence's entropy trace into
-  a per-sentence (voltage, frequency) schedule and energy/latency report.
-* ``DecoderServer`` — LM decode with KV cache, EOS retirement + refill, and a
-  jitted fixed-shape prefill (masked single-lane cache merge) replacing the
-  old per-token Python prefill loop.
-* ``MultiTaskRouter`` — the paper's multi-task scenario: one shared (eNVM-
-  resident) embedding + per-task encoder/classifier weights; switching tasks
-  swaps only task weights, never embeddings (paper §III-D).
+Architecture (this module + ``serving/scheduler.py`` + ``serving/dvfs.py``):
 
-Trace-count telemetry: every jitted function increments a host-side counter
-*inside its traced body*, i.e. the counter only advances when XLA actually
-retraces.  ``run()`` reports these counts (``step_traces`` must stay 1 across
-a full queue drain) so recompile regressions fail loudly in tests.
+* ``LaneScheduler`` owns the lifecycle both engines used to duplicate —
+  submit -> length-bucketed queues -> refill free lanes -> fused step ->
+  retire -> telemetry.  The queue is partitioned into ``[lanes, S_bucket]``
+  buckets (e.g. 32/64/128): a request lands in the smallest bucket that fits
+  and is padded up to it, so jit compiles EXACTLY ONE step per bucket instead
+  of one per distinct request length.  ``buckets=None`` keeps exact-shape
+  buckets (one per distinct length).
+* ``ClassifierServer`` — ALBERT-style classification with entropy early exit
+  as a fixed-shape, mask-vectorized continuation-batching engine: a static
+  ``[lanes, S_bucket, H]`` hidden tensor plus an active mask; one fused,
+  jitted step runs encoder layer -> off-ramp logits -> entropy -> retire
+  mask.  Retired lanes refill from the bucket queue between steps, so average
+  depth/sentence ~ average exit layer — the batched form of the paper's
+  runtime saving.
+* DVFS, two modes.  Per-sentence (``dvfs=``): a ``LatencyAwareDVFSController``
+  replays Alg. 1 over each sentence's entropy trace after retirement — the
+  paper's single-stream analysis, which pretends every sentence owns the
+  clock.  Shared-clock (``arbiter=``): the accelerator has ONE LDO/ADPLL
+  pair, so a ``BatchedDVFSArbiter`` makes one (V, f) decision per fused step
+  — the max over per-lane required frequencies from the entropy->exit-layer
+  predictor — with misprediction escalation and the LDO/ADPLL switching
+  stall charged on every operating-point change.  Retired sentences feed the
+  controller's online per-bin quantile calibration when enabled.
+* ``DecoderServer`` — LM decode with PER-LANE KV lengths: a vmapped decode
+  step advances every lane at its OWN position (refilled lanes decode from
+  their actual prompt end instead of the max active position — no pad-
+  position burn), with EOS retirement + refill and a jitted fixed-shape
+  masked prefill.  Cache shapes bucket by prompt + generation budget.
+* ``MultiTaskRouter`` — the paper's multi-task scenario: one shared
+  (eNVM-resident) embedding + per-task encoder/classifier weights; switching
+  tasks swaps only task weights (paper §III-D).  All task servers can share
+  ONE arbiter — the hardware has one clock.
+
+Trace-count telemetry: every jitted function increments a host-side,
+bucket-keyed counter *inside its traced body*, i.e. it only advances when XLA
+actually retraces.  ``run()`` reports totals and per-bucket counts
+(``step_traces`` must equal the number of buckets used, and stay there across
+repeat drains) so recompile regressions fail loudly in tests and CI.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, TYPE_CHECKING
 
@@ -37,13 +52,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.util import logger
 from repro.core.early_exit import offramp_logits
 from repro.core.entropy import entropy_from_logits
 from repro.models.model import Model
+from repro.serving.scheduler import LaneScheduler
 
 if TYPE_CHECKING:  # typing-only: dvfs is not a runtime dependency of the engine
-    from repro.serving.dvfs import LatencyAwareDVFSController
+    from repro.serving.dvfs import BatchedDVFSArbiter, LatencyAwareDVFSController
 
 
 @dataclass
@@ -56,29 +71,32 @@ class Request:
     generated: List[int] = field(default_factory=list)
     submit_time: float = 0.0
     finish_time: float = 0.0
+    bucket: Optional[int] = None        # length bucket the scheduler assigned
     # per-layer off-ramp entropies observed while the sentence was in flight;
     # the DVFS controller replays this trace through Alg. 1
     entropy_trace: List[float] = field(default_factory=list)
     energy_j: Optional[float] = None    # modeled accelerator energy (DVFS)
     latency_s: Optional[float] = None   # modeled accelerator latency (DVFS)
-    op_vdd: Optional[float] = None      # selected operating point
+    op_vdd: Optional[float] = None      # selected / slowest operating point
     op_freq_hz: Optional[float] = None
 
 
 # ===========================================================================
-# Classifier (early-exit) server — fixed-shape masked continuation batching
+# Classifier (early-exit) server — bucketed fixed-shape continuation batching
 # ===========================================================================
 
 
 class ClassifierServer:
     """Continuation-batching early-exit classifier with static traced shapes.
 
-    The engine state is a dense ``[lanes, S, D]`` tensor; per-step work is
-    always the full lane set with an active mask, so the fused step function
-    has one trace per (lanes, S) shape.  ``layer_calls`` telemetry still
-    counts *active* lane-layer executions — the quantity the accelerator
-    would actually compute — so throughput accounting matches the paper's
-    runtime-savings form.
+    Engine state is a dense ``[lanes, S_bucket, D]`` tensor per bucket; every
+    step runs the full lane set under an active mask, so the fused step has
+    one trace per bucket.  ``layer_calls`` telemetry counts *active*
+    lane-layer executions — the quantity the accelerator actually computes.
+
+    ``dvfs``    — per-sentence Alg. 1 replay after retirement (single-stream).
+    ``arbiter`` — shared-clock batched arbitration: one (V, f) per fused step.
+    The two model different hardware assumptions; pass at most one.
     """
 
     def __init__(
@@ -87,36 +105,60 @@ class ClassifierServer:
         params: Any,
         batch_lanes: int = 8,
         dvfs: Optional["LatencyAwareDVFSController"] = None,
+        arbiter: Optional["BatchedDVFSArbiter"] = None,
+        buckets=None,
     ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
+        assert dvfs is None or arbiter is None, (
+            "pass either a per-sentence controller (dvfs=) or a shared-clock "
+            "arbiter (arbiter=), not both — they model different hardware"
+        )
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.cfg = model.cfg
         self.threshold = model.cfg.edgebert.early_exit.entropy_threshold
         self.dvfs = dvfs
-        self.queue: deque[Request] = deque()
-        self.done: Dict[int, Request] = {}
-        self._layer_calls = 0       # telemetry: total ACTIVE layer x lane executions
-        self._dense_steps = 0       # telemetry: fused steps (dense over lanes)
-        self._sentences = 0
-        self._traces = {"embed": 0, "step": 0, "insert": 0}
+        self.arbiter = arbiter
+        self.sched = LaneScheduler(batch_lanes, self, buckets=buckets)
+        self._h: Optional[jnp.ndarray] = None     # current bucket's state
+        self._len: Optional[np.ndarray] = None    # [lanes] valid token lengths
+        self._step_out = None                     # host copies of the last step
+        self._traces = {"embed": {}, "step": {}, "insert": {}}  # keyed by S
+        # arbiter counters attributable to THIS server's drains (the arbiter
+        # itself is drain-global and may be shared across task servers)
+        self._arb_acc = {
+            "op_switches": 0, "switch_time_s": 0.0,
+            "switch_energy_j": 0.0, "total_energy_j": 0.0,
+        }
 
         def embed_fn(params, tokens):
-            self._traces["embed"] += 1          # advances only on retrace
+            S = tokens.shape[1]                  # static at trace time
+            self._traces["embed"][S] = self._traces["embed"].get(S, 0) + 1
             return model.embed(params, tokens)
 
-        def step_fn(params, h, active, threshold):
+        def step_fn(params, h, active, lengths, threshold):
             """Fused: encoder layer -> off-ramp -> entropy -> retire mask.
 
-            h:      [lanes, S, D] static-shape hidden states
-            active: [lanes] bool — inactive lanes are frozen by the mask
+            h:       [lanes, S_bucket, D] static-shape hidden states
+            active:  [lanes] bool — inactive lanes are frozen by the mask
+            lengths: [lanes] int32 valid token count per lane — positions
+                     beyond a lane's length are bucket padding, masked out of
+                     attention via kv_len so a padded sentence computes the
+                     SAME function as at its native length
             """
-            self._traces["step"] += 1           # advances only on retrace
+            S = h.shape[1]                       # static at trace time
+            self._traces["step"][S] = self._traces["step"].get(S, 0) + 1
             span_z = model._span_for_layer(params, 0)
-            h_new, _, _ = model._dense_layer_step(
-                params["layer"], h, causal=False, span_z=span_z
-            )
+
+            def one_lane(h_l, length):
+                h2, _, _ = model._dense_layer_step(
+                    params["layer"], h_l[None], causal=False, span_z=span_z,
+                    kv_len=length,
+                )
+                return h2[0]
+
+            h_new = jax.vmap(one_lane)(h, lengths)
             h = jnp.where(active[:, None, None], h_new, h)
             lg = offramp_logits(h, model._offramp(params))
             ent = entropy_from_logits(lg)
@@ -124,122 +166,162 @@ class ClassifierServer:
             return h, lg, ent, retire
 
         def insert_fn(h, lane, h_new):
-            self._traces["insert"] += 1         # advances only on retrace
+            S = h.shape[1]
+            self._traces["insert"][S] = self._traces["insert"].get(S, 0) + 1
             return jax.lax.dynamic_update_slice_in_dim(h, h_new, lane, axis=0)
 
         self._embed = jax.jit(embed_fn)
         self._step = jax.jit(step_fn)
         self._insert = jax.jit(insert_fn)
 
+    # ---------------------------------------------------------------- public
     def submit(self, req: Request):
-        req.submit_time = time.time()
-        self.queue.append(req)
+        req.bucket = self.sched.submit(req)
 
-    # ------------------------------------------------------------- internals
-    def _refill(self, h, lane_req, lane_depth, active):
-        """Fill every free lane from the queue; returns the updated h."""
-        for i in range(self.lanes):
-            if lane_req[i] is None and self.queue:
-                req = self.queue.popleft()
-                toks = jnp.asarray(req.tokens)[None]
-                h = self._insert(h, jnp.int32(i), self._embed(self.params, toks))
-                lane_req[i] = req
-                lane_depth[i] = 0
-                active[i] = True
-        return h
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self.sched.done
 
-    def _finish(self, req: Request, logits: np.ndarray, depth: int):
-        req.result = logits
+    @property
+    def pending(self) -> int:
+        return self.sched.pending
+
+    def run(self) -> Dict[str, float]:
+        """Drain every bucket with continuation batching. Returns telemetry."""
+        before = self.arbiter.telemetry() if self.arbiter is not None else None
+        self.sched.run()
+        if before is not None:
+            after = self.arbiter.telemetry()
+            for k in self._arb_acc:
+                self._arb_acc[k] += after[k] - before[k]
+        return self.telemetry()
+
+    # ------------------------------------------------------- scheduler hooks
+    def bucket_key(self, req: Request) -> int:
+        return len(req.tokens)
+
+    def bucket_begin(self, bucket: int) -> None:
+        D = self.cfg.d_model
+        dtype = jnp.asarray(self.params["embed"]["tok"]).dtype
+        self._h = jnp.zeros((self.lanes, bucket, D), dtype)
+        self._len = np.full(self.lanes, bucket, np.int32)
+
+    def lane_load(self, bucket: int, lane: int, req: Request) -> None:
+        toks = np.zeros(bucket, np.int32)
+        toks[: len(req.tokens)] = req.tokens     # pad up to the bucket shape
+        self._h = self._insert(
+            self._h, jnp.int32(lane), self._embed(self.params, jnp.asarray(toks)[None])
+        )
+        self._len[lane] = len(req.tokens)
+        if self.arbiter is not None:
+            self.arbiter.admit(lane)
+
+    def lanes_step(self, bucket: int, active: np.ndarray):
+        decision = None
+        if self.arbiter is not None:
+            # ONE (V, f) for this fused step, arbitrated across active lanes
+            decision = self.arbiter.step([i for i in range(self.lanes) if active[i]])
+        h, lg, ent, retire = self._step(
+            self.params, self._h, jnp.asarray(active), jnp.asarray(self._len),
+            jnp.float32(self.threshold),
+        )
+        self._h = h
+        self._step_out = (np.asarray(lg), np.asarray(ent), np.asarray(retire), decision)
+        return self._step_out
+
+    def lane_advance(
+        self, bucket: int, lane: int, req: Request, out, depth: int
+    ) -> bool:
+        _, ent, retire, _ = out
+        req.entropy_trace.append(float(ent[lane]))
+        if self.arbiter is not None and depth == 1:
+            # first off-ramp evaluated: Alg. 1 line 2 prediction goes live
+            self.arbiter.observe_entropy(lane, float(ent[lane]))
+        return bool(retire[lane]) or depth >= self.cfg.n_layers
+
+    def lane_finish(self, bucket: int, lane: int, req: Request, depth: int) -> None:
+        lg, _, _, _ = self._step_out
+        req.result = lg[lane]
         req.exit_layer = depth
         req.finish_time = time.time()
-        if self.dvfs is not None:
+        if self.arbiter is not None:
+            rep = self.arbiter.retire(lane, depth)
+            req.energy_j = rep.energy_j
+            req.latency_s = rep.latency_s
+            req.op_vdd = rep.slowest_op.vdd
+            req.op_freq_hz = rep.slowest_op.freq_hz
+        elif self.dvfs is not None:
             rep = self.dvfs.sentence_report(req.entropy_trace, exit_layer=depth)
             req.energy_j = rep.energy_j
             req.latency_s = rep.latency_s
             req.op_vdd = rep.op.vdd
             req.op_freq_hz = rep.op.freq_hz
-        self.done[req.uid] = req
-        self._sentences += 1
+            # online calibration AFTER the report: a sentence's own exit must
+            # not leak into its own prediction
+            self.dvfs.observe_exit(req.entropy_trace[0], depth)
 
-    # ---------------------------------------------------------------- public
-    def run(self) -> Dict[str, float]:
-        """Drain the queue with continuation batching. Returns telemetry."""
-        if not self.queue:
-            return self.telemetry()
-        S = len(self.queue[0].tokens)
-        assert all(
-            len(r.tokens) == S for r in self.queue
-        ), "fixed-shape engine drains one sequence length per run()"
-        D = self.cfg.d_model
-        h = jnp.zeros((self.lanes, S, D), jnp.asarray(self.params["embed"]["tok"]).dtype)
+    def bucket_end(self, bucket: int) -> None:
+        self._h = None
+        self._len = None
+        self._step_out = None
 
-        lane_req: List[Optional[Request]] = [None] * self.lanes
-        lane_depth = np.zeros(self.lanes, np.int32)
-        active = np.zeros(self.lanes, bool)
-        thr = jnp.float32(self.threshold)
-
-        while self.queue or active.any():
-            h = self._refill(h, lane_req, lane_depth, active)
-            if not active.any():
-                break
-            h, lg, ent, retire = self._step(self.params, h, jnp.asarray(active), thr)
-            n_active = int(active.sum())
-            self._layer_calls += n_active
-            self._dense_steps += 1
-            lane_depth[active] += 1
-            ent_np = np.asarray(ent)
-            lg_np = np.asarray(lg)
-            retire_np = np.asarray(retire)
-            for i in range(self.lanes):
-                if not active[i]:
-                    continue
-                req = lane_req[i]
-                req.entropy_trace.append(float(ent_np[i]))
-                if retire_np[i] or lane_depth[i] >= self.cfg.n_layers:
-                    self._finish(req, lg_np[i], int(lane_depth[i]))
-                    lane_req[i] = None
-                    active[i] = False
-        return self.telemetry()
-
+    # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, float]:
+        st = self.sched.telemetry()
+        done = self.sched.done
         avg_exit = (
-            float(np.mean([r.exit_layer for r in self.done.values()]))
-            if self.done
-            else 0.0
+            float(np.mean([r.exit_layer for r in done.values()])) if done else 0.0
         )
         out = {
-            "sentences": self._sentences,
-            "layer_calls": self._layer_calls,
-            "dense_steps": self._dense_steps,
+            "sentences": st["sentences"],
+            "layer_calls": st["lane_steps"],
+            "dense_steps": st["dense_steps"],
             "avg_exit_layer": avg_exit,
             "runtime_savings": 1.0 - avg_exit / self.cfg.n_layers,
-            "step_traces": self._traces["step"],
-            "embed_traces": self._traces["embed"],
-            "insert_traces": self._traces["insert"],
-            "lane_occupancy": (
-                self._layer_calls / (self._dense_steps * self.lanes)
-                if self._dense_steps
-                else 0.0
-            ),
+            "step_traces": sum(self._traces["step"].values()),
+            "embed_traces": sum(self._traces["embed"].values()),
+            "insert_traces": sum(self._traces["insert"].values()),
+            "step_traces_per_bucket": dict(self._traces["step"]),
+            "buckets_used": st["buckets_used"],
+            "bucket_steps": st["bucket_steps"],
+            "lane_occupancy": st["lane_occupancy"],
         }
-        if self.dvfs is not None and self.done:
-            done = self.done.values()
-            out["energy_j"] = float(sum(r.energy_j or 0.0 for r in done))
-            out["modeled_latency_s"] = float(
-                max((r.latency_s or 0.0) for r in done)
-            )
+        ctrl = self.arbiter.c if self.arbiter is not None else self.dvfs
+        if ctrl is not None and done:
+            reqs = done.values()
+            out["energy_j"] = float(sum(r.energy_j or 0.0 for r in reqs))
+            out["modeled_latency_s"] = float(max((r.latency_s or 0.0) for r in reqs))
             out["deadline_misses"] = sum(
-                1 for r in done if (r.latency_s or 0.0) > self.dvfs.target_latency_s * (1 + 1e-9)
+                1
+                for r in reqs
+                if (r.latency_s or 0.0) > ctrl.target_latency_s * (1 + 1e-9)
             )
+        if self.arbiter is not None:
+            # deltas accumulated across THIS server's drains only: a shared
+            # arbiter keeps drain-global counters, and copying those verbatim
+            # would multi-count other servers' work in per-task stats
+            out["op_switches"] = self._arb_acc["op_switches"]
+            out["switch_energy_j"] = self._arb_acc["switch_energy_j"]
+            out["switch_time_s"] = self._arb_acc["switch_time_s"]
+            out["arb_energy_j"] = self._arb_acc["total_energy_j"]
         return out
 
 
 # ===========================================================================
-# Decoder (LM) server
+# Decoder (LM) server — per-lane KV lengths on the shared scheduler
 # ===========================================================================
 
 
 class DecoderServer:
+    """Continuation-batching LM decode with PER-LANE cache positions.
+
+    The decode step is vmapped over lanes, so every lane attends its own
+    ``[0, pos_lane]`` cache window and refilled lanes continue from their
+    actual prompt end — the lock-step max-position loop (which burned pad
+    positions for refilled lanes) is gone.  Cache shapes bucket by
+    prompt-plus-generation budget; one decode/prefill trace per bucket.
+    """
+
     def __init__(
         self,
         model: Model,
@@ -247,30 +329,52 @@ class DecoderServer:
         batch_lanes: int = 4,
         max_seq: int = 256,
         eos_id: int = 2,
+        buckets=None,
     ):
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.queue: deque[Request] = deque()
-        self.done: Dict[int, Request] = {}
-        self._traces = {"decode": 0, "prefill": 0}
+        self.sched = LaneScheduler(batch_lanes, self, buckets=buckets)
+        self._bucketed = buckets is not None
+        self._cache = None
+        self._pos = None                  # [lanes] int32 per-lane KV position
+        self._cur = None                  # [lanes, 1] int32 current token
+        self._step_out = None
+        self._traces = {"decode": {}, "prefill": {}}  # keyed by bucket
 
-        def decode_fn(params, cache, tokens, pos):
-            self._traces["decode"] += 1         # advances only on retrace
-            return model.decode_step(params, cache, tokens, pos)
+        def decode_fn(params, cache, tokens, pos, bucket):
+            """One decode step with PER-LANE positions.
+
+            tokens: [lanes, 1]; pos: [lanes] — each lane reads/writes its own
+            cache row at its own position (vmap over the lane axis), so lanes
+            at different depths advance together in ONE fixed-shape trace.
+            """
+            self._traces["decode"][bucket] = self._traces["decode"].get(bucket, 0) + 1
+            lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
+
+            def one_lane(cache_l, tok, p):
+                cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
+                lg, cache_b = model.decode_step(params, cache_b, tok[None, None], p)
+                return lg[0], jax.tree_util.tree_map(lambda x: x[:, 0], cache_b)
+
+            lg, cache = jax.vmap(
+                one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes)
+            )(cache, tokens[:, 0], pos)
+            return lg, cache
 
         def prefill_fn(params, cache, tokens, lane, length):
             """Write one lane's prompt[:length-1] into the KV cache.
 
-            tokens: [max_seq] zero-padded prompt; lane/length: scalars.  The
+            tokens: [bucket] zero-padded prompt; lane/length: scalars.  The
             prompt is decoded step-by-step in a fori_loop on a scratch cache,
             then merged back under a lane one-hot so other lanes' cache rows
-            are untouched — the whole prefill is ONE fixed-shape trace instead
-            of a Python loop of per-token dispatches.
+            are untouched — the whole prefill is ONE fixed-shape trace per
+            bucket instead of a Python loop of per-token dispatches.
             """
-            self._traces["prefill"] += 1        # advances only on retrace
+            bucket = tokens.shape[0]             # static at trace time
+            self._traces["prefill"][bucket] = self._traces["prefill"].get(bucket, 0) + 1
             lane_ids = jnp.arange(self.lanes)
 
             def body(t, c):
@@ -286,70 +390,89 @@ class DecoderServer:
 
             return jax.tree_util.tree_map(merge, scratch, cache)
 
-        self._decode = jax.jit(decode_fn)
+        self._decode = jax.jit(decode_fn, static_argnums=(4,))
         self._prefill = jax.jit(prefill_fn)
 
+    # ---------------------------------------------------------------- public
     def submit(self, req: Request):
-        req.submit_time = time.time()
-        self.queue.append(req)
+        req.bucket = self.sched.submit(req)
+
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self.sched.done
+
+    @property
+    def pending(self) -> int:
+        return self.sched.pending
 
     def run(self) -> Dict[str, float]:
-        """Static-lane continuation batching decode loop."""
-        model, params = self.model, self.params
-        cache = model.init_cache(self.lanes, self.max_seq)
-        lane_req: List[Optional[Request]] = [None] * self.lanes
-        lane_pos = np.zeros(self.lanes, np.int32)
-        cur_tok = np.zeros((self.lanes, 1), np.int32)
-        steps = 0
-
-        # NOTE: per-lane positions differ; for simplicity this server steps all
-        # lanes in lock-step using the max position.  Per-lane KV length is not
-        # tracked — acceptable for the CPU demo; the multi-pod serving path
-        # uses uniform-length batches from the shape sheet (see ROADMAP).
-        while self.queue or any(r is not None for r in lane_req):
-            for i in range(self.lanes):
-                if lane_req[i] is None and self.queue:
-                    req = self.queue.popleft()
-                    lane_req[i] = req
-                    toks = np.zeros(self.max_seq, np.int32)
-                    toks[: len(req.tokens)] = req.tokens
-                    cache = self._prefill(
-                        params,
-                        cache,
-                        jnp.asarray(toks),
-                        jnp.int32(i),
-                        jnp.int32(len(req.tokens)),
-                    )
-                    lane_pos[i] = len(req.tokens) - 1
-                    cur_tok[i, 0] = req.tokens[-1]
-            active = [i for i in range(self.lanes) if lane_req[i] is not None]
-            if not active:
-                break
-            pos = int(max(lane_pos[i] for i in active))
-            logits, cache = self._decode(params, cache, jnp.asarray(cur_tok), pos)
-            steps += 1
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            for i in active:
-                req = lane_req[i]
-                tok = int(nxt[i])
-                req.generated.append(tok)
-                lane_pos[i] = pos + 1
-                cur_tok[i, 0] = tok
-                if tok == self.eos_id or len(req.generated) >= req.max_new_tokens:
-                    req.finish_time = time.time()
-                    self.done[req.uid] = req
-                    lane_req[i] = None
-            if lane_pos.max() >= self.max_seq - 1:
-                for i in active:
-                    if lane_req[i] is not None:
-                        self.done[lane_req[i].uid] = lane_req[i]
-                        lane_req[i] = None
+        st = self.sched.run()
         return {
-            "decode_steps": steps,
-            "completed": len(self.done),
-            "decode_traces": self._traces["decode"],
-            "prefill_traces": self._traces["prefill"],
+            "decode_steps": st["dense_steps"],
+            "completed": len(self.sched.done),
+            "decode_traces": sum(self._traces["decode"].values()),
+            "prefill_traces": sum(self._traces["prefill"].values()),
+            "decode_traces_per_bucket": dict(self._traces["decode"]),
+            "buckets_used": st["buckets_used"],
+            "lane_occupancy": st["lane_occupancy"],
         }
+
+    # ------------------------------------------------------- scheduler hooks
+    def bucket_key(self, req: Request) -> int:
+        if not self._bucketed:
+            return self.max_seq              # legacy: one cache of max_seq
+        need = len(req.tokens) + req.max_new_tokens + 1
+        assert need <= self.max_seq, f"request needs {need} > max_seq {self.max_seq}"
+        return need
+
+    def bucket_begin(self, bucket: int) -> None:
+        self._cache = self.model.init_cache(self.lanes, bucket)
+        self._pos = np.zeros(self.lanes, np.int32)
+        self._cur = np.zeros((self.lanes, 1), np.int32)
+
+    def lane_load(self, bucket: int, lane: int, req: Request) -> None:
+        toks = np.zeros(bucket, np.int32)
+        toks[: len(req.tokens)] = req.tokens
+        self._cache = self._prefill(
+            self.params,
+            self._cache,
+            jnp.asarray(toks),
+            jnp.int32(lane),
+            jnp.int32(len(req.tokens)),
+        )
+        self._pos[lane] = len(req.tokens) - 1
+        self._cur[lane, 0] = req.tokens[-1]
+
+    def lanes_step(self, bucket: int, active: np.ndarray):
+        logits, self._cache = self._decode(
+            self.params,
+            self._cache,
+            jnp.asarray(self._cur),
+            jnp.asarray(self._pos),
+            bucket,
+        )
+        self._step_out = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        return self._step_out
+
+    def lane_advance(
+        self, bucket: int, lane: int, req: Request, out, depth: int
+    ) -> bool:
+        tok = int(out[lane])
+        req.generated.append(tok)
+        self._pos[lane] += 1                 # this lane's OWN position only
+        self._cur[lane, 0] = tok
+        return (
+            tok == self.eos_id
+            or len(req.generated) >= req.max_new_tokens
+            or int(self._pos[lane]) >= bucket - 1   # this lane's cache is full
+        )
+
+    def lane_finish(self, bucket: int, lane: int, req: Request, depth: int) -> None:
+        req.finish_time = time.time()
+
+    def bucket_end(self, bucket: int) -> None:
+        self._cache = None
+        self._step_out = None
 
 
 # ===========================================================================
@@ -362,7 +485,10 @@ class MultiTaskRouter:
     weights) and per-task encoder/head weights; dispatches requests by task.
 
     Models the paper's measurement (Fig. 11): task switches swap SRAM-class
-    weights only; embedding reload cost is paid once at power-on.
+    weights only; embedding reload cost is paid once at power-on.  A single
+    ``arbiter`` may be shared across all task servers — the hardware has one
+    LDO/ADPLL, and drains are sequential, so the shared modeled clock simply
+    keeps advancing across task switches.
     """
 
     def __init__(
@@ -371,6 +497,8 @@ class MultiTaskRouter:
         shared_embed: Any,
         task_params: Dict[str, Any],
         dvfs: Optional["LatencyAwareDVFSController"] = None,
+        arbiter: Optional["BatchedDVFSArbiter"] = None,
+        buckets=None,
     ):
         self.model = model
         self.shared_embed = shared_embed
@@ -379,7 +507,9 @@ class MultiTaskRouter:
         self.embed_reloads = 1          # power-on load only
         for name, tp in task_params.items():
             params = dict(tp, embed=shared_embed)
-            self.tasks[name] = ClassifierServer(model, params, dvfs=dvfs)
+            self.tasks[name] = ClassifierServer(
+                model, params, dvfs=dvfs, arbiter=arbiter, buckets=buckets
+            )
 
     def submit(self, task: str, req: Request):
         self.tasks[task].submit(req)
@@ -387,7 +517,7 @@ class MultiTaskRouter:
     def run_all(self) -> Dict[str, Dict[str, float]]:
         out = {}
         for name, server in self.tasks.items():
-            if server.queue:
+            if server.pending:
                 self.switches += 1
                 out[name] = server.run()
         return out

@@ -1,0 +1,187 @@
+"""Unified lane scheduler: the lifecycle shared by every serving engine.
+
+``ClassifierServer`` and ``DecoderServer`` used to each own a private copy of
+the same loop — submit -> queue -> refill free lanes -> fused step -> retire ->
+telemetry.  ``LaneScheduler`` extracts that lifecycle once and drives it
+through a small hook interface (``LaneEngine``), so an engine only supplies
+the compute: how to materialize a lane bucket, load a request into a lane,
+advance all lanes one fused step, and decide per-lane retirement.
+
+Length buckets
+--------------
+The queue is partitioned by *bucket*: a request is assigned the smallest
+configured bucket that fits its shape key (sequence length for the
+classifier, prompt + generation budget for the decoder), and its tokens are
+padded up to the bucket size by the engine.  Each bucket drains as its own
+fixed-shape ``[lanes, S_bucket]`` engine state, so jit compiles EXACTLY ONE
+step per bucket instead of one per distinct request length.  ``buckets=None``
+keeps the legacy behavior: every distinct shape key is its own bucket.
+
+Telemetry
+---------
+The scheduler owns the counters every engine used to duplicate: sentences,
+fused (dense) steps, active lane-step executions, per-bucket step counts,
+refills, and lane occupancy.  Trace counters stay in the engines (they are
+incremented inside traced bodies); the scheduler aggregates them per bucket.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Protocol, TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # circular: engine imports scheduler
+    from repro.serving.engine import Request
+
+
+class LaneEngine(Protocol):
+    """Compute hooks a serving engine implements to ride the scheduler.
+
+    The engine owns all device state (hidden tensors, KV caches, jitted
+    functions); the scheduler owns queues, lane bookkeeping, and telemetry.
+    """
+
+    def bucket_key(self, req: "Request") -> int:
+        """Shape key of a request (e.g. sequence length) used for bucketing."""
+        ...
+
+    def bucket_begin(self, bucket: int) -> None:
+        """Allocate the fixed-shape ``[lanes, bucket]`` state for a drain."""
+        ...
+
+    def lane_load(self, bucket: int, lane: int, req: "Request") -> None:
+        """Insert a request into a free lane (embed / prefill)."""
+        ...
+
+    def lanes_step(self, bucket: int, active: np.ndarray) -> Any:
+        """Run ONE fused step over all lanes; returns host-side step outputs."""
+        ...
+
+    def lane_advance(
+        self, bucket: int, lane: int, req: "Request", out: Any, depth: int
+    ) -> bool:
+        """Per-lane host postprocess after a step; True retires the lane."""
+        ...
+
+    def lane_finish(self, bucket: int, lane: int, req: "Request", depth: int) -> None:
+        """Retirement bookkeeping (final logits, DVFS report, ...)."""
+        ...
+
+    def bucket_end(self, bucket: int) -> None:
+        """Release / park the bucket state after its queue drained."""
+        ...
+
+
+class LaneScheduler:
+    """Length-bucketed continuation-batching lane scheduler.
+
+    Parameters
+    ----------
+    lanes:   number of hardware lanes (the fixed batch dimension).
+    engine:  the ``LaneEngine`` hooks supplying compute.
+    buckets: ascending bucket sizes (e.g. ``(32, 64, 128)``); a request lands
+             in the smallest bucket >= its shape key.  ``None`` = exact-shape
+             buckets (one bucket per distinct key — the legacy engines).
+    """
+
+    def __init__(self, lanes: int, engine: LaneEngine, buckets=None):
+        assert lanes >= 1
+        self.lanes = lanes
+        self.engine = engine
+        self.buckets = tuple(sorted(int(b) for b in buckets)) if buckets else None
+        assert self.buckets is None or len(set(self.buckets)) == len(self.buckets)
+        self.queues: Dict[int, deque] = {}
+        self.done: Dict[int, "Request"] = {}
+        # ---- lifetime telemetry (persists across run() calls) ----
+        self._sentences = 0
+        self._dense_steps = 0
+        self._lane_steps = 0            # ACTIVE lane x step executions
+        self._refills = 0
+        self._bucket_steps: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- queueing
+    def bucket_for(self, key: int) -> int:
+        if self.buckets is None:
+            return int(key)
+        for b in self.buckets:
+            if key <= b:
+                return b
+        raise ValueError(
+            f"shape key {key} exceeds the largest bucket {self.buckets[-1]}"
+        )
+
+    def submit(self, req: "Request") -> int:
+        """Queue a request; returns the bucket it landed in."""
+        req.submit_time = time.time()
+        b = self.bucket_for(self.engine.bucket_key(req))
+        self.queues.setdefault(b, deque()).append(req)
+        return b
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    # --------------------------------------------------------------- drains
+    def run(self) -> Dict[str, float]:
+        """Drain every non-empty bucket (ascending size); returns telemetry."""
+        for b in sorted(self.queues):
+            if self.queues[b]:
+                self._drain_bucket(b)
+        return self.telemetry()
+
+    def _drain_bucket(self, bucket: int) -> None:
+        q = self.queues[bucket]
+        eng = self.engine
+        eng.bucket_begin(bucket)
+        lane_req: List[Optional["Request"]] = [None] * self.lanes
+        lane_depth = np.zeros(self.lanes, np.int32)
+        active = np.zeros(self.lanes, bool)
+
+        while q or active.any():
+            # refill every free lane from the bucket queue (continuation
+            # batching: retired lanes never idle while work is queued)
+            for i in range(self.lanes):
+                if lane_req[i] is None and q:
+                    req = q.popleft()
+                    eng.lane_load(bucket, i, req)
+                    lane_req[i] = req
+                    lane_depth[i] = 0
+                    active[i] = True
+                    self._refills += 1
+            if not active.any():
+                break
+            out = eng.lanes_step(bucket, active.copy())
+            n_active = int(active.sum())
+            self._dense_steps += 1
+            self._lane_steps += n_active
+            self._bucket_steps[bucket] = self._bucket_steps.get(bucket, 0) + 1
+            lane_depth[active] += 1
+            for i in range(self.lanes):
+                if not active[i]:
+                    continue
+                req = lane_req[i]
+                if eng.lane_advance(bucket, i, req, out, int(lane_depth[i])):
+                    eng.lane_finish(bucket, i, req, int(lane_depth[i]))
+                    self.done[req.uid] = req
+                    self._sentences += 1
+                    lane_req[i] = None
+                    active[i] = False
+        eng.bucket_end(bucket)
+
+    # ------------------------------------------------------------ telemetry
+    def telemetry(self) -> Dict[str, float]:
+        return {
+            "sentences": self._sentences,
+            "dense_steps": self._dense_steps,
+            "lane_steps": self._lane_steps,
+            "refills": self._refills,
+            "buckets_used": len(self._bucket_steps),
+            "bucket_steps": dict(self._bucket_steps),
+            "lane_occupancy": (
+                self._lane_steps / (self._dense_steps * self.lanes)
+                if self._dense_steps
+                else 0.0
+            ),
+        }

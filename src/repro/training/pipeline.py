@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common.jax_compat import shard_map
+
 
 def pipeline_forward(
     layer_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -73,7 +75,7 @@ def pipeline_forward(
         mask = (stage_id == n_stages - 1).astype(outs.dtype)
         return jax.lax.psum(outs * mask, axis)
 
-    return jax.shard_map(
+    return shard_map(
         stage_prog,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.jax_compat import make_auto_mesh, shard_map
 from repro.training.compress import EFState, compressed_psum, ef_init
+
+
+def _dp_mesh():
+    return make_auto_mesh((1,), ("dp",))
 
 
 def test_error_feedback_accumulates():
@@ -13,9 +18,9 @@ def test_error_feedback_accumulates():
     ef = ef_init(g)
 
     def run(g, ef):
-        return jax.shard_map(
+        return shard_map(
             lambda gg: compressed_psum(gg, ef, "dp", 1),
-            mesh=jax.make_mesh((1,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,)),
+            mesh=_dp_mesh(),
             in_specs=(jax.sharding.PartitionSpec(),),
             out_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
         )(g)
@@ -36,7 +41,7 @@ def test_convergence_parity():
     def loss(w):
         return 0.5 * jnp.sum((w - target) ** 2)
 
-    mesh = jax.make_mesh((1,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _dp_mesh()
     P = jax.sharding.PartitionSpec
 
     w_plain = jnp.zeros(4)
@@ -48,7 +53,7 @@ def test_convergence_parity():
         w_plain = w_plain - lr * g_plain
 
         g = {"w": jax.grad(loss)(w_comp)}
-        out, ef = jax.shard_map(
+        out, ef = shard_map(
             lambda gg: compressed_psum(gg, ef, "dp", 1),
             mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
         )(g)
@@ -62,16 +67,15 @@ def test_wire_payload_is_int8():
     """The all-reduced payload is the int8 code (4x compression vs fp32)."""
     g = {"w": jnp.linspace(-3, 3, 101)}
     ef = ef_init(g)
-    traced = []
 
     def fake(gg):
         out, ef2 = compressed_psum(gg, ef, "dp", 1)
         return out, ef2
 
     jaxpr = jax.make_jaxpr(
-        lambda gg: jax.shard_map(
+        lambda gg: shard_map(
             fake,
-            mesh=jax.make_mesh((1,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,)),
+            mesh=_dp_mesh(),
             in_specs=(jax.sharding.PartitionSpec(),),
             out_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
         )(gg)

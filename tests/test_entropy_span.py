@@ -40,11 +40,22 @@ class TestEntropy:
         )
 
     def test_shift_invariant(self):
-        """The max-trick form must be invariant to logit shifts (incl. huge)."""
+        """The max-trick form must be invariant to logit shifts (incl. huge).
+
+        Tolerance note: ``x + 1e4`` in float32 rounds each logit to the
+        ~1.2e-3 ULP grid at 1e4 (eps * shift), so the SHIFTED input itself
+        differs from ``x`` by O(1e-3) before entropy is even computed; the
+        old atol=1e-4 asserted more precision than float32 carries and
+        flaked.  The max-trick invariance property itself is checked tightly
+        with a moderate shift whose rounding perturbation (~3e-6) stays far
+        inside the tolerance.
+        """
         x = jax.random.normal(jax.random.PRNGKey(2), (4, 5))
         h1 = entropy_from_logits(x)
         h2 = entropy_from_logits(x + 1e4)
-        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=5e-3)
+        h3 = entropy_from_logits(x + 256.0)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h3), atol=1e-5)
 
 
 class TestSpan:

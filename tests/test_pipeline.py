@@ -5,6 +5,19 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+from repro.common.jax_compat import HAS_AXIS_TYPES
+
+pytestmark = [
+    pytest.mark.multidevice,
+    pytest.mark.skipif(
+        not HAS_AXIS_TYPES,
+        reason="installed jax lacks jax.sharding.AxisType, which the "
+        "forced-multi-device subprocess snippet requires",
+    ),
+]
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -1,0 +1,205 @@
+"""Unified lane scheduler: length-bucketed fixed shapes (one compile per
+bucket), bucket padding parity, and per-lane KV-length decode parity against
+isolated single-request decoding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.early_exit import offramp_logits
+from repro.core.entropy import entropy_from_logits
+from repro.data.synthetic import SyntheticCLS
+from repro.models.model import build_model
+from repro.serving.engine import ClassifierServer, DecoderServer, Request
+from repro.serving.scheduler import LaneScheduler
+
+
+def _albert_model(threshold=0.6):
+    cfg = get_smoke_config("albert_edgebert")
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="none")
+    cfg = cfg.with_edgebert(
+        early_exit=dataclasses.replace(
+            cfg.edgebert.early_exit, entropy_threshold=threshold
+        )
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _decoder_model():
+    cfg = dataclasses.replace(
+        get_smoke_config("deepseek_7b"), dtype="float32", remat_policy="none"
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    return model, params, cfg
+
+
+class TestBucketAssignment:
+    def test_smallest_fitting_bucket(self):
+        class _E:  # minimal engine: bucket key = token length
+            def bucket_key(self, req):
+                return len(req.tokens)
+
+        sched = LaneScheduler(2, _E(), buckets=(32, 64, 128))
+        assert sched.bucket_for(10) == 32
+        assert sched.bucket_for(32) == 32
+        assert sched.bucket_for(33) == 64
+        assert sched.bucket_for(128) == 128
+        with pytest.raises(ValueError):
+            sched.bucket_for(129)
+
+    def test_exact_shape_buckets_when_unconfigured(self):
+        class _E:
+            def bucket_key(self, req):
+                return len(req.tokens)
+
+        sched = LaneScheduler(2, _E())          # buckets=None
+        assert sched.bucket_for(17) == 17       # every length its own bucket
+
+
+class TestBucketedCompileCount:
+    def test_one_step_trace_per_bucket_not_per_length(self):
+        """Five distinct request lengths over two buckets must compile the
+        fused step exactly twice — the bucketed-engine regression."""
+        model, params, cfg = _albert_model(threshold=0.5)
+        data = SyntheticCLS(cfg.vocab_size, 32, 10, num_classes=3, seed=0)
+        batch = data.batch(0)
+        server = ClassifierServer(model, params, batch_lanes=3, buckets=(16, 32))
+        lengths = [10, 13, 16, 24, 32]          # 3 -> bucket 16, 2 -> bucket 32
+        for i, L in enumerate(lengths * 2):
+            server.submit(Request(uid=i, tokens=batch["tokens"][i % 10][:L]))
+        stats = server.run()
+        assert stats["sentences"] == 10
+        assert stats["step_traces"] == 2
+        assert stats["step_traces_per_bucket"] == {16: 1, 32: 1}
+        assert stats["embed_traces"] == 2       # one embed shape per bucket
+        assert stats["buckets_used"] == 2
+
+    def test_second_drain_same_buckets_no_retrace(self):
+        model, params, cfg = _albert_model(threshold=0.6)
+        data = SyntheticCLS(cfg.vocab_size, 32, 4, num_classes=3, seed=1)
+        batch = data.batch(0)
+        server = ClassifierServer(model, params, batch_lanes=2, buckets=(16, 32))
+        for i, L in enumerate((12, 30, 16, 32)):
+            server.submit(Request(uid=i, tokens=batch["tokens"][i][:L]))
+        server.run()
+        for i, L in enumerate((11, 29, 15, 31)):
+            server.submit(Request(uid=4 + i, tokens=batch["tokens"][i][:L]))
+        stats = server.run()
+        assert stats["sentences"] == 8
+        assert stats["step_traces"] == 2        # still one per bucket
+
+    def test_padded_result_matches_native_length_reference(self):
+        """Bucket padding must NOT change the computed function: a short
+        sentence padded up to its bucket produces the same logits and exit
+        layer as the straight-line reference at its NATIVE length (pad
+        positions are masked out of attention via per-lane kv_len)."""
+        thr = 0.5
+        model, params, cfg = _albert_model(threshold=thr)
+        data = SyntheticCLS(cfg.vocab_size, 32, 4, num_classes=3, seed=2)
+        batch = data.batch(0)
+        server = ClassifierServer(model, params, batch_lanes=2, buckets=(16,))
+        for i in range(4):
+            server.submit(Request(uid=i, tokens=batch["tokens"][i][:11]))
+        server.run()
+        for i in range(4):
+            # reference: UNPADDED, exact 11-token shapes, no bucket, no mask
+            h = model.embed(params, jnp.asarray(batch["tokens"][i][:11])[None])
+            want_exit, want_lg = None, None
+            for li in range(cfg.n_layers):
+                span_z = model._span_for_layer(params, 0)
+                h, _, _ = model._dense_layer_step(
+                    params["layer"], h, causal=False, span_z=span_z
+                )
+                lg = offramp_logits(h, model._offramp(params))
+                ent = float(entropy_from_logits(lg)[0])
+                if ent < thr or li == cfg.n_layers - 1:
+                    want_exit, want_lg = li + 1, np.asarray(lg[0])
+                    break
+            req = server.done[i]
+            assert req.exit_layer == want_exit
+            np.testing.assert_allclose(req.result, want_lg, atol=5e-2)
+            assert np.argmax(req.result) == np.argmax(want_lg)
+
+
+class TestPerLaneKVDecode:
+    def _reference_decode(self, model, params, prompt, max_new, max_seq):
+        """Isolated single-request greedy decode — the ground truth a lane
+        must reproduce regardless of what its neighbours are doing."""
+        cache = model.init_cache(1, max_seq)
+        for t in range(len(prompt) - 1):
+            _, cache = model.decode_step(
+                params, cache, jnp.asarray([[int(prompt[t])]]), t
+            )
+        pos = len(prompt) - 1
+        cur = int(prompt[-1])
+        outs = []
+        for _ in range(max_new):
+            lg, cache = model.decode_step(params, cache, jnp.asarray([[cur]]), pos)
+            cur = int(jnp.argmax(lg[0, -1]))
+            outs.append(cur)
+            pos += 1
+        return outs
+
+    def test_staggered_lengths_with_refill_match_isolated(self):
+        """Prompts of different lengths + a mid-drain refill: every lane must
+        decode from its OWN position.  The old lock-step loop stepped refilled
+        lanes at the max active position (burning pad positions and attending
+        a zero gap) and cannot pass this."""
+        model, params, cfg = _decoder_model()
+        rng = np.random.default_rng(0)
+        prompts = [
+            rng.integers(4, cfg.vocab_size, size=L).astype(np.int32)
+            for L in (6, 9, 4, 7, 5)
+        ]
+        server = DecoderServer(model, params, batch_lanes=2, max_seq=32, eos_id=-1)
+        for i, p in enumerate(prompts):
+            server.submit(Request(uid=i, tokens=p, max_new_tokens=4))
+        stats = server.run()
+        assert stats["completed"] == 5
+        assert stats["decode_traces"] == 1 and stats["prefill_traces"] == 1
+        for i, p in enumerate(prompts):
+            want = self._reference_decode(model, params, p, 4, 32)
+            assert server.done[i].generated == want, i
+
+    def test_bucketed_caches_one_trace_per_bucket(self):
+        model, params, cfg = _decoder_model()
+        rng = np.random.default_rng(1)
+        # needs (len + max_new + 1): 4+3+1=8 -> bucket 8; 10+3+1=14 -> bucket 16
+        prompts = [rng.integers(4, cfg.vocab_size, size=L).astype(np.int32)
+                   for L in (4, 10, 4, 10)]
+        server = DecoderServer(
+            model, params, batch_lanes=2, max_seq=64, eos_id=-1, buckets=(8, 16)
+        )
+        for i, p in enumerate(prompts):
+            server.submit(Request(uid=i, tokens=p, max_new_tokens=3))
+        stats = server.run()
+        assert stats["completed"] == 4
+        assert stats["buckets_used"] == 2
+        assert stats["decode_traces"] == 2      # one per cache bucket
+        assert stats["decode_traces_per_bucket"] == {8: 1, 16: 1}
+        for i, p in enumerate(prompts):
+            bucket = 8 if len(p) == 4 else 16
+            want = self._reference_decode(model, params, p, 3, bucket)
+            assert server.done[i].generated == want, i
+
+    def test_lane_occupancy_beats_lockstep_accounting(self):
+        """Per-lane positions mean decode steps track the LONGEST remaining
+        lane, not a global max position; total steps equal the work of the
+        slowest chain under continuation batching."""
+        model, params, cfg = _decoder_model()
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(4, cfg.vocab_size, size=L).astype(np.int32)
+                   for L in (5, 5, 5, 5)]
+        server = DecoderServer(model, params, batch_lanes=2, max_seq=32, eos_id=-1)
+        for i, p in enumerate(prompts):
+            server.submit(Request(uid=i, tokens=p, max_new_tokens=3))
+        stats = server.run()
+        # 4 requests x 3 tokens over 2 lanes = 12 lane-steps in 6 fused steps
+        assert stats["decode_steps"] == 6
+        assert stats["lane_occupancy"] == 1.0

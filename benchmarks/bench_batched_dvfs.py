@@ -30,10 +30,24 @@ maximum point, a hardware reality the per-sentence analysis hides.  With
 deployment-style headroom (default 1.5x the full-model latency) the arbiter
 recovers most of the per-sentence savings while staying feasible.
 
+Per-bucket cycle models: each lane is budgeted (deadline, step duration AND
+energy) at its OWN bucket's layer cost, and the max-V/f baseline is priced
+the same way, so short buckets are no longer overcharged at the largest
+bucket's rate.
+
+Interleaved EDF scenario (``batched_dvfs_edf_interleave``): a deep
+largest-bucket drain is mid-flight when tight-deadline short-bucket requests
+arrive; the step()-clocked engine's EDF policy must retire EVERY short
+request before the drain completes, meet every short deadline, and add ZERO
+compiled traces vs the sequential drain.  Queue-delay percentiles
+(arrival -> first compute, in fused steps) make starvation regressions
+visible.
+
 Also regression-checks the bucketed engine's compile telemetry: the fused
-step must trace EXACTLY once per length bucket across the whole drain (the
-CI grep-gate in scratch/run_ci.sh parses the ``step_traces``/``bucket_count``
-pair emitted below).
+step must trace EXACTLY once per length bucket across the whole drain — in
+BOTH scenarios (the CI grep-gate in scratch/run_ci.sh parses every
+``step_traces``/``bucket_count`` pair emitted below, and a second gate
+requires ``edf_deadline_misses=0``).
 
 Usage:
   python benchmarks/bench_batched_dvfs.py            # trained toy EdgeBERT
@@ -123,7 +137,60 @@ def _drain(model, params, buckets, reqs, arbiter) -> dict:
     stats = server.run()
     stats["exits"] = [server.done[r.uid].exit_layer for r in reqs]
     stats["traces"] = {r.uid: server.done[r.uid].entropy_trace for r in reqs}
+    stats["req_buckets"] = [server.done[r.uid].bucket for r in reqs]
     return stats
+
+
+def _interleaved_edf(model, params, cfg, buckets, data, ctrl_factory) -> dict:
+    """Deep largest-bucket drain + late tight-deadline short requests.
+
+    Exercises the step()-clocked API end to end: the drain is advanced a few
+    steps, the short requests are submitted MID-FLIGHT with a per-request
+    SLO, and the EDF policy must preempt the drain to retire them — with no
+    new compiled traces and no short-request deadline miss.
+    """
+    from repro.serving.dvfs import BatchedDVFSArbiter
+
+    ctrl = ctrl_factory()
+    arb = BatchedDVFSArbiter(ctrl)
+    server = ClassifierServer(
+        model, params, batch_lanes=LANES, arbiter=arb, buckets=buckets
+    )
+    deep_b, short_b = max(buckets), min(buckets)
+    n_deep, n_short = 5 * LANES, LANES
+    for i in range(n_deep):
+        b = data.batch(300 + i // data.global_batch)
+        toks = b["tokens"][i % data.global_batch][:deep_b]
+        server.submit(Request(uid=i, tokens=np.asarray(toks, np.int32)))
+    # advance until ~a quarter of the drain retired: genuinely mid-flight,
+    # with well over the shorts' worth of deep work still queued behind them
+    while len(server.done) < n_deep // 4:
+        assert server.step() is not None, "drain exhausted during warmup"
+    # tight-but-feasible SLO: full predicted depth at the SHORT bucket's own
+    # layer cost, with modest headroom for arbitration and switching stalls
+    t_short = ctrl.cycles_for_seq_len(short_b) / ctrl.max_op.freq_hz
+    deadline = cfg.n_layers * t_short * 1.5
+    for j in range(n_short):
+        b = data.batch(400 + j // data.global_batch)
+        toks = b["tokens"][j % data.global_batch][: short_b - 2]
+        server.submit(Request(
+            uid=1000 + j, tokens=np.asarray(toks, np.int32), deadline_s=deadline
+        ))
+    while server.step() is not None:
+        pass
+    st = server.telemetry()
+    drain_last = max(server.done[i].retire_step for i in range(n_deep))
+    shorts = [server.done[1000 + j] for j in range(n_short)]
+    st["short_before_drain"] = sum(1 for r in shorts if r.retire_step < drain_last)
+    st["n_short"] = n_short
+    # the SLO is submission-anchored: modeled queue wait counts toward it
+    st["edf_deadline_misses"] = sum(
+        1
+        for r in shorts
+        if (r.admit_s - r.arrival_s) + (r.latency_s or 0.0)
+        > r.deadline_s * (1 + 1e-9)
+    )
+    return st
 
 
 def main() -> None:
@@ -143,9 +210,9 @@ def main() -> None:
     assert n_queue > 0, "--queue must be positive"
     buckets = (16, 32) if data.seq_len <= 32 else (32, 64, data.seq_len)
 
-    # the arbiter models the WORST-CASE bucket's per-layer cost (conservative:
-    # short-bucket sentences are overcharged a little, deadlines never under-
-    # budgeted); stats therefore use the largest bucket's sequence length
+    # controller stats anchor at the LARGEST bucket; the arbiter then budgets
+    # every lane at its OWN bucket's layer cycles (per-bucket cycle models),
+    # so short buckets are no longer overcharged at the worst-case rate
     stats = albert_layer_stats(seq_len=max(buckets))
     stats.n_layers = cfg.n_layers
     target = no_early_exit_baseline(stats)["latency_s"] * args.target_mult
@@ -176,8 +243,19 @@ def main() -> None:
     e_online = st_on["arb_energy_j"]
 
     # ---- per-sentence accountings over the SAME drain ------------------------
+    # max-V/f replay priced at each sentence's OWN bucket cost, matching the
+    # arbiter's per-bucket cycle models (a fair baseline: pricing it at the
+    # largest bucket would hand the shared clock a free win on short buckets)
     exits = st["exits"]
-    e_max_vf = float(sum(exits)) * ctrl.layer_energy(ctrl.max_op)
+    e_max_vf = float(
+        sum(
+            exits[i]
+            * ctrl.layer_energy(ctrl.max_op)
+            * ctrl.cycles_for_seq_len(st["req_buckets"][i])
+            / ctrl.cycles_per_layer
+            for i in range(n_queue)
+        )
+    )
     e_alg1 = float(
         sum(
             ctrl.sentence_report(st["traces"][i], exit_layer=exits[i]).energy_j
@@ -209,6 +287,25 @@ def main() -> None:
         f"step_traces={st['step_traces']};bucket_count={len(buckets)};"
         f"per_bucket={st['step_traces_per_bucket']};lane_occupancy={st['lane_occupancy']:.2f}",
     )
+    emit(
+        "batched_queue_delay", 0.0,
+        f"p50_steps={st['queue_delay_steps_p50']:.1f};"
+        f"p95_steps={st['queue_delay_steps_p95']:.1f};"
+        f"max_steps={st['queue_delay_steps_max']:.0f};queue={n_queue};lanes={LANES}",
+    )
+
+    # ---- interleaved EDF scenario: late tight-SLO shorts vs a deep drain -----
+    st_edf = _interleaved_edf(
+        model, params, cfg, buckets, data,
+        lambda: LatencyAwareDVFSController(stats, target, predictor=predictor),
+    )
+    emit(
+        "batched_dvfs_edf_interleave", 0.0,
+        f"short_before_drain={st_edf['short_before_drain']}/{st_edf['n_short']};"
+        f"edf_deadline_misses={st_edf['edf_deadline_misses']};"
+        f"step_traces={st_edf['step_traces']};bucket_count={len(buckets)};"
+        f"queue_delay_p95={st_edf['queue_delay_steps_p95']:.1f}",
+    )
 
     ok = True
     if e_shared >= e_max_vf:
@@ -221,6 +318,25 @@ def main() -> None:
         print(
             f"FAIL: fused step traced {st['step_traces']}x for "
             f"{len(buckets)} buckets (want exactly one compile per bucket)"
+        )
+        ok = False
+    if st_edf["short_before_drain"] < st_edf["n_short"]:
+        print(
+            f"FAIL: EDF retired only {st_edf['short_before_drain']}/"
+            f"{st_edf['n_short']} tight-deadline shorts before the deep "
+            "drain completed (cross-bucket preemption broken)"
+        )
+        ok = False
+    if st_edf["edf_deadline_misses"]:
+        print(
+            f"FAIL: {st_edf['edf_deadline_misses']}/{st_edf['n_short']} "
+            "tight-deadline shorts missed their per-request SLO under EDF"
+        )
+        ok = False
+    if st_edf["step_traces"] > len(buckets):
+        print(
+            f"FAIL: interleaved stepping retraced the fused step "
+            f"({st_edf['step_traces']}x for {len(buckets)} buckets)"
         )
         ok = False
     for name, s in (("shared_clock", st), ("online", st_on)):
@@ -237,7 +353,9 @@ def main() -> None:
         f"{e_max_vf / e_alg1:.2f}x, infeasible on shared hardware) at target "
         f"{target * 1e3:.2f} ms; one compile per bucket "
         f"({st['step_traces']}/{len(buckets)}); online calibration "
-        f"{e_max_vf / e_online:.2f}x with no profiling pass"
+        f"{e_max_vf / e_online:.2f}x with no profiling pass; EDF interleave: "
+        f"{st_edf['short_before_drain']}/{st_edf['n_short']} shorts beat the "
+        f"drain, {st_edf['edf_deadline_misses']} SLO misses"
     )
 
 

@@ -11,11 +11,15 @@
 #   * bench_batched_dvfs:  shared-clock arbitration (one LDO/ADPLL) below
 #                          per-sentence max-V/f replay at equal target
 #                          latency, with exactly one compile per length
-#                          bucket.
-# A grep-gate re-checks the bucketed engine's compile telemetry from the
-# emitted `step_traces=N;bucket_count=M` pair: N > M means the fused step
-# recompiled inside a bucket — fail even if the benchmark's own asserts
-# were loosened.
+#                          bucket — including the INTERLEAVED EDF scenario
+#                          (late tight-SLO shorts preempting a deep drain).
+# Grep-gates re-check the emitted telemetry even if the benchmark's own
+# asserts were loosened:
+#   * EVERY `step_traces=N;bucket_count=M` pair (sequential drain AND
+#     interleaved stepping) must satisfy N <= M — N > M means the fused
+#     step recompiled inside a bucket;
+#   * `edf_deadline_misses=K` from the interleaved scenario must be 0 —
+#     a tight per-request SLO admitted mid-drain may not be missed.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,20 +38,46 @@ batched_log=$(mktemp)
 python benchmarks/bench_batched_dvfs.py --smoke | tee "$batched_log"
 batched=$?
 
-echo "== grep-gate: step_traces <= bucket_count =="
+echo "== grep-gate: step_traces <= bucket_count (all scenarios) =="
 gate=0
-pair=$(grep -o 'step_traces=[0-9]*;bucket_count=[0-9]*' "$batched_log" | head -1)
-if [ -z "$pair" ]; then
+pairs=$(grep -o 'step_traces=[0-9]*;bucket_count=[0-9]*' "$batched_log")
+if [ -z "$pairs" ]; then
     echo "GATE FAIL: no step_traces/bucket_count telemetry emitted"
     gate=1
 else
-    traces=${pair#step_traces=}; traces=${traces%%;*}
-    count=${pair##*bucket_count=}
-    if [ "$traces" -gt "$count" ]; then
-        echo "GATE FAIL: fused step traced ${traces}x for ${count} buckets"
+    npairs=0
+    while IFS= read -r pair; do
+        npairs=$((npairs + 1))
+        traces=${pair#step_traces=}; traces=${traces%%;*}
+        count=${pair##*bucket_count=}
+        if [ "$traces" -gt "$count" ]; then
+            echo "GATE FAIL: fused step traced ${traces}x for ${count} buckets"
+            gate=1
+        else
+            echo "gate ok: ${traces} traces / ${count} buckets"
+        fi
+    done <<< "$pairs"
+    if [ "$npairs" -lt 2 ]; then
+        echo "GATE FAIL: expected trace telemetry from BOTH the sequential"
+        echo "           and the interleaved scenario, got ${npairs} pair(s)"
+        gate=1
+    fi
+fi
+
+echo "== grep-gate: edf_deadline_misses == 0 =="
+edf=$(grep -o 'edf_deadline_misses=[0-9]*' "$batched_log" | head -1)
+if [ -z "$edf" ]; then
+    echo "GATE FAIL: no edf_deadline_misses telemetry emitted (interleaved"
+    echo "           EDF scenario missing from bench_batched_dvfs)"
+    gate=1
+else
+    misses=${edf#edf_deadline_misses=}
+    if [ "$misses" -gt 0 ]; then
+        echo "GATE FAIL: ${misses} tight-SLO requests missed their deadline"
+        echo "           under interleaved EDF stepping"
         gate=1
     else
-        echo "gate ok: ${traces} traces / ${count} buckets"
+        echo "gate ok: 0 EDF deadline misses"
     fi
 fi
 rm -f "$batched_log"

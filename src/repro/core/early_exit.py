@@ -295,6 +295,40 @@ class OnlineExitCalibrator:
         )
 
 
+def predicted_remaining_layers(
+    entropy_trace,
+    depth: int,
+    n_layers: int,
+    *,
+    predict_fn: Optional[Callable[[float], float]] = None,
+) -> float:
+    """Remaining encoder layers a sentence is predicted to need.
+
+    The scheduler's EDF policy ranks buckets by slack = deadline - now -
+    (this value x the bucket's step time).  ``predict_fn`` maps a first
+    off-ramp entropy to a predicted total exit layer — callers pass the ONE
+    prediction chain they already own (e.g.
+    ``LatencyAwareDVFSController.predict``, which prefers the online
+    calibrator over the static LUT), so the EDF slack estimate cannot drift
+    from the DVFS frequency decision.  Before the first off-ramp (empty
+    ``entropy_trace``) or without a ``predict_fn`` the prediction is the
+    conservative full depth.  A sentence that has RUN PAST its predicted
+    exit is a misprediction: its true exit is unknown, so the remainder
+    reverts to the conservative full depth (mirroring the DVFS escalation
+    guard — an optimistic remainder here would let EDF defer the lane until
+    its deadline is unrecoverable).  Clamped to >= 1: there is always at
+    least the step that retires it.
+    """
+    if len(entropy_trace) == 0 or predict_fn is None:
+        p = float(n_layers)
+    else:
+        p = float(predict_fn(float(entropy_trace[0])))
+    p = float(np.clip(p, 1.0, n_layers))
+    if depth >= p - 1e-9:                 # overran the prediction: escalate
+        return max(float(n_layers) - depth, 1.0)
+    return max(p - depth, 1.0)
+
+
 def runtime_savings(exit_layers: jnp.ndarray, n_layers: int) -> jnp.ndarray:
     """Paper's 'theoretical runtime savings' = 1 - avg_exit/L (Fig. 4)."""
     return 1.0 - jnp.mean(exit_layers.astype(jnp.float32)) / n_layers

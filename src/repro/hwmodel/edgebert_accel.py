@@ -23,7 +23,7 @@ All constants are module-level and documented; anchors marked [TableV]/[Fig10]
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Optional
 
 CLOCK_HZ = 500e6
@@ -133,6 +133,27 @@ def layer_cycles(stats: WorkloadStats, n: int = 16, *, use_span: bool = True) ->
     vector_cycles = stats.vector_elems / VPU_LANES
     layer = matmul_cycles + vector_cycles + entropy_cycles(stats) + GB_CONTROL_CYCLES
     return layer
+
+
+def scale_stats_to_seq_len(stats: WorkloadStats, seq_len: int) -> WorkloadStats:
+    """Rescale one layer's workload statistics to a different sequence length.
+
+    Per-token intensities are preserved: encoder matmul FLOPs and vector
+    elements scale linearly with tokens, attention score/context FLOPs
+    quadratically.  This is how the DVFS layer derives PER-BUCKET cycle
+    models from a single measured/analytic ``WorkloadStats`` — a 32-token
+    bucket's lanes get budgeted (deadline AND energy) at 32-token cost
+    instead of the largest bucket's.
+    """
+    assert seq_len >= 1 and stats.seq_len >= 1
+    r = seq_len / stats.seq_len
+    return replace(
+        stats,
+        matmul_flops=stats.matmul_flops * r,
+        attention_score_flops=stats.attention_score_flops * r * r,
+        vector_elems=stats.vector_elems * r,
+        seq_len=int(seq_len),
+    )
 
 
 def entropy_cycles(stats: WorkloadStats) -> float:

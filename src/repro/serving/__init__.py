@@ -1,5 +1,15 @@
 from repro.serving.engine import ClassifierServer, DecoderServer, Request, MultiTaskRouter
-from repro.serving.scheduler import LaneEngine, LaneScheduler
+from repro.serving.scheduler import (
+    BucketView,
+    EDFPolicy,
+    EngineHooks,
+    FIFOPolicy,
+    LaneEngine,
+    LaneScheduler,
+    SchedulingPolicy,
+    StepReport,
+    WeightedRoundRobinPolicy,
+)
 from repro.serving.dvfs import (
     DEFAULT_DVFS_TABLE,
     ArbiterStepDecision,

@@ -141,7 +141,9 @@ class DeployedAlbert:
                     exit_layer[i] = li + 1
         return out_logits, exit_layer
 
-    def classify_with_dvfs(self, tokens: jnp.ndarray, controller, arbiter=None):
+    def classify_with_dvfs(
+        self, tokens: jnp.ndarray, controller, arbiter=None, deadlines_s=None
+    ):
         """Kernel-path classification + DVFS schedule.
 
         Returns (logits [B, C], exit_layer [B], reports) — the deployed
@@ -153,18 +155,31 @@ class DeployedAlbert:
         batch shares ONE LDO/ADPLL, so the whole lock-step batch is
         arbitrated step-by-step (one (V, f) per layer step, switching stalls
         charged) and per-sentence ``LaneDVFSReport``s come back instead.
+        ``deadlines_s`` (length-B, entries optional) gives each sentence its
+        own latency budget; ``None`` entries use the controller target.
         """
         logits, exit_layer = self.classify(tokens)
+        assert deadlines_s is None or len(deadlines_s) == len(exit_layer)
         if arbiter is not None:
             assert arbiter.c is controller, (
                 "arbiter was built over a different controller than the one "
                 "passed — its reports would reflect the wrong target/table"
             )
-            reports = arbiter.replay_batch(self.last_entropy_traces, exit_layer)
+            reports = arbiter.replay_batch(
+                self.last_entropy_traces, exit_layer, deadlines_s=deadlines_s
+            )
         else:
             reports = [
-                controller.sentence_report(trace, exit_layer=int(el))
-                for trace, el in zip(self.last_entropy_traces, exit_layer)
+                controller.sentence_report(
+                    trace,
+                    exit_layer=int(el),
+                    target_latency_s=(
+                        None if deadlines_s is None else deadlines_s[i]
+                    ),
+                )
+                for i, (trace, el) in enumerate(
+                    zip(self.last_entropy_traces, exit_layer)
+                )
             ]
         return logits, exit_layer, reports
 

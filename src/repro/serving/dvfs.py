@@ -53,6 +53,7 @@ from repro.hwmodel.edgebert_accel import (
     layer_cycles,
     layer_energy_j,
     op_switch_overhead,
+    scale_stats_to_seq_len,
 )
 
 
@@ -150,7 +151,9 @@ class LatencyAwareDVFSController:
         # by observe_exit() as sentences retire (no offline profiling pass);
         # takes precedence over a static ``predictor`` once armed
         self.online = online_calibrator
+        self._use_span = use_span
         self.cycles_per_layer = layer_cycles(stats, n, use_span=use_span)
+        self._bucket_cycles: Dict[int, float] = {int(stats.seq_len): self.cycles_per_layer}
         # per-layer energy at each table point: E ~ (V/V_nom)^2, f-independent
         self._e_layer = {
             op: layer_energy_j(
@@ -169,6 +172,20 @@ class LatencyAwareDVFSController:
 
     def layer_energy(self, op: OperatingPoint) -> float:
         return self._e_layer[op]
+
+    def cycles_for_seq_len(self, seq_len: int) -> float:
+        """Per-bucket cycle model: layer cycles at ``seq_len``, from the
+        controller's stats rescaled token-linearly (matmul/vector) and
+        token-quadratically (attention scores).  Cached per length — this is
+        what lets the batched arbiter budget each lane at ITS bucket's cost
+        instead of the largest bucket's (ROADMAP per-bucket-cycles item)."""
+        key = int(seq_len)
+        if key not in self._bucket_cycles:
+            self._bucket_cycles[key] = layer_cycles(
+                scale_stats_to_seq_len(self.stats, key), self.n,
+                use_span=self._use_span,
+            )
+        return self._bucket_cycles[key]
 
     def op_for_freq(self, need_hz: float) -> OperatingPoint:
         """Slowest table point with freq >= need_hz (max point if none) —
@@ -204,13 +221,23 @@ class LatencyAwareDVFSController:
 
     # -------------------------------------------------------------- Alg. 1
     def sentence_report(
-        self, entropy_trace: Sequence[float], exit_layer: Optional[int] = None
+        self,
+        entropy_trace: Sequence[float],
+        exit_layer: Optional[int] = None,
+        *,
+        target_latency_s: Optional[float] = None,
     ) -> DVFSReport:
         """Run Alg. 1 for one sentence given its per-layer off-ramp entropies.
 
         ``entropy_trace[i]`` is the entropy after layer i+1; the trace ends at
         the layer the sentence exited (``exit_layer`` defaults to its length).
+        ``target_latency_s`` overrides the controller-global target with a
+        per-request deadline (the serving engine passes ``Request.deadline_s``).
         """
+        target = (
+            self.target_latency_s if target_latency_s is None else float(target_latency_s)
+        )
+        assert target > 0
         if exit_layer is None:
             exit_layer = len(entropy_trace)
         assert exit_layer >= 1 and len(entropy_trace) >= 1
@@ -227,7 +254,7 @@ class LatencyAwareDVFSController:
                 op=self.max_op,
                 latency_s=latency,
                 energy_j=energy,
-                deadline_met=latency <= self.target_latency_s * (1 + 1e-9),
+                deadline_met=latency <= target * (1 + 1e-9),
                 energy_max_freq_j=e_max,
                 escalated_layers=0,
             )
@@ -235,7 +262,7 @@ class LatencyAwareDVFSController:
         # line 2: predict the total exit layer from the first off-ramp entropy
         predicted = max(self.predict(entropy_trace[0]), 2.0)
         # lines 3-4: slowest (V, f) finishing the predicted remainder in time
-        op = self.select_op(predicted - 1.0, self.target_latency_s - latency)
+        op = self.select_op(predicted - 1.0, target - latency)
 
         escalated = 0
         for li in range(2, exit_layer + 1):
@@ -252,7 +279,7 @@ class LatencyAwareDVFSController:
             op=op,
             latency_s=latency,
             energy_j=energy,
-            deadline_met=latency <= self.target_latency_s * (1 + 1e-9),
+            deadline_met=latency <= target * (1 + 1e-9),
             energy_max_freq_j=exit_layer * e_max,
             escalated_layers=escalated,
         )
@@ -287,7 +314,10 @@ class _LaneClock:
     """Arbiter-side state of one in-flight lane."""
 
     admit_s: float                        # modeled admission time
-    deadline_s: float                     # admit + target latency
+    deadline_s: float                     # admit + this lane's OWN target
+    target_s: float                       # the lane's latency budget (per-
+                                          # request SLO or controller target)
+    cycles_per_layer: float               # this lane's BUCKET layer cost
     depth: int = 0                        # encoder layers completed
     predicted_exit: Optional[float] = None  # set after the first off-ramp
     first_entropy: Optional[float] = None
@@ -317,6 +347,7 @@ class LaneDVFSReport:
     deadline_met: bool
     escalated_layers: int
     slowest_op: OperatingPoint            # lowest point the sentence ran at
+    target_s: float = 0.0                 # the deadline the lane was judged by
 
 
 class BatchedDVFSArbiter:
@@ -333,6 +364,18 @@ class BatchedDVFSArbiter:
     escalation) require the maximum point.  Every operating-point change is
     charged the LDO/ADPLL switching stall (`hwmodel.op_switch_overhead`) —
     the cost a per-sentence replay never models.
+
+    Per-request deadlines: ``admit`` accepts the lane's OWN latency budget
+    (``deadline_s``; the serving engine passes ``Request.deadline_s``), so
+    the shared-clock decision maximizes slack per lane against THAT lane's
+    deadline — the controller-global target is only the fallback.  It also
+    accepts the lane's bucket-specific ``cycles_per_layer``: required
+    frequency, step duration, and energy are all budgeted at the lane's OWN
+    bucket cost instead of the largest bucket's.
+
+    Lane keys are opaque hashables — the engine uses (server, bucket, lane)
+    tuples because cross-bucket time slicing keeps several buckets' lanes in
+    flight at once.
 
     The arbiter advances a MODELED clock (`now_s`); per-sentence latency is
     measured from lane admission, matching the per-sentence controller's
@@ -352,21 +395,41 @@ class BatchedDVFSArbiter:
         self.steps = 0
 
     # ------------------------------------------------------------ lifecycle
-    def admit(self, lane: int) -> None:
-        """A request entered a lane: its deadline clock starts now."""
+    def admit(
+        self,
+        lane,
+        *,
+        deadline_s: Optional[float] = None,
+        cycles_per_layer: Optional[float] = None,
+    ) -> None:
+        """A request entered a lane: its deadline clock starts now.
+
+        ``deadline_s``: this lane's OWN latency budget (``Request.deadline_s``);
+        ``None`` falls back to the controller-global target.
+        ``cycles_per_layer``: the lane's bucket-specific layer cost; ``None``
+        uses the controller's (largest-bucket) stats.
+        """
         assert lane not in self._lanes, f"lane {lane} already in flight"
+        target = self.c.target_latency_s if deadline_s is None else float(deadline_s)
+        assert target > 0
         self._lanes[lane] = _LaneClock(
-            admit_s=self.now_s, deadline_s=self.now_s + self.c.target_latency_s
+            admit_s=self.now_s,
+            deadline_s=self.now_s + target,
+            target_s=target,
+            cycles_per_layer=(
+                self.c.cycles_per_layer if cycles_per_layer is None
+                else float(cycles_per_layer)
+            ),
         )
 
-    def observe_entropy(self, lane: int, entropy: float) -> None:
+    def observe_entropy(self, lane, entropy: float) -> None:
         """First off-ramp evaluated: Alg. 1 line 2 prediction for this lane."""
         st = self._lanes[lane]
         if st.predicted_exit is None:
             st.first_entropy = float(entropy)
             st.predicted_exit = max(self.c.predict(entropy), float(st.depth + 1))
 
-    def required_hz(self, lane: int) -> float:
+    def required_hz(self, lane) -> float:
         """Frequency this lane needs from the SHARED clock right now.
 
         Before the first off-ramp there is no prediction (Alg. 1 line 1), so
@@ -375,7 +438,8 @@ class BatchedDVFSArbiter:
         run-layer-1-at-nominal rule, and it scales down when the target has
         headroom.  inf encodes 'maximum point, unconditionally': a lane past
         its predicted exit escalates (misprediction guard), and exhausted
-        slack leaves no choice.
+        slack leaves no choice.  Remaining work is costed at the lane's OWN
+        bucket cycles and judged against the lane's OWN deadline.
         """
         st = self._lanes[lane]
         predicted = st.predicted_exit
@@ -387,10 +451,16 @@ class BatchedDVFSArbiter:
         if t_rem <= 0:
             return float("inf")
         remaining = predicted - st.depth
-        return remaining * self.c.cycles_per_layer / t_rem
+        return remaining * st.cycles_per_layer / t_rem
 
-    def step(self, active_lanes: Sequence[int]) -> ArbiterStepDecision:
-        """Arbitrate + account ONE fused step over ``active_lanes``."""
+    def step(self, active_lanes: Sequence) -> ArbiterStepDecision:
+        """Arbitrate + account ONE fused step over ``active_lanes``.
+
+        The scheduler steps one bucket at a time, so the stepped lanes share
+        a bucket; the step duration is that bucket's layer time (max over the
+        stepped lanes' cycle costs) and each lane's energy is charged at its
+        own bucket's cost.
+        """
         lanes = list(active_lanes)
         assert lanes, "step() needs at least one active lane"
         need = {i: self.required_hz(i) for i in lanes}
@@ -409,19 +479,24 @@ class BatchedDVFSArbiter:
         self.cur_op = op
 
         e_layer = self.c.layer_energy(op)
+        step_cycles = 0.0
         for i in lanes:
             st = self._lanes[i]
             st.depth += 1
-            st.energy_j += e_layer
+            # energy ~ P(V) * cycles / f: scale the controller's per-layer
+            # energy by this lane's bucket cycle ratio
+            e_lane = e_layer * (st.cycles_per_layer / self.c.cycles_per_layer)
+            st.energy_j += e_lane
+            self.compute_energy_j += e_lane
+            step_cycles = max(step_cycles, st.cycles_per_layer)
             if st.slowest_op is None or op.freq_hz < st.slowest_op.freq_hz:
                 st.slowest_op = op
-        self.compute_energy_j += len(lanes) * e_layer
-        dt = self.c.cycles_per_layer / op.freq_hz
+        dt = step_cycles / op.freq_hz
         self.now_s += dt
         self.steps += 1
         return ArbiterStepDecision(op=op, dt_s=dt, switched=switched, need_hz=need)
 
-    def retire(self, lane: int, exit_layer: int) -> LaneDVFSReport:
+    def retire(self, lane, exit_layer: int) -> LaneDVFSReport:
         """Lane exited: close its clock, emit its report, free the lane."""
         st = self._lanes.pop(lane)
         assert st.depth == exit_layer, (st.depth, exit_layer)
@@ -440,9 +515,10 @@ class BatchedDVFSArbiter:
             predicted_exit=predicted,
             latency_s=latency,
             energy_j=st.energy_j,
-            deadline_met=latency <= self.c.target_latency_s * (1 + 1e-9),
+            deadline_met=latency <= st.target_s * (1 + 1e-9),
             escalated_layers=escalated,
             slowest_op=st.slowest_op if st.slowest_op is not None else self.c.max_op,
+            target_s=st.target_s,
         )
 
     # ------------------------------------------------------------ accounting
@@ -471,7 +547,10 @@ class BatchedDVFSArbiter:
 
     # ------------------------------------------------------------- batch API
     def replay_batch(
-        self, entropy_traces: Sequence[Sequence[float]], exit_layers: Sequence[int]
+        self,
+        entropy_traces: Sequence[Sequence[float]],
+        exit_layers: Sequence[int],
+        deadlines_s: Optional[Sequence[Optional[float]]] = None,
     ) -> List[LaneDVFSReport]:
         """Arbitrate a lock-step batch (the kernel-path ``classify`` schedule).
 
@@ -479,12 +558,17 @@ class BatchedDVFSArbiter:
         accelerator's layer-serial batch), stepped together while active, and
         retired at their recorded exit layers.  This is the batched
         counterpart of replaying ``sentence_report`` per sentence.
+        ``deadlines_s`` gives each sentence its own latency budget (``None``
+        entries fall back to the controller target).
         """
         assert self.in_flight == 0, "replay_batch needs an idle arbiter"
         exits = [int(e) for e in exit_layers]
         assert len(entropy_traces) == len(exits) and all(e >= 1 for e in exits)
+        assert deadlines_s is None or len(deadlines_s) == len(exits)
         for i in range(len(exits)):
-            self.admit(i)
+            self.admit(
+                i, deadline_s=None if deadlines_s is None else deadlines_s[i]
+            )
         reports: Dict[int, LaneDVFSReport] = {}
         depth = 0
         while True:

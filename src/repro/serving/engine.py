@@ -1,15 +1,28 @@
 """Serving engines on the unified lane scheduler: length-bucketed fixed
-shapes + shared-clock batched DVFS.
+shapes, cross-bucket time slicing, per-request deadlines + shared-clock
+batched DVFS.
 
 Architecture (this module + ``serving/scheduler.py`` + ``serving/dvfs.py``):
 
 * ``LaneScheduler`` owns the lifecycle both engines used to duplicate —
   submit -> length-bucketed queues -> refill free lanes -> fused step ->
-  retire -> telemetry.  The queue is partitioned into ``[lanes, S_bucket]``
-  buckets (e.g. 32/64/128): a request lands in the smallest bucket that fits
-  and is padded up to it, so jit compiles EXACTLY ONE step per bucket instead
-  of one per distinct request length.  ``buckets=None`` keeps exact-shape
-  buckets (one per distinct length).
+  retire -> telemetry — and clocks it INCREMENTALLY: each ``step()`` advances
+  exactly one bucket, chosen by a pluggable policy (default: EDF on
+  per-request deadlines with a weighted-round-robin fallback), so a deep
+  128-token drain no longer starves queued 32-token traffic.  Requests may be
+  submitted between steps; ``poll()`` returns completions; ``run()`` remains
+  the drain-everything back-compat wrapper.  The queue is partitioned into
+  ``[lanes, S_bucket]`` buckets (e.g. 32/64/128): a request lands in the
+  smallest bucket that fits and is padded up to it, so jit compiles EXACTLY
+  ONE step per bucket instead of one per distinct request length; several
+  buckets can be open at once, so engines key ALL their device state by
+  bucket.  ``buckets=None`` keeps exact-shape buckets (one per distinct
+  length).
+* ``Request`` carries an optional per-request SLO: ``deadline_s`` (modeled
+  seconds from submission; ``None`` falls back to the DVFS controller's
+  global target).  The deadline drives both the scheduler's EDF policy and —
+  threaded through ``BatchedDVFSArbiter.admit`` — the shared-clock (V, f)
+  decision, which maximizes slack per lane against THAT lane's deadline.
 * ``ClassifierServer`` — ALBERT-style classification with entropy early exit
   as a fixed-shape, mask-vectorized continuation-batching engine: a static
   ``[lanes, S_bucket, H]`` hidden tensor plus an active mask; one fused,
@@ -24,8 +37,11 @@ Architecture (this module + ``serving/scheduler.py`` + ``serving/dvfs.py``):
   pair, so a ``BatchedDVFSArbiter`` makes one (V, f) decision per fused step
   — the max over per-lane required frequencies from the entropy->exit-layer
   predictor — with misprediction escalation and the LDO/ADPLL switching
-  stall charged on every operating-point change.  Retired sentences feed the
-  controller's online per-bin quantile calibration when enabled.
+  stall charged on every operating-point change.  Each lane is budgeted at
+  ITS bucket's per-layer cycle cost (``hwmodel`` stats rescaled per bucket),
+  so short buckets are no longer overcharged at the largest bucket's rate.
+  Retired sentences feed the controller's online per-bin quantile
+  calibration when enabled.
 * ``DecoderServer`` — LM decode with PER-LANE KV lengths: a vmapped decode
   step advances every lane at its OWN position (refilled lanes decode from
   their actual prompt end instead of the max active position — no pad-
@@ -38,12 +54,14 @@ Architecture (this module + ``serving/scheduler.py`` + ``serving/dvfs.py``):
 
 Trace-count telemetry: every jitted function increments a host-side,
 bucket-keyed counter *inside its traced body*, i.e. it only advances when XLA
-actually retraces.  ``run()`` reports totals and per-bucket counts
+actually retraces.  ``telemetry()`` reports totals and per-bucket counts
 (``step_traces`` must equal the number of buckets used, and stay there across
-repeat drains) so recompile regressions fail loudly in tests and CI.
+repeat drains, mid-flight submits, and interleaved stepping) so recompile
+regressions fail loudly in tests and CI.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, TYPE_CHECKING
@@ -52,10 +70,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.early_exit import offramp_logits
+from repro.core.early_exit import offramp_logits, predicted_remaining_layers
 from repro.core.entropy import entropy_from_logits
 from repro.models.model import Model
-from repro.serving.scheduler import LaneScheduler
+from repro.serving.scheduler import LaneScheduler, SchedulingPolicy, StepReport
 
 if TYPE_CHECKING:  # typing-only: dvfs is not a runtime dependency of the engine
     from repro.serving.dvfs import BatchedDVFSArbiter, LatencyAwareDVFSController
@@ -66,12 +84,21 @@ class Request:
     uid: int
     tokens: np.ndarray                  # [S] int32
     max_new_tokens: int = 16
+    deadline_s: Optional[float] = None  # per-request SLO from SUBMISSION on the
+                                        # modeled clock; None = controller target
     result: Optional[np.ndarray] = None
     exit_layer: Optional[int] = None
     generated: List[int] = field(default_factory=list)
     submit_time: float = 0.0
     finish_time: float = 0.0
     bucket: Optional[int] = None        # length bucket the scheduler assigned
+    # ---- scheduler lifecycle stamps (queue-delay telemetry) ----
+    arrival_step: Optional[int] = None        # dense-step count at submit()
+    first_compute_step: Optional[int] = None  # step index of its first lane step
+    retire_step: Optional[int] = None         # step index it retired on
+    arrival_s: float = 0.0                    # modeled clock at submit()
+    admit_s: float = 0.0                      # modeled clock at lane admission
+    seq: int = 0                              # global submission order
     # per-layer off-ramp entropies observed while the sentence was in flight;
     # the DVFS controller replays this trace through Alg. 1
     entropy_trace: List[float] = field(default_factory=list)
@@ -79,6 +106,13 @@ class Request:
     latency_s: Optional[float] = None   # modeled accelerator latency (DVFS)
     op_vdd: Optional[float] = None      # selected / slowest operating point
     op_freq_hz: Optional[float] = None
+
+
+# unique per-server prefix for arbiter lane keys: with cross-bucket time
+# slicing several buckets (and, via a shared arbiter, several servers) can
+# hold lanes in flight at once, so the raw lane index no longer identifies a
+# request
+_SERVER_IDS = itertools.count()
 
 
 # ===========================================================================
@@ -89,14 +123,16 @@ class Request:
 class ClassifierServer:
     """Continuation-batching early-exit classifier with static traced shapes.
 
-    Engine state is a dense ``[lanes, S_bucket, D]`` tensor per bucket; every
-    step runs the full lane set under an active mask, so the fused step has
-    one trace per bucket.  ``layer_calls`` telemetry counts *active*
+    Engine state is a dense ``[lanes, S_bucket, D]`` tensor per bucket, kept
+    in a bucket-keyed dict because the scheduler time-slices across buckets;
+    every step runs the full lane set under an active mask, so the fused step
+    has one trace per bucket.  ``layer_calls`` telemetry counts *active*
     lane-layer executions — the quantity the accelerator actually computes.
 
     ``dvfs``    — per-sentence Alg. 1 replay after retirement (single-stream).
     ``arbiter`` — shared-clock batched arbitration: one (V, f) per fused step.
     The two model different hardware assumptions; pass at most one.
+    ``policy``  — scheduling policy for ``step()`` (default EDF + WRR).
     """
 
     def __init__(
@@ -107,6 +143,7 @@ class ClassifierServer:
         dvfs: Optional["LatencyAwareDVFSController"] = None,
         arbiter: Optional["BatchedDVFSArbiter"] = None,
         buckets=None,
+        policy: Optional[SchedulingPolicy] = None,
     ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
         assert dvfs is None or arbiter is None, (
@@ -120,10 +157,19 @@ class ClassifierServer:
         self.threshold = model.cfg.edgebert.early_exit.entropy_threshold
         self.dvfs = dvfs
         self.arbiter = arbiter
-        self.sched = LaneScheduler(batch_lanes, self, buckets=buckets)
-        self._h: Optional[jnp.ndarray] = None     # current bucket's state
-        self._len: Optional[np.ndarray] = None    # [lanes] valid token lengths
-        self._step_out = None                     # host copies of the last step
+        self._sid = next(_SERVER_IDS)
+        ctrl = arbiter.c if arbiter is not None else dvfs
+        self.sched = LaneScheduler(
+            batch_lanes, self, buckets=buckets, policy=policy,
+            step_time_fn=self._step_time_s,
+            # with a hw model every request carries at least the controller
+            # target as an implicit deadline, so EDF slack — not blind round
+            # robin — decides which bucket gets each time slice
+            default_deadline_s=ctrl.target_latency_s if ctrl is not None else None,
+        )
+        # per-bucket engine state: {"h": [lanes, S, D], "len": [lanes],
+        # "out": last step's host copies} — several buckets open at once
+        self._bstate: Dict[int, Dict[str, Any]] = {}
         self._traces = {"embed": {}, "step": {}, "insert": {}}  # keyed by S
         # arbiter counters attributable to THIS server's drains (the arbiter
         # itself is drain-global and may be shared across task servers)
@@ -174,6 +220,49 @@ class ClassifierServer:
         self._step = jax.jit(step_fn)
         self._insert = jax.jit(insert_fn)
 
+    # ---------------------------------------------------------- DVFS helpers
+    @property
+    def _ctrl(self) -> Optional["LatencyAwareDVFSController"]:
+        return self.arbiter.c if self.arbiter is not None else self.dvfs
+
+    def _cycles_for(self, bucket: int) -> Optional[float]:
+        """Per-bucket layer cycles from the controller's hw stats rescaled to
+        the bucket's sequence length (the controller memoizes per length)."""
+        ctrl = self._ctrl
+        return None if ctrl is None else ctrl.cycles_for_seq_len(bucket)
+
+    def _step_time_s(self, bucket: int) -> float:
+        """NOMINAL duration of one fused step (the bucket's layer time at the
+        max operating point when a hw model is attached, else 1.0 step
+        units) — the EDF slack estimate.  The clock itself advances by the
+        arbiter's ACTUAL step duration via ``step_dt_s`` when available."""
+        ctrl = self._ctrl
+        if ctrl is None:
+            return 1.0
+        return self._cycles_for(bucket) / ctrl.max_op.freq_hz
+
+    def step_dt_s(self, bucket: int) -> Optional[float]:
+        """Actual modeled duration of the step just run: the arbiter's chosen
+        op period plus any LDO/ADPLL switching stall, so the scheduler's EDF
+        clock tracks the clock deadlines are judged by."""
+        if self.arbiter is None:
+            return None
+        st = self._bstate.get(bucket)
+        return None if st is None else st.get("dt")
+
+    def _arb_key(self, bucket: int, lane: int):
+        return (self._sid, bucket, lane)
+
+    def _explicit_budget_remaining(self, req: Request) -> Optional[float]:
+        """An explicit SLO is submission-anchored (queue wait counts), but
+        the DVFS layer budgets from ADMISSION — so hand it only what is LEFT
+        of the request's budget after its time in queue (floored at a sliver:
+        an already-late request races at max V/f and reports its miss)."""
+        if req.deadline_s is None:
+            return None
+        spent_in_queue = self.sched.now_s - req.arrival_s
+        return max(req.deadline_s - spent_in_queue, 1e-12)
+
     # ---------------------------------------------------------------- public
     def submit(self, req: Request):
         req.bucket = self.sched.submit(req)
@@ -186,14 +275,19 @@ class ClassifierServer:
     def pending(self) -> int:
         return self.sched.pending
 
+    def step(self) -> Optional[StepReport]:
+        """Advance one bucket by one fused step (see ``LaneScheduler.step``)."""
+        return self.sched.step()
+
+    def poll(self) -> List[Request]:
+        """Requests retired since the last poll (completion order)."""
+        return self.sched.poll()
+
     def run(self) -> Dict[str, float]:
-        """Drain every bucket with continuation batching. Returns telemetry."""
-        before = self.arbiter.telemetry() if self.arbiter is not None else None
+        """Drain every bucket with continuation batching. Returns telemetry.
+        (Arbiter deltas accrue per step inside ``lanes_step``, so hand-stepped
+        and run()-driven work are accounted identically.)"""
         self.sched.run()
-        if before is not None:
-            after = self.arbiter.telemetry()
-            for k in self._arb_acc:
-                self._arb_acc[k] += after[k] - before[k]
         return self.telemetry()
 
     # ------------------------------------------------------- scheduler hooks
@@ -203,31 +297,50 @@ class ClassifierServer:
     def bucket_begin(self, bucket: int) -> None:
         D = self.cfg.d_model
         dtype = jnp.asarray(self.params["embed"]["tok"]).dtype
-        self._h = jnp.zeros((self.lanes, bucket, D), dtype)
-        self._len = np.full(self.lanes, bucket, np.int32)
+        self._bstate[bucket] = {
+            "h": jnp.zeros((self.lanes, bucket, D), dtype),
+            "len": np.full(self.lanes, bucket, np.int32),
+            "out": None,
+        }
 
     def lane_load(self, bucket: int, lane: int, req: Request) -> None:
+        st = self._bstate[bucket]
         toks = np.zeros(bucket, np.int32)
         toks[: len(req.tokens)] = req.tokens     # pad up to the bucket shape
-        self._h = self._insert(
-            self._h, jnp.int32(lane), self._embed(self.params, jnp.asarray(toks)[None])
+        st["h"] = self._insert(
+            st["h"], jnp.int32(lane), self._embed(self.params, jnp.asarray(toks)[None])
         )
-        self._len[lane] = len(req.tokens)
+        st["len"][lane] = len(req.tokens)
         if self.arbiter is not None:
-            self.arbiter.admit(lane)
+            self.arbiter.admit(
+                self._arb_key(bucket, lane),
+                deadline_s=self._explicit_budget_remaining(req),
+                cycles_per_layer=self._cycles_for(bucket),
+            )
 
     def lanes_step(self, bucket: int, active: np.ndarray):
+        st = self._bstate[bucket]
         decision = None
         if self.arbiter is not None:
-            # ONE (V, f) for this fused step, arbitrated across active lanes
-            decision = self.arbiter.step([i for i in range(self.lanes) if active[i]])
+            # ONE (V, f) for this fused step, arbitrated across active lanes.
+            # Telemetry deltas accrue HERE (not in run()) so step()-driven
+            # serving attributes its arbiter work to this server too; the
+            # actual step duration feeds the scheduler clock via step_dt_s.
+            before = self.arbiter.telemetry()
+            decision = self.arbiter.step(
+                [self._arb_key(bucket, i) for i in range(self.lanes) if active[i]]
+            )
+            after = self.arbiter.telemetry()
+            for k in self._arb_acc:
+                self._arb_acc[k] += after[k] - before[k]
+            st["dt"] = decision.dt_s + (after["switch_time_s"] - before["switch_time_s"])
         h, lg, ent, retire = self._step(
-            self.params, self._h, jnp.asarray(active), jnp.asarray(self._len),
+            self.params, st["h"], jnp.asarray(active), jnp.asarray(st["len"]),
             jnp.float32(self.threshold),
         )
-        self._h = h
-        self._step_out = (np.asarray(lg), np.asarray(ent), np.asarray(retire), decision)
-        return self._step_out
+        st["h"] = h
+        st["out"] = (np.asarray(lg), np.asarray(ent), np.asarray(retire), decision)
+        return st["out"]
 
     def lane_advance(
         self, bucket: int, lane: int, req: Request, out, depth: int
@@ -236,22 +349,33 @@ class ClassifierServer:
         req.entropy_trace.append(float(ent[lane]))
         if self.arbiter is not None and depth == 1:
             # first off-ramp evaluated: Alg. 1 line 2 prediction goes live
-            self.arbiter.observe_entropy(lane, float(ent[lane]))
+            self.arbiter.observe_entropy(
+                self._arb_key(bucket, lane), float(ent[lane])
+            )
         return bool(retire[lane]) or depth >= self.cfg.n_layers
 
     def lane_finish(self, bucket: int, lane: int, req: Request, depth: int) -> None:
-        lg, _, _, _ = self._step_out
+        lg, _, _, _ = self._bstate[bucket]["out"]
         req.result = lg[lane]
         req.exit_layer = depth
         req.finish_time = time.time()
         if self.arbiter is not None:
-            rep = self.arbiter.retire(lane, depth)
+            rep = self.arbiter.retire(self._arb_key(bucket, lane), depth)
             req.energy_j = rep.energy_j
             req.latency_s = rep.latency_s
             req.op_vdd = rep.slowest_op.vdd
             req.op_freq_hz = rep.slowest_op.freq_hz
         elif self.dvfs is not None:
-            rep = self.dvfs.sentence_report(req.entropy_trace, exit_layer=depth)
+            # per-request deadline overrides the controller-global target —
+            # minus the time the request already spent in queue (the SLO is
+            # submission-anchored, Alg. 1 budgets from compute start)
+            target = None
+            if req.deadline_s is not None:
+                target = max(req.deadline_s - (req.admit_s - req.arrival_s), 1e-12)
+            rep = self.dvfs.sentence_report(
+                req.entropy_trace, exit_layer=depth,
+                target_latency_s=target,
+            )
             req.energy_j = rep.energy_j
             req.latency_s = rep.latency_s
             req.op_vdd = rep.op.vdd
@@ -261,9 +385,18 @@ class ClassifierServer:
             self.dvfs.observe_exit(req.entropy_trace[0], depth)
 
     def bucket_end(self, bucket: int) -> None:
-        self._h = None
-        self._len = None
-        self._step_out = None
+        del self._bstate[bucket]
+
+    def predict_remaining_steps(
+        self, bucket: int, req: Request, depth: int
+    ) -> float:
+        """EDF slack input: entropy-LUT predicted exit depth minus progress,
+        using the SAME prediction chain the DVFS controller arbitrates with."""
+        ctrl = self._ctrl
+        return predicted_remaining_layers(
+            req.entropy_trace, depth, self.cfg.n_layers,
+            predict_fn=ctrl.predict if ctrl is not None else None,
+        )
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, float]:
@@ -285,17 +418,29 @@ class ClassifierServer:
             "buckets_used": st["buckets_used"],
             "bucket_steps": st["bucket_steps"],
             "lane_occupancy": st["lane_occupancy"],
+            "queue_delay_steps_p50": st["queue_delay_steps_p50"],
+            "queue_delay_steps_p95": st["queue_delay_steps_p95"],
+            "queue_delay_steps_max": st["queue_delay_steps_max"],
         }
-        ctrl = self.arbiter.c if self.arbiter is not None else self.dvfs
+        ctrl = self._ctrl
         if ctrl is not None and done:
             reqs = done.values()
             out["energy_j"] = float(sum(r.energy_j or 0.0 for r in reqs))
             out["modeled_latency_s"] = float(max((r.latency_s or 0.0) for r in reqs))
-            out["deadline_misses"] = sum(
-                1
-                for r in reqs
-                if (r.latency_s or 0.0) > ctrl.target_latency_s * (1 + 1e-9)
-            )
+            # per-request accounting: each request is judged against ITS OWN
+            # deadline — submission-anchored, so modeled queue wait counts
+            # toward an explicit SLO; only deadline-free requests fall back
+            # to the (admission-anchored) controller-global target
+            def _missed(r: Request) -> bool:
+                lat = r.latency_s or 0.0
+                if r.deadline_s is not None:
+                    lat += r.admit_s - r.arrival_s      # queue wait
+                    limit = r.deadline_s
+                else:
+                    limit = ctrl.target_latency_s
+                return lat > limit * (1 + 1e-9)
+
+            out["deadline_misses"] = sum(1 for r in reqs if _missed(r))
         if self.arbiter is not None:
             # deltas accumulated across THIS server's drains only: a shared
             # arbiter keeps drain-global counters, and copying those verbatim
@@ -320,6 +465,8 @@ class DecoderServer:
     actual prompt end — the lock-step max-position loop (which burned pad
     positions for refilled lanes) is gone.  Cache shapes bucket by
     prompt-plus-generation budget; one decode/prefill trace per bucket.
+    Caches live in a bucket-keyed dict: the scheduler time-slices across
+    buckets, so several caches can be live at once.
     """
 
     def __init__(
@@ -330,18 +477,18 @@ class DecoderServer:
         max_seq: int = 256,
         eos_id: int = 2,
         buckets=None,
+        policy: Optional[SchedulingPolicy] = None,
     ):
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.sched = LaneScheduler(batch_lanes, self, buckets=buckets)
+        self.sched = LaneScheduler(batch_lanes, self, buckets=buckets, policy=policy)
         self._bucketed = buckets is not None
-        self._cache = None
-        self._pos = None                  # [lanes] int32 per-lane KV position
-        self._cur = None                  # [lanes, 1] int32 current token
-        self._step_out = None
+        # per-bucket engine state: {"cache", "pos": [lanes], "cur": [lanes, 1],
+        # "out"} — several buckets open at once under time slicing
+        self._bstate: Dict[int, Dict[str, Any]] = {}
         self._traces = {"decode": {}, "prefill": {}}  # keyed by bucket
 
         def decode_fn(params, cache, tokens, pos, bucket):
@@ -405,6 +552,12 @@ class DecoderServer:
     def pending(self) -> int:
         return self.sched.pending
 
+    def step(self) -> Optional[StepReport]:
+        return self.sched.step()
+
+    def poll(self) -> List[Request]:
+        return self.sched.poll()
+
     def run(self) -> Dict[str, float]:
         st = self.sched.run()
         return {
@@ -415,6 +568,8 @@ class DecoderServer:
             "decode_traces_per_bucket": dict(self._traces["decode"]),
             "buckets_used": st["buckets_used"],
             "lane_occupancy": st["lane_occupancy"],
+            "queue_delay_steps_p50": st["queue_delay_steps_p50"],
+            "queue_delay_steps_p95": st["queue_delay_steps_p95"],
         }
 
     # ------------------------------------------------------- scheduler hooks
@@ -426,53 +581,64 @@ class DecoderServer:
         return need
 
     def bucket_begin(self, bucket: int) -> None:
-        self._cache = self.model.init_cache(self.lanes, bucket)
-        self._pos = np.zeros(self.lanes, np.int32)
-        self._cur = np.zeros((self.lanes, 1), np.int32)
+        self._bstate[bucket] = {
+            "cache": self.model.init_cache(self.lanes, bucket),
+            "pos": np.zeros(self.lanes, np.int32),
+            "cur": np.zeros((self.lanes, 1), np.int32),
+            "out": None,
+        }
 
     def lane_load(self, bucket: int, lane: int, req: Request) -> None:
+        st = self._bstate[bucket]
         toks = np.zeros(bucket, np.int32)
         toks[: len(req.tokens)] = req.tokens
-        self._cache = self._prefill(
+        st["cache"] = self._prefill(
             self.params,
-            self._cache,
+            st["cache"],
             jnp.asarray(toks),
             jnp.int32(lane),
             jnp.int32(len(req.tokens)),
         )
-        self._pos[lane] = len(req.tokens) - 1
-        self._cur[lane, 0] = req.tokens[-1]
+        st["pos"][lane] = len(req.tokens) - 1
+        st["cur"][lane, 0] = req.tokens[-1]
 
     def lanes_step(self, bucket: int, active: np.ndarray):
-        logits, self._cache = self._decode(
+        st = self._bstate[bucket]
+        logits, st["cache"] = self._decode(
             self.params,
-            self._cache,
-            jnp.asarray(self._cur),
-            jnp.asarray(self._pos),
+            st["cache"],
+            jnp.asarray(st["cur"]),
+            jnp.asarray(st["pos"]),
             bucket,
         )
-        self._step_out = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        return self._step_out
+        st["out"] = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        return st["out"]
 
     def lane_advance(
         self, bucket: int, lane: int, req: Request, out, depth: int
     ) -> bool:
+        st = self._bstate[bucket]
         tok = int(out[lane])
         req.generated.append(tok)
-        self._pos[lane] += 1                 # this lane's OWN position only
-        self._cur[lane, 0] = tok
+        st["pos"][lane] += 1                 # this lane's OWN position only
+        st["cur"][lane, 0] = tok
         return (
             tok == self.eos_id
             or len(req.generated) >= req.max_new_tokens
-            or int(self._pos[lane]) >= bucket - 1   # this lane's cache is full
+            or int(st["pos"][lane]) >= bucket - 1   # this lane's cache is full
         )
 
     def lane_finish(self, bucket: int, lane: int, req: Request, depth: int) -> None:
         req.finish_time = time.time()
 
     def bucket_end(self, bucket: int) -> None:
-        self._cache = None
-        self._step_out = None
+        del self._bstate[bucket]
+
+    def predict_remaining_steps(
+        self, bucket: int, req: Request, depth: int
+    ) -> float:
+        """EDF slack input: tokens left in this request's generation budget."""
+        return float(max(req.max_new_tokens - len(req.generated), 1))
 
 
 # ===========================================================================
@@ -499,6 +665,7 @@ class MultiTaskRouter:
         dvfs: Optional["LatencyAwareDVFSController"] = None,
         arbiter: Optional["BatchedDVFSArbiter"] = None,
         buckets=None,
+        policy_factory: Optional[Any] = None,
     ):
         self.model = model
         self.shared_embed = shared_embed
@@ -507,8 +674,12 @@ class MultiTaskRouter:
         self.embed_reloads = 1          # power-on load only
         for name, tp in task_params.items():
             params = dict(tp, embed=shared_embed)
+            # a FACTORY, not a shared instance: policies carry per-scheduler
+            # mutable state (WRR credits, quantum position) that must not
+            # leak between the task servers' independent schedulers
             self.tasks[name] = ClassifierServer(
-                model, params, dvfs=dvfs, arbiter=arbiter, buckets=buckets
+                model, params, dvfs=dvfs, arbiter=arbiter, buckets=buckets,
+                policy=policy_factory() if policy_factory is not None else None,
             )
 
     def submit(self, task: str, req: Request):
@@ -517,7 +688,9 @@ class MultiTaskRouter:
     def run_all(self) -> Dict[str, Dict[str, float]]:
         out = {}
         for name, server in self.tasks.items():
-            if server.pending:
+            # queued OR mid-flight (a caller may have hand-stepped a server
+            # and left lanes in flight): both need draining
+            if not server.sched.idle:
                 self.switches += 1
                 out[name] = server.run()
         return out

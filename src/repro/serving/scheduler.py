@@ -1,11 +1,27 @@
-"""Unified lane scheduler: the lifecycle shared by every serving engine.
+"""Serving-layer lifecycle: ``submit() -> step() -> poll() -> telemetry()``.
 
+``LaneScheduler`` is the single continuously-clocked loop every serving engine
+rides.  A caller may submit a request AT ANY TIME — before a drain, or between
+two ``step()`` calls while other buckets are mid-flight — and the request
+lands in a later refill of its length bucket with no new compiled traces (the
+fused step's shapes are fixed per bucket, so interleaving and mid-flight
+admission never retrace).  Each ``step()`` advances EXACTLY ONE bucket by one
+fused step, chosen by a pluggable ``SchedulingPolicy``; ``poll()`` drains the
+requests that retired since the last poll; ``run()`` is a thin back-compat
+wrapper (``while work remains: step()``) for callers that still want the
+drain-the-world API.  ``telemetry()`` reports lifetime counters, including
+per-request queue delay (``arrival_step -> first_compute_step``) percentiles.
+
+Engine hooks
+------------
 ``ClassifierServer`` and ``DecoderServer`` used to each own a private copy of
-the same loop — submit -> queue -> refill free lanes -> fused step -> retire ->
-telemetry.  ``LaneScheduler`` extracts that lifecycle once and drives it
-through a small hook interface (``LaneEngine``), so an engine only supplies
-the compute: how to materialize a lane bucket, load a request into a lane,
-advance all lanes one fused step, and decide per-lane retirement.
+the same loop — submit -> queue -> refill free lanes -> fused step -> retire.
+``EngineHooks`` is that lifecycle's explicit contract: the engine owns all
+device state (hidden tensors, KV caches, jitted functions) and supplies the
+compute; the scheduler owns queues, lane bookkeeping, the modeled clock, and
+telemetry.  Because ``step()`` time-slices across buckets, MULTIPLE buckets
+may be open at once: an engine must keep its per-bucket state keyed by bucket
+(``bucket_begin``/``bucket_end`` bracket a bucket's lifetime, not the drain's).
 
 Length buckets
 --------------
@@ -17,18 +33,34 @@ fixed-shape ``[lanes, S_bucket]`` engine state, so jit compiles EXACTLY ONE
 step per bucket instead of one per distinct request length.  ``buckets=None``
 keeps the legacy behavior: every distinct shape key is its own bucket.
 
-Telemetry
----------
-The scheduler owns the counters every engine used to duplicate: sentences,
-fused (dense) steps, active lane-step executions, per-bucket step counts,
-refills, and lane occupancy.  Trace counters stay in the engines (they are
-incremented inside traced bodies); the scheduler aggregates them per bucket.
+Deadlines and the modeled clock
+-------------------------------
+``Request.deadline_s`` is a per-request SLO measured from SUBMISSION on the
+scheduler's modeled clock, which advances by ``step_time_fn(bucket)`` per
+fused step (default 1.0 — deadlines in "steps"; engines with a hardware model
+pass the per-bucket layer time so deadlines are in modeled seconds).  The
+default ``EDFPolicy`` ranks buckets by the least slack among their work:
+absolute deadline minus the modeled now minus the predicted remaining work,
+where remaining work comes from the engine's entropy-LUT exit prediction
+(``predict_remaining_steps`` hook -> ``core.early_exit``).  Buckets whose
+work carries no deadline fall back to weighted-round-robin time slicing, so a
+deep 128-token drain can no longer starve queued 32-token traffic.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Protocol, TYPE_CHECKING
+from dataclasses import dataclass, field
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    TYPE_CHECKING,
+)
 
 import numpy as np
 
@@ -36,11 +68,14 @@ if TYPE_CHECKING:  # circular: engine imports scheduler
     from repro.serving.engine import Request
 
 
-class LaneEngine(Protocol):
+class EngineHooks(Protocol):
     """Compute hooks a serving engine implements to ride the scheduler.
 
     The engine owns all device state (hidden tensors, KV caches, jitted
-    functions); the scheduler owns queues, lane bookkeeping, and telemetry.
+    functions); the scheduler owns queues, lane bookkeeping, the modeled
+    clock, and telemetry.  Cross-bucket time slicing means several buckets
+    can be open simultaneously — implementations must key their state by
+    bucket.
     """
 
     def bucket_key(self, req: "Request") -> int:
@@ -48,7 +83,7 @@ class LaneEngine(Protocol):
         ...
 
     def bucket_begin(self, bucket: int) -> None:
-        """Allocate the fixed-shape ``[lanes, bucket]`` state for a drain."""
+        """Allocate the fixed-shape ``[lanes, bucket]`` state for this bucket."""
         ...
 
     def lane_load(self, bucket: int, lane: int, req: "Request") -> None:
@@ -57,6 +92,15 @@ class LaneEngine(Protocol):
 
     def lanes_step(self, bucket: int, active: np.ndarray) -> Any:
         """Run ONE fused step over all lanes; returns host-side step outputs."""
+        ...
+
+    # -- optional (resolved via getattr; engines may omit it) ---------------
+    def step_dt_s(self, bucket: int) -> Optional[float]:
+        """ACTUAL modeled duration of the step just run (e.g. the DVFS
+        arbiter's chosen-op period plus any switching stall).  When provided,
+        the scheduler's clock advances by this instead of the nominal
+        ``step_time_fn`` estimate, keeping the EDF clock and the DVFS clock
+        from drifting apart.  ``None``/absent = use ``step_time_fn``."""
         ...
 
     def lane_advance(
@@ -70,31 +114,206 @@ class LaneEngine(Protocol):
         ...
 
     def bucket_end(self, bucket: int) -> None:
-        """Release / park the bucket state after its queue drained."""
+        """Release / park the bucket state once its queue + lanes drained."""
+        ...
+
+    # -- optional (resolved via getattr; engines may omit it) ---------------
+    def predict_remaining_steps(
+        self, bucket: int, req: "Request", depth: int
+    ) -> Optional[float]:
+        """Predicted fused steps this request still needs (entropy-LUT exit
+        prediction for the classifier, generation budget for the decoder).
+        ``None``/absent = unknown; the EDF policy then uses the bare deadline."""
         ...
 
 
+# Back-compat alias: PR 2 exported the protocol under this name.
+LaneEngine = EngineHooks
+
+
+@dataclass
+class BucketView:
+    """Per-bucket snapshot handed to a ``SchedulingPolicy``."""
+
+    bucket: int
+    queued: int                     # requests waiting in this bucket's queue
+    active: int                     # lanes currently in flight
+    step_time_s: float              # modeled duration of one fused step
+    earliest_deadline_s: float      # min absolute deadline (inf if none),
+                                    # explicit SLOs and implicit budgets alike
+    min_slack_s: float              # min(deadline - now - predicted remaining)
+    earliest_seq: int               # submission order of the oldest work item
+    # explicit per-request SLOs only (requests with their own deadline_s):
+    # EDF ranks these STRICTLY above implicit controller-target budgets — a
+    # per-request SLO is a contract, the global target is best-effort shaping
+    explicit_deadline_s: float = float("inf")
+    explicit_slack_s: float = float("inf")
+
+
+class SchedulingPolicy(Protocol):
+    """Picks which candidate bucket the next ``step()`` advances."""
+
+    def choose(self, views: Sequence[BucketView], now_s: float) -> int:
+        ...
+
+
+class WeightedRoundRobinPolicy:
+    """Deficit-style weighted round robin over the candidate buckets.
+
+    Each bucket accrues ``weights[bucket]`` credits (default 1.0) whenever
+    every candidate is out of credit; the richest candidate runs ``quantum``
+    consecutive steps before the next arbitration.  With default weights this
+    is fair time slicing — a deep drain and a short queue alternate instead
+    of the deep drain running to completion first.
+    """
+
+    def __init__(
+        self, weights: Optional[Dict[int, float]] = None, quantum: int = 1
+    ):
+        assert quantum >= 1
+        self.weights = dict(weights or {})
+        self.quantum = int(quantum)
+        self._credit: Dict[int, float] = {}
+        self._last: Optional[int] = None
+        self._ran = 0
+
+    def choose(self, views: Sequence[BucketView], now_s: float) -> int:
+        byb = {v.bucket: v for v in views}
+        if self._last in byb and self._ran < self.quantum:
+            self._ran += 1
+            return self._last
+        for b in byb:
+            self._credit.setdefault(b, 0.0)
+        if all(self._credit[b] <= 0 for b in byb):
+            for b in byb:
+                self._credit[b] += self.weights.get(b, 1.0)
+        choice = max(byb, key=lambda b: (self._credit[b], -b))
+        self._credit[choice] -= 1.0
+        self._last, self._ran = choice, 1
+        return choice
+
+
+class EDFPolicy:
+    """Earliest-deadline-first across buckets, slack-ranked by the predicted
+    exit depth; deadline-free work falls back to ``fallback`` (WRR).
+
+    A bucket's urgency is the least slack among its queued + in-flight
+    requests: absolute deadline minus the modeled now minus the predicted
+    remaining work (the engine's entropy-LUT exit prediction times the
+    bucket's step time).  Deadlines come in two strengths and EDF ranks them
+    in strict tiers: buckets holding EXPLICIT per-request SLOs (contracts,
+    queue-wait-inclusive) preempt buckets whose urgency is only the implicit
+    controller-target budget (best-effort energy shaping), which in turn
+    preempt deadline-free work — the property that lets a tight-SLO 32-token
+    request retire in the middle of a deep 128-token drain.
+    """
+
+    def __init__(self, fallback: Optional[SchedulingPolicy] = None):
+        self.fallback = fallback if fallback is not None else WeightedRoundRobinPolicy()
+
+    def choose(self, views: Sequence[BucketView], now_s: float) -> int:
+        contracted = [v for v in views if np.isfinite(v.explicit_deadline_s)]
+        if contracted:
+            return min(
+                contracted,
+                key=lambda v: (v.explicit_slack_s, v.explicit_deadline_s, v.bucket),
+            ).bucket
+        dated = [v for v in views if np.isfinite(v.earliest_deadline_s)]
+        if not dated:
+            return self.fallback.choose(views, now_s)
+        return min(
+            dated,
+            key=lambda v: (v.min_slack_s, v.earliest_deadline_s, v.bucket),
+        ).bucket
+
+
+class FIFOPolicy:
+    """Strict arrival order: always advance the bucket holding the oldest
+    unfinished request — the sequential drain-the-world behavior, kept as the
+    baseline the EDF tests beat."""
+
+    def choose(self, views: Sequence[BucketView], now_s: float) -> int:
+        return min(views, key=lambda v: (v.earliest_seq, v.bucket)).bucket
+
+
+@dataclass
+class _BucketRun:
+    """Scheduler-side lane bookkeeping of one OPEN bucket."""
+
+    lane_req: List[Optional["Request"]]
+    lane_depth: np.ndarray
+    active: np.ndarray
+
+
+@dataclass
+class StepReport:
+    """What one ``step()`` did (host-side, for callers driving the loop)."""
+
+    bucket: int
+    n_active: int
+    retired: List["Request"] = field(default_factory=list)
+
+
 class LaneScheduler:
-    """Length-bucketed continuation-batching lane scheduler.
+    """Length-bucketed, continuously-clocked continuation-batching scheduler.
 
     Parameters
     ----------
-    lanes:   number of hardware lanes (the fixed batch dimension).
-    engine:  the ``LaneEngine`` hooks supplying compute.
-    buckets: ascending bucket sizes (e.g. ``(32, 64, 128)``); a request lands
-             in the smallest bucket >= its shape key.  ``None`` = exact-shape
-             buckets (one bucket per distinct key — the legacy engines).
+    lanes:        number of hardware lanes (the fixed batch dimension).
+    engine:       the ``EngineHooks`` implementation supplying compute.
+    buckets:      ascending bucket sizes (e.g. ``(32, 64, 128)``); a request
+                  lands in the smallest bucket >= its shape key.  ``None`` =
+                  exact-shape buckets (one per distinct key).
+    policy:       ``SchedulingPolicy`` picking the bucket each ``step()``
+                  advances.  Default: ``EDFPolicy`` (WRR fallback when no
+                  deadlines are in play).
+    step_time_fn: modeled seconds one fused step of a bucket takes (drives
+                  the modeled clock the EDF slack computation runs on).
+                  Default: 1.0 per step — deadlines measured in steps.
+    default_deadline_s: implicit latency budget for IN-FLIGHT requests that
+                  carry no ``deadline_s`` (engines pass the DVFS controller's
+                  global target).  Anchored at lane ADMISSION — the clock the
+                  DVFS layer judges — so once a lane is loaded, EDF slack
+                  (not blind round robin) decides which bucket gets each time
+                  slice and the lane closest to its budget runs next.
+                  QUEUED deadline-free requests stay undated: their budget
+                  has not started, so an explicit (submission-anchored,
+                  queue-wait-inclusive) per-request SLO always outranks a
+                  backlog of budget-free work.  ``None`` keeps deadline-free
+                  requests out of the EDF ranking entirely (WRR fallback
+                  when nothing carries a deadline).
     """
 
-    def __init__(self, lanes: int, engine: LaneEngine, buckets=None):
+    def __init__(
+        self,
+        lanes: int,
+        engine: EngineHooks,
+        buckets=None,
+        *,
+        policy: Optional[SchedulingPolicy] = None,
+        step_time_fn: Optional[Callable[[int], float]] = None,
+        default_deadline_s: Optional[float] = None,
+    ):
         assert lanes >= 1
         self.lanes = lanes
         self.engine = engine
         self.buckets = tuple(sorted(int(b) for b in buckets)) if buckets else None
         assert self.buckets is None or len(set(self.buckets)) == len(self.buckets)
+        self.policy: SchedulingPolicy = policy if policy is not None else EDFPolicy()
+        self.step_time_fn = step_time_fn if step_time_fn is not None else (lambda b: 1.0)
+        self.default_deadline_s = default_deadline_s
         self.queues: Dict[int, deque] = {}
         self.done: Dict[int, "Request"] = {}
-        # ---- lifetime telemetry (persists across run() calls) ----
+        self.now_s = 0.0                # modeled clock (sum of step times)
+        self._open: Dict[int, _BucketRun] = {}
+        self._completed: deque = deque()  # retired since the last poll()
+        self._seq = 0                   # global submission order
+        # min absolute EXPLICIT deadline among each bucket's QUEUED requests,
+        # maintained incrementally so _view() stays O(lanes) per step instead
+        # of rescanning the whole queue (recomputed only when the minimum
+        # element itself is admitted)
+        self._qmin_deadline: Dict[int, float] = {}
+        # ---- lifetime telemetry (persists across run()/step() calls) ----
         self._sentences = 0
         self._dense_steps = 0
         self._lane_steps = 0            # ACTIVE lane x step executions
@@ -113,65 +332,247 @@ class LaneScheduler:
         )
 
     def submit(self, req: "Request") -> int:
-        """Queue a request; returns the bucket it landed in."""
+        """Queue a request — at any time, including between steps of an
+        in-flight drain; it lands in a later refill of its bucket.  Returns
+        the bucket it landed in."""
         req.submit_time = time.time()
+        req.arrival_step = self._dense_steps
+        req.arrival_s = self.now_s
+        req.seq = self._seq
+        self._seq += 1
         b = self.bucket_for(self.engine.bucket_key(req))
         self.queues.setdefault(b, deque()).append(req)
+        if req.deadline_s is not None:
+            d_abs = req.arrival_s + req.deadline_s
+            if d_abs < self._qmin_deadline.get(b, float("inf")):
+                self._qmin_deadline[b] = d_abs
         return b
 
     @property
     def pending(self) -> int:
+        """Queued requests not yet loaded into a lane."""
         return sum(len(q) for q in self.queues.values())
 
-    # --------------------------------------------------------------- drains
-    def run(self) -> Dict[str, float]:
-        """Drain every non-empty bucket (ascending size); returns telemetry."""
-        for b in sorted(self.queues):
-            if self.queues[b]:
-                self._drain_bucket(b)
-        return self.telemetry()
+    @property
+    def in_flight(self) -> int:
+        """Requests currently occupying a lane."""
+        return sum(int(run.active.sum()) for run in self._open.values())
 
-    def _drain_bucket(self, bucket: int) -> None:
+    @property
+    def idle(self) -> bool:
+        return self.pending == 0 and self.in_flight == 0
+
+    # ---------------------------------------------------------- the clock
+    def _predict_remaining(self, bucket: int, req: "Request", depth: int):
+        hook = getattr(self.engine, "predict_remaining_steps", None)
+        if hook is None:
+            return None
+        return hook(bucket, req, depth)
+
+    def _recompute_qmin(self, bucket: int) -> None:
+        m = float("inf")
+        for r in self.queues.get(bucket, ()):
+            if r.deadline_s is not None:
+                m = min(m, r.arrival_s + r.deadline_s)
+        if np.isfinite(m):
+            self._qmin_deadline[bucket] = m
+        else:
+            self._qmin_deadline.pop(bucket, None)
+
+    def _pop_next(self, bucket: int) -> "Request":
+        """Next request to admit from a bucket's queue: the earliest-deadline
+        EXPLICIT-SLO request if any (so a contract jumps the queue inside its
+        own bucket, not just across buckets), else plain FIFO.  The O(queue)
+        scan runs once per lane admission, not per step."""
         q = self.queues[bucket]
-        eng = self.engine
-        eng.bucket_begin(bucket)
-        lane_req: List[Optional["Request"]] = [None] * self.lanes
-        lane_depth = np.zeros(self.lanes, np.int32)
-        active = np.zeros(self.lanes, bool)
+        best, best_d = None, float("inf")
+        for idx, r in enumerate(q):
+            if r.deadline_s is not None:
+                d = r.arrival_s + r.deadline_s
+                if d < best_d:
+                    best, best_d = idx, d
+        if best is None:
+            return q.popleft()
+        q.rotate(-best)
+        req = q.popleft()
+        q.rotate(best)
+        self._recompute_qmin(bucket)       # the minimum just left the queue
+        return req
 
-        while q or active.any():
-            # refill every free lane from the bucket queue (continuation
-            # batching: retired lanes never idle while work is queued)
+    def _view(self, bucket: int) -> BucketView:
+        """Per-bucket urgency snapshot — O(lanes), not O(queue): in-flight
+        lanes are enumerated, while the queue contributes its (incrementally
+        maintained) min explicit deadline and its FIFO head's cold-start
+        remaining-work estimate (queued requests have no entropy trace yet,
+        so the head's prediction stands in for all of them)."""
+        run = self._open.get(bucket)
+        q = self.queues.get(bucket)
+        dt = float(self.step_time_fn(bucket))
+        queued = len(q) if q else 0
+        active = int(run.active.sum()) if run is not None else 0
+        earliest_deadline = float("inf")
+        min_slack = float("inf")
+        explicit_deadline = float("inf")
+        explicit_slack = float("inf")
+        earliest_seq = np.iinfo(np.int64).max
+        if run is not None:
             for i in range(self.lanes):
-                if lane_req[i] is None and q:
-                    req = q.popleft()
-                    eng.lane_load(bucket, i, req)
-                    lane_req[i] = req
-                    lane_depth[i] = 0
-                    active[i] = True
-                    self._refills += 1
-            if not active.any():
-                break
-            out = eng.lanes_step(bucket, active.copy())
-            n_active = int(active.sum())
-            self._dense_steps += 1
-            self._lane_steps += n_active
-            self._bucket_steps[bucket] = self._bucket_steps.get(bucket, 0) + 1
-            lane_depth[active] += 1
-            for i in range(self.lanes):
-                if not active[i]:
+                if not run.active[i]:
                     continue
-                req = lane_req[i]
-                if eng.lane_advance(bucket, i, req, out, int(lane_depth[i])):
-                    eng.lane_finish(bucket, i, req, int(lane_depth[i]))
-                    self.done[req.uid] = req
-                    self._sentences += 1
-                    lane_req[i] = None
-                    active[i] = False
-        eng.bucket_end(bucket)
+                req, depth = run.lane_req[i], int(run.lane_depth[i])
+                earliest_seq = min(earliest_seq, req.seq)
+                explicit = req.deadline_s is not None
+                if explicit:
+                    # explicit SLO: submission-anchored — queue wait counts
+                    d_abs = req.arrival_s + req.deadline_s
+                elif self.default_deadline_s is not None:
+                    # implicit budget: admission-anchored — the DVFS clock
+                    d_abs = req.admit_s + self.default_deadline_s
+                else:
+                    continue
+                rem = self._predict_remaining(bucket, req, depth)
+                slack = d_abs - self.now_s - (rem or 0.0) * dt
+                earliest_deadline = min(earliest_deadline, d_abs)
+                min_slack = min(min_slack, slack)
+                if explicit:
+                    explicit_deadline = min(explicit_deadline, d_abs)
+                    explicit_slack = min(explicit_slack, slack)
+        if q:
+            # queued budget-free work stays undated (its implicit budget has
+            # not started); queued explicit SLOs enter via the running min
+            earliest_seq = min(earliest_seq, q[0].seq)
+            d_abs = self._qmin_deadline.get(bucket, float("inf"))
+            if np.isfinite(d_abs):
+                rem = self._predict_remaining(bucket, q[0], 0)
+                slack = d_abs - self.now_s - (rem or 0.0) * dt
+                earliest_deadline = min(earliest_deadline, d_abs)
+                min_slack = min(min_slack, slack)
+                explicit_deadline = min(explicit_deadline, d_abs)
+                explicit_slack = min(explicit_slack, slack)
+        return BucketView(
+            bucket=bucket,
+            queued=queued,
+            active=active,
+            step_time_s=dt,
+            earliest_deadline_s=earliest_deadline,
+            min_slack_s=min_slack,
+            earliest_seq=int(earliest_seq),
+            explicit_deadline_s=explicit_deadline,
+            explicit_slack_s=explicit_slack,
+        )
+
+    def _candidates(self) -> List[BucketView]:
+        out = []
+        seen = set()
+        for b, q in self.queues.items():
+            if q:
+                seen.add(b)
+        for b, run in self._open.items():
+            if run.active.any():
+                seen.add(b)
+        for b in sorted(seen):
+            out.append(self._view(b))
+        return out
+
+    # ----------------------------------------------------------- stepping
+    def step(self) -> Optional[StepReport]:
+        """Advance ONE bucket by one fused step; returns what happened, or
+        ``None`` when no work remains anywhere."""
+        views = self._candidates()
+        if not views:
+            return None
+        bucket = self.policy.choose(views, self.now_s)
+        assert any(v.bucket == bucket for v in views), (
+            f"policy chose bucket {bucket} which has no queued or active work"
+        )
+        eng = self.engine
+        run = self._open.get(bucket)
+        if run is None:
+            eng.bucket_begin(bucket)
+            run = _BucketRun(
+                lane_req=[None] * self.lanes,
+                lane_depth=np.zeros(self.lanes, np.int32),
+                active=np.zeros(self.lanes, bool),
+            )
+            self._open[bucket] = run
+
+        # refill every free lane from this bucket's queue (continuation
+        # batching: retired lanes never idle while work is queued)
+        q = self.queues.get(bucket)
+        step_idx = self._dense_steps
+        for i in range(self.lanes):
+            if run.lane_req[i] is None and q:
+                req = self._pop_next(bucket)
+                eng.lane_load(bucket, i, req)
+                req.first_compute_step = step_idx
+                req.admit_s = self.now_s
+                run.lane_req[i] = req
+                run.lane_depth[i] = 0
+                run.active[i] = True
+                self._refills += 1
+        assert run.active.any(), "candidate bucket must have work after refill"
+
+        out = eng.lanes_step(bucket, run.active.copy())
+        n_active = int(run.active.sum())
+        self._dense_steps += 1
+        self._lane_steps += n_active
+        self._bucket_steps[bucket] = self._bucket_steps.get(bucket, 0) + 1
+        # the engine may report the step's ACTUAL modeled duration (DVFS op
+        # period + switching stalls); fall back to the nominal estimate so
+        # the EDF clock cannot drift from the clock deadlines are judged by
+        dt_hook = getattr(eng, "step_dt_s", None)
+        dt = dt_hook(bucket) if dt_hook is not None else None
+        self.now_s += float(dt) if dt is not None else float(self.step_time_fn(bucket))
+        run.lane_depth[run.active] += 1
+
+        report = StepReport(bucket=bucket, n_active=n_active)
+        for i in range(self.lanes):
+            if not run.active[i]:
+                continue
+            req = run.lane_req[i]
+            if eng.lane_advance(bucket, i, req, out, int(run.lane_depth[i])):
+                eng.lane_finish(bucket, i, req, int(run.lane_depth[i]))
+                req.retire_step = step_idx
+                self.done[req.uid] = req
+                self._completed.append(req)
+                self._sentences += 1
+                report.retired.append(req)
+                run.lane_req[i] = None
+                run.active[i] = False
+
+        if not run.active.any() and not self.queues.get(bucket):
+            eng.bucket_end(bucket)
+            del self._open[bucket]
+        return report
+
+    def poll(self) -> List["Request"]:
+        """Requests retired since the last ``poll()`` (completion order)."""
+        out = list(self._completed)
+        self._completed.clear()
+        return out
+
+    def run(self) -> Dict[str, float]:
+        """Back-compat drain-the-world wrapper: step until idle.
+
+        The bucket ORDER now follows the configured policy (EDF/WRR time
+        slicing instead of ascending sequential drains).  Per-request COMPUTE
+        results (logits, exit layers, generated tokens) are identical — lanes
+        are independent and each bucket's shapes are fixed, so no new traces
+        either — but shared-clock DVFS accounting (energy_j / latency_s /
+        operating points) legitimately differs from the sequential order: the
+        arbiter sees a different lane mix and admission timeline.
+        """
+        while not self.idle:
+            self.step()
+        return self.telemetry()
 
     # ------------------------------------------------------------ telemetry
     def telemetry(self) -> Dict[str, float]:
+        delays = [
+            r.first_compute_step - r.arrival_step
+            for r in self.done.values()
+            if r.first_compute_step is not None
+        ]
         return {
             "sentences": self._sentences,
             "dense_steps": self._dense_steps,
@@ -184,4 +585,8 @@ class LaneScheduler:
                 if self._dense_steps
                 else 0.0
             ),
+            "modeled_now_s": self.now_s,
+            "queue_delay_steps_p50": float(np.percentile(delays, 50)) if delays else 0.0,
+            "queue_delay_steps_p95": float(np.percentile(delays, 95)) if delays else 0.0,
+            "queue_delay_steps_max": float(max(delays)) if delays else 0.0,
         }

@@ -166,6 +166,104 @@ class TestArbiterInvariants:
         assert r1.latency_s == pytest.approx(arb.now_s - t_mid)
 
 
+class TestPerRequestDeadlines:
+    def test_lane_judged_against_its_own_deadline(self):
+        """Two identical lanes, one with a tight per-request deadline, one
+        with a loose one: the report's deadline_met must reflect EACH lane's
+        OWN budget, not the controller-global target."""
+        c = _controller(1.0, predictor=_perfect_predictor(4))
+        t_layer = c.layer_time_s(c.max_op)
+        arb = BatchedDVFSArbiter(c)
+        arb.admit(0, deadline_s=2.5 * t_layer)     # tight: 4 layers won't fit
+        arb.admit(1, deadline_s=20.0 * t_layer)    # loose: trivially met
+        for step in range(4):
+            arb.step([0, 1])
+            if step == 0:
+                arb.observe_entropy(0, 0.5)
+                arb.observe_entropy(1, 0.5)
+        r0 = arb.retire(0, 4)
+        r1 = arb.retire(1, 4)
+        assert r0.target_s == pytest.approx(2.5 * t_layer)
+        assert r1.target_s == pytest.approx(20.0 * t_layer)
+        assert not r0.deadline_met
+        assert r1.deadline_met
+
+    def test_tight_deadline_forces_faster_clock(self):
+        """A lane with a tighter deadline requires a higher frequency from
+        the shared clock than the same lane at the controller target."""
+        c = _controller(3.0, predictor=_perfect_predictor(8))
+        arb = BatchedDVFSArbiter(c)
+        arb.admit(0)                                   # controller target (3x)
+        arb.admit(1, deadline_s=c.target_latency_s / 3.0)  # slack-free
+        dec = arb.step([0, 1])
+        assert dec.need_hz[1] > dec.need_hz[0]
+
+    def test_default_admit_matches_controller_target(self):
+        c = _controller(1.5, predictor=_perfect_predictor(4))
+        arb = BatchedDVFSArbiter(c)
+        reports = arb.replay_batch([[0.5] * 4], [4])
+        assert reports[0].target_s == pytest.approx(c.target_latency_s)
+
+    def test_replay_batch_per_sentence_deadlines(self):
+        c = _controller(1.5, predictor=_perfect_predictor(4))
+        arb = BatchedDVFSArbiter(c)
+        loose = c.target_latency_s * 10
+        tight = c.layer_time_s(c.max_op) * 0.5     # < one layer: must miss
+        reports = arb.replay_batch(
+            [[0.5] * 4, [0.5] * 4], [4, 4], deadlines_s=[loose, tight]
+        )
+        assert reports[0].deadline_met
+        assert not reports[1].deadline_met
+
+
+class TestPerBucketCycles:
+    def test_short_bucket_lane_charged_its_own_cost(self):
+        """Two lanes at the max point for 3 layers, one budgeted at the
+        16-token bucket's cycles: its energy and required frequency must be
+        proportionally smaller than the 64-token lane's."""
+        c = _controller(1.0)
+        cyc_short = c.cycles_for_seq_len(16)
+        assert cyc_short < c.cycles_per_layer      # stats are at seq_len=64
+        arb = BatchedDVFSArbiter(c)
+        arb.admit(0)                               # default: largest-bucket cost
+        arb.admit(1, cycles_per_layer=cyc_short)
+        dec = arb.step([0, 1])
+        # conservative full-depth budgets scale with the lane's OWN cycles
+        assert dec.need_hz[1] == pytest.approx(
+            dec.need_hz[0] * cyc_short / c.cycles_per_layer
+        )
+        for _ in range(2):
+            arb.step([0, 1])
+        r0 = arb.retire(0, 3)
+        r1 = arb.retire(1, 3)
+        assert r1.energy_j == pytest.approx(
+            r0.energy_j * cyc_short / c.cycles_per_layer
+        )
+
+    def test_step_duration_is_stepped_buckets_layer_time(self):
+        """A fused step over short-bucket lanes advances the modeled clock by
+        the SHORT bucket's layer time, not the largest bucket's."""
+        c = _controller(1.0)
+        cyc_short = c.cycles_for_seq_len(16)
+        arb = BatchedDVFSArbiter(c)
+        arb.admit(0, cycles_per_layer=cyc_short)
+        dec = arb.step([0])
+        assert dec.dt_s == pytest.approx(cyc_short / dec.op.freq_hz)
+        arb.retire(0, 1)
+
+    def test_cycle_scaling_is_superlinear_in_seq_len(self):
+        """Attention scores scale quadratically, so doubling the bucket must
+        more than double the per-layer cycles (and the cache must be
+        consistent with a fresh computation)."""
+        c = _controller(1.0)
+        c16, c32, c64 = (c.cycles_for_seq_len(s) for s in (16, 32, 64))
+        assert c64 == pytest.approx(c.cycles_per_layer)   # stats' own length
+        assert c32 > 2 * c16 * 0.9 and c64 > 2 * c32 * 0.9
+        assert c16 < c32 < c64
+        # memoized: same object/value on repeat query
+        assert c.cycles_for_seq_len(32) == c32
+
+
 class TestOnlineCalibration:
     def test_running_quantile_matches_numpy(self):
         cal = OnlineExitCalibrator(12, lo=0.0, hi=1.0, n_bins=4, quantile=1.0)

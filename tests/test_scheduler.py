@@ -1,6 +1,8 @@
 """Unified lane scheduler: length-bucketed fixed shapes (one compile per
-bucket), bucket padding parity, and per-lane KV-length decode parity against
-isolated single-request decoding."""
+bucket), bucket padding parity, per-lane KV-length decode parity against
+isolated single-request decoding, and the step()-clocked API: mid-flight
+submit parity, EDF-beats-FIFO cross-bucket preemption, poll(), and run()
+back-compat."""
 import dataclasses
 
 import jax
@@ -14,7 +16,12 @@ from repro.core.entropy import entropy_from_logits
 from repro.data.synthetic import SyntheticCLS
 from repro.models.model import build_model
 from repro.serving.engine import ClassifierServer, DecoderServer, Request
-from repro.serving.scheduler import LaneScheduler
+from repro.serving.scheduler import (
+    EDFPolicy,
+    FIFOPolicy,
+    LaneScheduler,
+    WeightedRoundRobinPolicy,
+)
 
 
 def _albert_model(threshold=0.6):
@@ -125,6 +132,196 @@ class TestBucketedCompileCount:
             assert req.exit_layer == want_exit
             np.testing.assert_allclose(req.result, want_lg, atol=5e-2)
             assert np.argmax(req.result) == np.argmax(want_lg)
+
+
+class TestSteppedAPI:
+    def test_mid_drain_submit_parity_and_no_new_traces(self):
+        """Submitting BETWEEN steps must produce the same per-request outputs
+        as submitting everything up front, and must not add compiled traces
+        (the step shapes are fixed per bucket)."""
+        thr = 0.5
+        model, params, cfg = _albert_model(threshold=thr)
+        data = SyntheticCLS(cfg.vocab_size, 32, 8, num_classes=3, seed=4)
+        batch = data.batch(0)
+        lengths = [10, 30, 14, 28, 12, 26, 16, 32]
+
+        # reference: everything submitted up front, drained with run()
+        ref = ClassifierServer(model, params, batch_lanes=2, buckets=(16, 32))
+        for i, L in enumerate(lengths):
+            ref.submit(Request(uid=i, tokens=batch["tokens"][i][:L]))
+        ref_stats = ref.run()
+
+        # stepped: half up front, the rest injected mid-drain
+        srv = ClassifierServer(model, params, batch_lanes=2, buckets=(16, 32))
+        for i, L in enumerate(lengths[:4]):
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i][:L]))
+        steps = 0
+        while True:
+            rep = srv.step()
+            if rep is None:
+                break
+            steps += 1
+            if steps == 2:
+                for i, L in enumerate(lengths[4:], start=4):
+                    srv.submit(Request(uid=i, tokens=batch["tokens"][i][:L]))
+        stats = srv.telemetry()
+        assert len(srv.done) == 8
+        for i in range(8):
+            assert srv.done[i].exit_layer == ref.done[i].exit_layer, i
+            np.testing.assert_allclose(
+                srv.done[i].result, ref.done[i].result, atol=1e-5
+            )
+        # no extra compiles vs the up-front drain: one step trace per bucket
+        assert stats["step_traces_per_bucket"] == ref_stats["step_traces_per_bucket"]
+        assert stats["step_traces"] == 2
+
+    def test_poll_returns_each_completion_exactly_once(self):
+        model, params, cfg = _albert_model(threshold=0.5)
+        data = SyntheticCLS(cfg.vocab_size, 32, 6, num_classes=3, seed=5)
+        batch = data.batch(0)
+        srv = ClassifierServer(model, params, batch_lanes=2, buckets=(32,))
+        for i in range(6):
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i]))
+        polled = []
+        while srv.step() is not None:
+            polled.extend(r.uid for r in srv.poll())
+        polled.extend(r.uid for r in srv.poll())
+        assert sorted(polled) == list(range(6))   # each exactly once
+        assert srv.poll() == []                    # drained
+
+    def test_run_is_equivalent_to_step_loop(self):
+        """run() is a thin `while work: step()` wrapper — same completions,
+        same telemetry counters as driving step() by hand."""
+        model, params, cfg = _albert_model(threshold=0.5)
+        data = SyntheticCLS(cfg.vocab_size, 32, 6, num_classes=3, seed=6)
+        batch = data.batch(0)
+        a = ClassifierServer(model, params, batch_lanes=2, buckets=(16, 32))
+        b = ClassifierServer(model, params, batch_lanes=2, buckets=(16, 32))
+        for i in range(6):
+            L = 12 if i % 2 else 30
+            a.submit(Request(uid=i, tokens=batch["tokens"][i][:L]))
+            b.submit(Request(uid=i, tokens=batch["tokens"][i][:L]))
+        st_a = a.run()
+        while b.step() is not None:
+            pass
+        st_b = b.telemetry()
+        assert len(a.done) == len(b.done) == 6
+        for i in range(6):
+            assert a.done[i].exit_layer == b.done[i].exit_layer
+        for k in ("sentences", "dense_steps", "layer_calls", "step_traces",
+                  "bucket_steps", "lane_occupancy"):
+            assert st_a[k] == st_b[k], k
+
+    def test_queue_delay_telemetry(self):
+        """arrival_step -> first_compute_step -> retire_step stamps and the
+        p50/p95 queue-delay telemetry: more requests than lanes means later
+        requests provably wait in queue."""
+        model, params, cfg = _albert_model(threshold=0.5)
+        data = SyntheticCLS(cfg.vocab_size, 32, 8, num_classes=3, seed=7)
+        batch = data.batch(0)
+        srv = ClassifierServer(model, params, batch_lanes=2, buckets=(32,))
+        for i in range(8):
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i]))
+        st = srv.run()
+        for r in srv.done.values():
+            assert r.arrival_step == 0
+            assert r.first_compute_step is not None and r.retire_step is not None
+            assert r.first_compute_step >= r.arrival_step
+            assert r.retire_step >= r.first_compute_step
+        delays = [r.first_compute_step - r.arrival_step for r in srv.done.values()]
+        assert max(delays) > 0                 # someone actually queued
+        assert st["queue_delay_steps_p95"] >= st["queue_delay_steps_p50"] >= 0.0
+        assert st["queue_delay_steps_max"] == max(delays)
+
+
+class TestCrossBucketPolicies:
+    def _mk(self, policy):
+        model, params, cfg = _albert_model(threshold=1e-9)  # never early-exit
+        data = SyntheticCLS(cfg.vocab_size, 32, 8, num_classes=3, seed=8)
+        batch = data.batch(0)
+        srv = ClassifierServer(
+            model, params, batch_lanes=2, buckets=(16, 32), policy=policy
+        )
+        return srv, batch, cfg
+
+    def test_edf_short_deadline_preempts_deep_drain(self):
+        """The acceptance property: a short-deadline 16-token request
+        submitted DURING a deep 32-token drain retires before the drain
+        completes under EDF, and the drain's results are unaffected."""
+        srv, batch, cfg = self._mk(EDFPolicy())
+        for i in range(4):                      # deep drain: full-depth, no SLO
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i][:32]))
+        srv.step()
+        srv.step()
+        # tight-but-feasible SLO: needs n_layers steps, deadline has headroom
+        srv.submit(Request(
+            uid=99, tokens=batch["tokens"][4][:12],
+            deadline_s=float(cfg.n_layers + 2),
+        ))
+        while srv.step() is not None:
+            pass
+        short = srv.done[99]
+        drain_last = max(srv.done[i].retire_step for i in range(4))
+        assert short.retire_step < drain_last, (
+            "EDF must retire the short-deadline request before the deep "
+            "drain finishes"
+        )
+        assert short.exit_layer == cfg.n_layers       # threshold ~0: full depth
+        st = srv.telemetry()
+        assert st["step_traces"] == 2                 # interleaving: no retrace
+
+    def test_fifo_finishes_deep_drain_first(self):
+        """The FIFO baseline the EDF property beats: same workload, but the
+        late short request waits until the earlier-submitted drain is done."""
+        srv, batch, cfg = self._mk(FIFOPolicy())
+        for i in range(4):
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i][:32]))
+        srv.step()
+        srv.step()
+        srv.submit(Request(
+            uid=99, tokens=batch["tokens"][4][:12],
+            deadline_s=float(cfg.n_layers + 2),
+        ))
+        while srv.step() is not None:
+            pass
+        drain_last = max(srv.done[i].retire_step for i in range(4))
+        assert srv.done[99].retire_step > drain_last
+
+    def test_explicit_slo_jumps_queue_inside_its_own_bucket(self):
+        """An explicit-SLO request queued BEHIND deadline-free work in the
+        SAME bucket must be admitted at the next free lane, not after the
+        whole FIFO backlog (intra-bucket priority, not just cross-bucket)."""
+        srv, batch, cfg = self._mk(EDFPolicy())
+        for i in range(6):                      # backlog: one bucket, no SLOs
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i][:12]))
+        srv.step()                              # lanes now hold uid 0 and 1
+        srv.submit(Request(
+            uid=77, tokens=batch["tokens"][6][:12],
+            deadline_s=float(cfg.n_layers + 2),
+        ))
+        while srv.step() is not None:
+            pass
+        # admitted at the FIRST refill after submission: only the two
+        # in-flight requests may retire before it
+        assert srv.done[77].first_compute_step <= srv.done[77].arrival_step + cfg.n_layers
+        before = [u for u in range(6) if srv.done[u].retire_step < srv.done[77].retire_step]
+        assert len(before) <= 2, before
+
+    def test_wrr_time_slices_both_buckets(self):
+        """Weighted round robin: with no deadlines anywhere, both buckets
+        advance in alternation instead of one draining to completion first."""
+        srv, batch, cfg = self._mk(WeightedRoundRobinPolicy())
+        for i in range(2):
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i][:32]))
+        for i in range(2, 4):
+            srv.submit(Request(uid=i, tokens=batch["tokens"][i][:12]))
+        buckets_seen = []
+        for _ in range(4):
+            buckets_seen.append(srv.step().bucket)
+        assert set(buckets_seen) == {16, 32}, buckets_seen
+        while srv.step() is not None:
+            pass
+        assert len(srv.done) == 4
 
 
 class TestPerLaneKVDecode:

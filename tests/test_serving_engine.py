@@ -160,6 +160,40 @@ class TestCompileCount:
         assert stats["decode_traces"] == 1
 
 
+class TestPerRequestDeadlineTelemetry:
+    def test_misses_counted_against_each_requests_own_deadline(self):
+        """telemetry()['deadline_misses'] must judge every request against
+        ITS OWN deadline_s; only deadline-free requests fall back to the
+        controller-global target.  A slack-free global target with never-
+        early-exiting sentences misses for default requests, but an
+        identical request with a generous per-request deadline must NOT be
+        counted."""
+        from repro.hwmodel.edgebert_accel import albert_layer_stats
+        from repro.serving.dvfs import (
+            LatencyAwareDVFSController,
+            no_early_exit_baseline,
+        )
+
+        model, params, cfg = _albert_model(threshold=1e-9)  # full depth always
+        stats = albert_layer_stats(seq_len=32)
+        stats.n_layers = cfg.n_layers
+        # target below one layer's latency: every default request must miss
+        tight = no_early_exit_baseline(stats)["latency_s"] / (2 * cfg.n_layers)
+        ctrl = LatencyAwareDVFSController(stats, tight)
+        server = ClassifierServer(model, params, batch_lanes=2, dvfs=ctrl)
+        data = SyntheticCLS(cfg.vocab_size, 32, 4, num_classes=3, seed=9)
+        batch = data.batch(0)
+        loose = no_early_exit_baseline(stats)["latency_s"] * 10
+        server.submit(Request(uid=0, tokens=batch["tokens"][0]))  # global target
+        server.submit(Request(uid=1, tokens=batch["tokens"][1], deadline_s=loose))
+        st = server.run()
+        assert st["sentences"] == 2
+        assert st["deadline_misses"] == 1          # only the default request
+        # the per-sentence Alg.1 report saw the per-request budget too: the
+        # loose-deadline request could afford a slower operating point
+        assert server.done[1].op_freq_hz <= server.done[0].op_freq_hz
+
+
 class TestRouterTelemetry:
     def test_task_switch_preserves_shared_embedding_identity(self):
         model, params, cfg = _albert_model()

@@ -43,9 +43,25 @@ compiled traces vs the sequential drain.  Queue-delay percentiles
 (arrival -> first compute, in fused steps) make starvation regressions
 visible.
 
+Oversubscribed admission-control storm (``admission_storm``): best-effort
+traffic is mid-flight when a storm of tight-SLO explicit requests arrives at
+well past sustainable rate.  WITHOUT admission control every SLO is accepted
+and the later ones are missed (accepted-then-missed), while best-effort
+queue delay balloons behind the storm.  WITH the ``AdmissionController`` in
+front of ``submit()`` — feasibility quotes priced by the per-bucket cycle
+model at the arbiter's max operating point, just-in-time lane-occupancy
+bounds, bounded best-effort queue with oldest-drop shedding, and preemptive
+lane checkpointing — the infeasible tail is REJECTED at submission (callers
+get the minimum feasible deadline), ZERO accepted SLOs are missed,
+best-effort still completes with bounded p95 queue delay, and preemption
+bounds the first accepted contract's lane wait by one fused step.  CI gates:
+``accepted_slo_misses=0``, ``rejected>0``, ``best_effort_completed>0``, and
+the ``step_traces<=bucket_count`` pair still holding with preemption on
+(checkpoint/restore reuses the buckets' compiled paths).
+
 Also regression-checks the bucketed engine's compile telemetry: the fused
 step must trace EXACTLY once per length bucket across the whole drain — in
-BOTH scenarios (the CI grep-gate in scratch/run_ci.sh parses every
+ALL scenarios (the CI grep-gate in scratch/run_ci.sh parses every
 ``step_traces``/``bucket_count`` pair emitted below, and a second gate
 requires ``edf_deadline_misses=0``).
 
@@ -193,6 +209,71 @@ def _interleaved_edf(model, params, cfg, buckets, data, ctrl_factory) -> dict:
     return st
 
 
+def _admission_storm(model, params, cfg, buckets, data, ctrl_factory) -> dict:
+    """Oversubscribed tight-SLO storm, with and without admission control.
+
+    Best-effort work fills every lane first; then a storm of explicit
+    requests arrives whose combined work is far beyond capacity at their
+    shared relative SLO.  The no-admission baseline accepts all of them and
+    misses the tail; the admission run must reject that tail at submission
+    time instead, miss ZERO accepted SLOs, shed (bounded queue) rather than
+    starve best-effort, and use preemption so the first contract's admission
+    does not wait for a best-effort retire."""
+    from repro.serving.admission import AdmissionController
+
+    short_b = min(buckets)
+    n_be, n_storm = 3 * LANES, 6 * LANES
+    out = {}
+    for admission in (True, False):
+        ctrl = ctrl_factory()
+        arb = BatchedDVFSArbiter(ctrl)
+        server = ClassifierServer(
+            model, params, batch_lanes=LANES, arbiter=arb, buckets=buckets,
+            preempt=admission,
+        )
+        if admission:
+            ac = AdmissionController(server, max_best_effort_queue=LANES)
+            submit = ac.submit
+        else:
+            submit = server.submit
+        # best-effort floor: mixed lengths across the buckets, lanes go busy
+        be = _mixed_queue(data, buckets, n_be, seed=7)
+        for r in be:
+            submit(Request(uid=r.uid, tokens=r.tokens))
+        for _ in range(2):                       # storm hits MID-FLIGHT
+            assert server.step() is not None
+        # the storm's shared SLO: ~2 contracts' worth of just-in-time lane
+        # time per lane — feasible for the front of the storm, infeasible
+        # once accepted contracts stack up
+        t_short = ctrl.cycles_for_seq_len(short_b) / ctrl.max_op.freq_hz
+        deadline = cfg.n_layers * t_short * 2.0 * 2
+        for j in range(n_storm):
+            b = data.batch(500 + j // data.global_batch)
+            toks = b["tokens"][j % data.global_batch][: short_b - 2]
+            submit(Request(
+                uid=1000 + j, tokens=np.asarray(toks, np.int32),
+                deadline_s=deadline,
+            ))
+        while server.step() is not None:
+            pass
+        st = server.telemetry()
+        done = server.done
+        accepted_slo = [r for r in done.values() if r.deadline_s is not None]
+        st["accepted_explicit"] = len(accepted_slo)
+        be_done = [r for r in done.values() if r.deadline_s is None]
+        st["best_effort_completed"] = len(be_done)
+        be_delays = [
+            r.first_compute_step - r.arrival_step
+            for r in be_done
+            if r.first_compute_step is not None
+        ]
+        st["best_effort_p95_steps"] = (
+            float(np.percentile(be_delays, 95)) if be_delays else 0.0
+        )
+        out["with_admission" if admission else "no_admission"] = st
+    return out
+
+
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--smoke", action="store_true", help="untrained weights, CI-fast")
@@ -307,6 +388,30 @@ def main() -> None:
         f"queue_delay_p95={st_edf['queue_delay_steps_p95']:.1f}",
     )
 
+    # ---- oversubscribed tight-SLO storm: admission control vs accept-all -----
+    storm = _admission_storm(
+        model, params, cfg, buckets, data,
+        lambda: LatencyAwareDVFSController(stats, target, predictor=predictor),
+    )
+    ad, na = storm["with_admission"], storm["no_admission"]
+    emit(
+        "admission_storm", 0.0,
+        f"accepted_slo_misses={ad['accepted_slo_misses']};"
+        f"rejected={ad['rejected']};requoted={ad['requoted']};shed={ad['shed']};"
+        f"preemptions={ad['preemptions']};"
+        f"restored_steps_saved={ad['restored_steps_saved']};"
+        f"accepted_explicit={ad['accepted_explicit']};"
+        f"best_effort_completed={ad['best_effort_completed']};"
+        f"best_effort_p95={ad['best_effort_p95_steps']:.1f};"
+        f"step_traces={ad['step_traces']};bucket_count={len(buckets)}",
+    )
+    emit(
+        "admission_storm_baseline", 0.0,
+        f"noadmission_slo_misses={na['accepted_slo_misses']};"
+        f"accepted_explicit={na['accepted_explicit']};"
+        f"best_effort_p95={na['best_effort_p95_steps']:.1f};rejected=0",
+    )
+
     ok = True
     if e_shared >= e_max_vf:
         print(
@@ -339,6 +444,39 @@ def main() -> None:
             f"({st_edf['step_traces']}x for {len(buckets)} buckets)"
         )
         ok = False
+    if ad["accepted_slo_misses"]:
+        print(
+            f"FAIL: admission control accepted {ad['accepted_explicit']} "
+            f"SLOs and missed {ad['accepted_slo_misses']} of them (the "
+            "feasibility quote must be conservative)"
+        )
+        ok = False
+    if not ad["rejected"]:
+        print(
+            "FAIL: the oversubscribed storm was fully accepted — admission "
+            "control rejected nothing"
+        )
+        ok = False
+    if not ad["best_effort_completed"]:
+        print("FAIL: best-effort traffic starved to zero under admission")
+        ok = False
+    if not ad["preemptions"]:
+        print(
+            "FAIL: no lane was preempted — the storm should have evicted "
+            "busy best-effort lanes for tighter-SLO contracts"
+        )
+        ok = False
+    if not na["accepted_slo_misses"]:
+        print(
+            "WARN: the no-admission baseline missed nothing — the storm is "
+            "not oversubscribed enough to demonstrate the contrast"
+        )
+    if ad["step_traces"] > len(buckets):
+        print(
+            f"FAIL: preemption/restore retraced the fused step "
+            f"({ad['step_traces']}x for {len(buckets)} buckets)"
+        )
+        ok = False
     for name, s in (("shared_clock", st), ("online", st_on)):
         if s["deadline_misses"]:
             print(
@@ -355,7 +493,12 @@ def main() -> None:
         f"({st['step_traces']}/{len(buckets)}); online calibration "
         f"{e_max_vf / e_online:.2f}x with no profiling pass; EDF interleave: "
         f"{st_edf['short_before_drain']}/{st_edf['n_short']} shorts beat the "
-        f"drain, {st_edf['edf_deadline_misses']} SLO misses"
+        f"drain, {st_edf['edf_deadline_misses']} SLO misses; admission storm: "
+        f"{ad['accepted_explicit']} accepted / {ad['rejected']} rejected / "
+        f"0 accepted-SLO misses (baseline missed {na['accepted_slo_misses']}), "
+        f"{ad['preemptions']} preemptions saved {ad['restored_steps_saved']} "
+        f"layers, best-effort p95 {ad['best_effort_p95_steps']:.0f} vs "
+        f"{na['best_effort_p95_steps']:.0f} steps"
     )
 
 

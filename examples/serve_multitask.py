@@ -18,6 +18,15 @@ is submitted MID-DRAIN — the EDF policy preempts the ongoing work, the
 request retires against its own SLO, and queue-delay telemetry
 (arrival -> first compute, in fused steps) shows nobody starved.
 
+Admission control (``serving/admission.py``) fronts the hand-driven task:
+an impossible SLO is REJECTED at submission with the minimum feasible
+deadline quoted back (priced by the per-bucket cycle model at the arbiter's
+max operating point), the caller resubmits at the quote and is accepted —
+and met.  The servers run ``preempt=True``, so when every lane IS busy an
+urgent contract checkpoint-evicts a budget-free lane instead of waiting for
+a retire (this small demo keeps a lane free; the oversubscribed case is the
+``admission_storm`` scenario in ``benchmarks/bench_batched_dvfs.py``).
+
     PYTHONPATH=src python examples/serve_multitask.py
 """
 import dataclasses
@@ -34,6 +43,7 @@ from repro.core.early_exit import OnlineExitCalibrator
 from repro.data.synthetic import SyntheticCLS
 from repro.hwmodel.edgebert_accel import albert_layer_stats, poweron_embedding_cost
 from repro.models.model import build_model
+from repro.serving.admission import AdmissionController
 from repro.serving.dvfs import (
     BatchedDVFSArbiter,
     LatencyAwareDVFSController,
@@ -81,7 +91,7 @@ dvfs = LatencyAwareDVFSController(
 arbiter = BatchedDVFSArbiter(dvfs)
 router = MultiTaskRouter(
     model, shared_embed=base["embed"], task_params=tasks, arbiter=arbiter,
-    buckets=(16, 32),
+    buckets=(16, 32), preempt=True,
 )
 
 data = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3)
@@ -93,14 +103,32 @@ for i, task in enumerate(("mnli", "qqp", "sst2", "qnli")):
         L = int(_rng.integers(10, 33))      # mixed lengths -> both buckets
         router.submit(task, Request(uid=k, tokens=b["tokens"][k % 16][:L]))
 
-# ---- step()-clocked serving: drive ONE task by hand and drop an URGENT
-# request with its own SLO into the middle of its drain.  EDF preempts the
-# in-flight bucket; poll() hands back completions as they retire.
+# ---- step()-clocked serving with ADMISSION CONTROL: drive ONE task by hand
+# and drop an URGENT request with its own SLO into the middle of its drain.
+# An infeasible SLO is rejected at submit time with the minimum feasible
+# deadline quoted back; resubmitted at the quote it is accepted, the EDF
+# policy checkpoint-evicts a budget-free lane for it (preempt=True), and
+# poll() hands back completions as they retire.
 mnli = router.tasks["mnli"]
+admit = AdmissionController(mnli, max_best_effort_queue=8)
 for _ in range(2):
     mnli.step()
-urgent_deadline = dvfs.cycles_for_seq_len(16) / dvfs.max_op.freq_hz * cfg.n_layers * 2
-mnli.submit(Request(uid=999, tokens=b["tokens"][7][:12], deadline_s=urgent_deadline))
+t_layer16 = dvfs.cycles_for_seq_len(16) / dvfs.max_op.freq_hz
+impossible = admit.submit(Request(
+    uid=998, tokens=b["tokens"][7][:12], deadline_s=t_layer16 * 0.5
+))
+assert not impossible.admitted
+print(f"impossible SLO {t_layer16 * 0.5 * 1e3:.3f}ms REJECTED at admission; "
+      f"min feasible quote {impossible.quote.min_deadline_s*1e3:.2f}ms "
+      f"(wait {impossible.quote.wait_s*1e3:.2f}ms + service "
+      f"{impossible.quote.service_s*1e3:.2f}ms, headroom included)")
+urgent_deadline = max(
+    impossible.quote.min_deadline_s, t_layer16 * cfg.n_layers * 2
+)
+accepted = admit.submit(Request(
+    uid=999, tokens=b["tokens"][7][:12], deadline_s=urgent_deadline
+))
+assert accepted.admitted
 urgent = None
 while urgent is None and mnli.step() is not None:
     urgent = next((r for r in mnli.poll() if r.uid == 999), None)
@@ -113,6 +141,10 @@ print(f"urgent request: exit {urgent.exit_layer}/{cfg.n_layers}, modeled "
       f"{urgent_deadline*1e3:.2f}ms "
       f"({'MET' if urgent_total <= urgent_deadline else 'MISSED'}); "
       f"queued {urgent.first_compute_step - urgent.arrival_step} steps")
+st_mnli = mnli.telemetry()
+print(f"admission: {st_mnli['accepted']} accepted, {st_mnli['rejected']} "
+      f"rejected, {st_mnli['shed']} shed; {st_mnli['preemptions']} lane "
+      f"preemption(s) saved {st_mnli['restored_steps_saved']} re-run layers")
 
 stats = router.run_all()
 e_noee_each = dvfs.no_early_exit_baseline()["energy_j"]

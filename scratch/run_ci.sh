@@ -15,11 +15,17 @@
 #                          (late tight-SLO shorts preempting a deep drain).
 # Grep-gates re-check the emitted telemetry even if the benchmark's own
 # asserts were loosened:
-#   * EVERY `step_traces=N;bucket_count=M` pair (sequential drain AND
-#     interleaved stepping) must satisfy N <= M — N > M means the fused
-#     step recompiled inside a bucket;
+#   * EVERY `step_traces=N;bucket_count=M` pair (sequential drain,
+#     interleaved stepping AND the preemption-enabled admission storm) must
+#     satisfy N <= M — N > M means the fused step recompiled inside a
+#     bucket;
 #   * `edf_deadline_misses=K` from the interleaved scenario must be 0 —
-#     a tight per-request SLO admitted mid-drain may not be missed.
+#     a tight per-request SLO admitted mid-drain may not be missed;
+#   * admission storm: `accepted_slo_misses` must be 0 (an admitted SLO is a
+#     contract), `rejected` must be > 0 (the storm IS oversubscribed — the
+#     infeasible tail must be refused at submit time, not accepted and
+#     missed), and `best_effort_completed` must be > 0 (the bounded queue
+#     sheds instead of letting contracts starve best-effort forever).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,9 +63,10 @@ else
             echo "gate ok: ${traces} traces / ${count} buckets"
         fi
     done <<< "$pairs"
-    if [ "$npairs" -lt 2 ]; then
-        echo "GATE FAIL: expected trace telemetry from BOTH the sequential"
-        echo "           and the interleaved scenario, got ${npairs} pair(s)"
+    if [ "$npairs" -lt 3 ]; then
+        echo "GATE FAIL: expected trace telemetry from the sequential, the"
+        echo "           interleaved AND the admission-storm scenario, got"
+        echo "           ${npairs} pair(s)"
         gate=1
     fi
 fi
@@ -79,6 +86,40 @@ else
     else
         echo "gate ok: 0 EDF deadline misses"
     fi
+fi
+echo "== grep-gate: admission storm (accepted_slo_misses=0, rejected>0, best-effort alive) =="
+storm=$(grep -o 'accepted_slo_misses=[0-9]*' "$batched_log" | head -1)
+if [ -z "$storm" ]; then
+    echo "GATE FAIL: no accepted_slo_misses telemetry emitted (admission"
+    echo "           storm scenario missing from bench_batched_dvfs)"
+    gate=1
+else
+    misses=${storm#accepted_slo_misses=}
+    if [ "$misses" -gt 0 ]; then
+        echo "GATE FAIL: ${misses} ADMITTED SLOs were missed — the feasibility"
+        echo "           quote accepted contracts it could not honor"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses"
+    fi
+fi
+# anchor to the admission_storm line: the baseline line hardcodes rejected=0
+rejected=$(grep '^admission_storm,' "$batched_log" | grep -o 'rejected=[0-9]*' | head -1)
+rejected=${rejected#rejected=}
+if [ -z "$rejected" ] || [ "$rejected" -eq 0 ]; then
+    echo "GATE FAIL: the oversubscribed storm rejected nothing — infeasible"
+    echo "           SLOs must be refused at submit time"
+    gate=1
+else
+    echo "gate ok: ${rejected} infeasible SLOs rejected at admission"
+fi
+be=$(grep -o 'best_effort_completed=[0-9]*' "$batched_log" | head -1)
+be=${be#best_effort_completed=}
+if [ -z "$be" ] || [ "$be" -eq 0 ]; then
+    echo "GATE FAIL: best-effort traffic starved to zero under the storm"
+    gate=1
+else
+    echo "gate ok: ${be} best-effort completions under the storm"
 fi
 rm -f "$batched_log"
 

@@ -1,3 +1,4 @@
+from repro.serving.admission import AdmissionController, AdmissionDecision, Quote
 from repro.serving.engine import ClassifierServer, DecoderServer, Request, MultiTaskRouter
 from repro.serving.scheduler import (
     BucketView,

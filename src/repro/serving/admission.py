@@ -1,0 +1,339 @@
+"""Admission control: SLO feasibility quoting, load shedding, preemption.
+
+EdgeBERT's sentence-level DVFS (paper Alg. 1) only saves energy when the
+prescribed target latency is ACHIEVABLE — the controller scales (V, f) down
+into the slack between the predicted exit and the deadline.  A serving stack
+that accepts every ``Request.deadline_s`` unconditionally therefore fails in
+the exact regime edge deployments live in: under oversubscription there is no
+slack, the arbiter pins the clock at the maximum point, and accepted SLOs are
+missed anyway — the worst of both worlds (max energy AND broken contracts).
+
+``AdmissionController`` sits in FRONT of ``LaneScheduler.submit()`` and
+closes that gap with three mechanisms:
+
+* **Feasibility quoting** — at submission time, every explicit SLO is priced
+  against the same models the runtime schedules with: the per-bucket cycle
+  model (``LatencyAwareDVFSController.cycles_for_seq_len`` /
+  ``hwmodel.scale_stats_to_seq_len``), the arbiter's MAXIMUM operating point
+  (``BatchedDVFSArbiter.min_latency_quote`` — no schedule can beat the top
+  table entry, plus one worst-case LDO/ADPLL switching stall), the
+  entropy-LUT predicted exit depth (``predict_remaining_steps``; cold
+  requests quote the conservative full depth), and the CURRENT queue state.
+  Lane availability is priced by the deadline structure, not by max-op
+  completion times: Alg. 1 deliberately stretches every slack-rich lane to
+  finish JUST IN TIME, so an outstanding contract occupies its lane up to
+  its own absolute deadline and a new arrival waits (at worst) for the
+  lanes-th largest outstanding deadline in its bucket, plus other buckets'
+  serialized explicit backlog.  An SLO below the quote is **rejected** — the
+  caller receives the minimum feasible deadline — or, with
+  ``on_infeasible="requote"``, admitted at that quoted deadline instead of
+  the infeasible one.
+
+* **Load shedding** — best-effort (deadline-free) traffic gets a bounded
+  per-bucket queue with an oldest-drop policy: under a sustained tight-SLO
+  storm the best-effort backlog stays bounded (bounded queue => bounded
+  queueing delay for everything that DOES run) instead of growing without
+  limit behind an endless stream of contracts.  Explicit SLOs are never shed
+  (they were quoted), and neither are preempted requests holding a
+  checkpoint (their completed layers would be wasted).
+
+* **Preemption awareness** — when the scheduler runs with ``preempt=True``
+  (lane checkpointing), an explicit request's lane wait is bounded by ONE
+  fused step (evict a budget-free lane, restore it later) instead of one
+  retire, and the quote prices it that way.
+
+The quote is deliberately CONSERVATIVE — cold requests are priced at full
+depth, accepted explicit work is serialized — because the contract it backs
+is one-sided: a quote may overestimate (we reject work we could have served)
+but must not underestimate (an accepted SLO must be met).  The benchmark
+gate is exactly that asymmetry: ``accepted_slo_misses == 0`` with
+``rejected > 0`` under an oversubscribed storm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, TYPE_CHECKING
+
+import numpy as np
+
+from repro.serving.scheduler import LaneScheduler
+
+if TYPE_CHECKING:  # circular: engine imports scheduler
+    from repro.serving.engine import Request
+
+
+@dataclass
+class Quote:
+    """Feasibility quote for one explicit-SLO request at submission time.
+
+    All figures are RELATIVE modeled seconds from the submission instant
+    (an SLO is submission-anchored, so arrival == now at quote time).
+    """
+
+    bucket: int
+    service_s: float        # own predicted compute at the max operating point
+    wait_s: float           # modeled wait for a lane (explicit backlog +
+                            # lane availability, preemption-bounded)
+    min_deadline_s: float   # earliest feasible relative deadline, headroom
+                            # included — an SLO >= this is accepted
+    feasible: bool          # requested deadline_s >= min_deadline_s
+
+
+@dataclass
+class AdmissionDecision:
+    """What ``AdmissionController.submit`` did with a request."""
+
+    admitted: bool
+    action: str                       # "accepted" | "requoted" | "rejected"
+    bucket: int
+    quote: Optional[Quote] = None     # explicit-SLO requests only
+    shed: List["Request"] = field(default_factory=list)  # best-effort victims
+                                      # dropped to bound the queue
+
+
+class AdmissionController:
+    """Feasibility gate in front of a serving engine's ``submit()``.
+
+    Parameters
+    ----------
+    server:  a serving engine (``ClassifierServer`` / ``DecoderServer`` —
+             anything exposing ``.sched`` and ``.submit``) or a bare
+             ``LaneScheduler``.
+    headroom:
+             multiplier applied to the raw (wait + service) estimate before
+             the feasibility comparison; absorbs scheduling granularity and
+             arbitration stalls the analytic quote cannot see.  The quote
+             handed back to callers (``min_deadline_s``) includes it, so a
+             rejected caller who resubmits at the quote is accepted.
+    on_infeasible:
+             ``"reject"`` (default) refuses the request — it never enters a
+             queue and the decision carries the minimum feasible deadline —
+             or ``"requote"``: admit at the quoted deadline instead (the
+             original SLO is preserved on ``req.quoted_deadline_s``).
+    max_best_effort_queue:
+             bounded-queue depth for deadline-free traffic, per bucket
+             (``None`` = unbounded).  Submitting past the bound sheds the
+             OLDEST queued best-effort request(s) first.
+    fallback_steps:
+             predicted steps for a request when the engine offers no
+             ``predict_remaining_steps`` hook (bare schedulers in tests).
+    """
+
+    def __init__(
+        self,
+        server: Any,
+        *,
+        headroom: float = 1.25,
+        on_infeasible: str = "reject",
+        max_best_effort_queue: Optional[int] = None,
+        fallback_steps: float = 1.0,
+    ):
+        assert headroom >= 1.0, "headroom < 1 would quote below the estimate"
+        assert on_infeasible in ("reject", "requote")
+        assert max_best_effort_queue is None or max_best_effort_queue >= 1
+        self.server = server
+        self.sched: LaneScheduler = (
+            server if isinstance(server, LaneScheduler) else server.sched
+        )
+        self.headroom = float(headroom)
+        self.on_infeasible = on_infeasible
+        self.max_best_effort_queue = max_best_effort_queue
+        self.fallback_steps = float(fallback_steps)
+
+    # ------------------------------------------------------------- quoting
+    def _predict_steps(self, bucket: int, req: "Request", depth: int) -> float:
+        rem = self.sched._predict_remaining(bucket, req, depth)
+        if rem is None:
+            rem = self.fallback_steps
+        # a preempted request only needs its remaining depth
+        return max(float(rem), 1.0)
+
+    def _service_s(self, bucket: int, steps: float) -> float:
+        """Own compute floor: ``steps`` fused steps at the max operating
+        point.  With a shared-clock arbiter this is the arbiter's quote (per
+        -bucket cycles at max V/f plus one worst-case switching stall);
+        otherwise the scheduler's nominal per-bucket step time, which engines
+        with a hw model already define as the max-op layer time."""
+        arb = getattr(self.server, "arbiter", None)
+        cycles_for = getattr(self.server, "_cycles_for", None)
+        if arb is not None and cycles_for is not None:
+            return arb.min_latency_quote(
+                steps, cycles_per_layer=cycles_for(bucket)
+            )
+        return steps * float(self.sched.step_time_fn(bucket))
+
+    def _outstanding_deadlines(self, bucket: int) -> List[float]:
+        """Absolute deadlines of every outstanding explicit contract in a
+        bucket — in-flight lanes AND queued (already-accepted) requests."""
+        sched = self.sched
+        out = []
+        run = sched._open.get(bucket)
+        if run is not None:
+            for i in range(sched.lanes):
+                r = run.lane_req[i]
+                if r is not None and r.deadline_s is not None:
+                    out.append(r.arrival_s + r.deadline_s)
+        out.extend(
+            r.arrival_s + r.deadline_s
+            for r in sched.queues.get(bucket, ())
+            if r.deadline_s is not None
+        )
+        return out
+
+    def _own_bucket_wait_s(self, bucket: int) -> float:
+        """Upper bound on the wait for a lane in the request's OWN bucket.
+
+        The key subtlety is that accepted contracts do NOT free their lanes
+        at max-op speed: the DVFS arbiter deliberately stretches slack-rich
+        lanes to finish JUST IN TIME (that is Alg. 1's energy mechanism), so
+        a lane holding a contract is occupied up to that contract's absolute
+        deadline.  Every outstanding contract was admission-quoted feasible
+        (completes by its own deadline), hence with ``lanes`` lane slots a
+        new arrival waits at most until the lanes-th LARGEST outstanding
+        deadline — before that instant at least one slot must have cleared.
+
+        With fewer outstanding contracts than lanes, the arrival takes the
+        (k+1)-th lane to come free, where k is the number of QUEUED
+        contracts — EDF pops them first, so they claim the first freed
+        lanes.  Per-lane free times: zero for a free lane, the contract's
+        own absolute deadline for an in-flight explicit lane, one fused
+        step for a preemptible budget-free lane, else that lane's predicted
+        retire."""
+        sched = self.sched
+        dt = float(sched.step_time_fn(bucket))
+        deadlines = self._outstanding_deadlines(bucket)
+        if len(deadlines) >= sched.lanes:
+            d_l = sorted(deadlines, reverse=True)[sched.lanes - 1]
+            return max(0.0, d_l - sched.now_s)
+        k = sum(
+            1 for r in sched.queues.get(bucket, ()) if r.deadline_s is not None
+        )
+        run = sched._open.get(bucket)
+        free_at = []
+        for i in range(sched.lanes):
+            req = run.lane_req[i] if run is not None else None
+            if req is None:
+                free_at.append(0.0)
+            elif req.deadline_s is not None:
+                free_at.append(
+                    max(0.0, req.arrival_s + req.deadline_s - sched.now_s)
+                )
+            elif sched.preempt:
+                free_at.append(dt)      # checkpoint-evict at the next refill
+            else:
+                rem = self._predict_steps(bucket, req, int(run.lane_depth[i]))
+                free_at.append(rem * dt)
+        return sorted(free_at)[min(k, sched.lanes - 1)]
+
+    def _cross_bucket_backlog_s(self, bucket: int) -> float:
+        """Clock time OTHER buckets' explicit work steals before ours runs:
+        the scheduler advances one bucket per step and EDF ranks explicit
+        work above everything, so a contract conservatively waits for other
+        buckets' contracts too.  Priced serialized at max-op step times —
+        in-flight lanes advance together (max remaining), queued contracts
+        share lanes (summed work over the lane count).  An approximation
+        (cross-bucket contracts can stretch their steps just like own-bucket
+        ones); the ``headroom`` multiplier absorbs the residual."""
+        sched = self.sched
+        total = 0.0
+        for b in set(sched.queues) | set(sched._open):
+            if b == bucket:
+                continue
+            dt = float(sched.step_time_fn(b))
+            max_rem = 0.0
+            run = sched._open.get(b)
+            if run is not None:
+                for i in range(sched.lanes):
+                    req = run.lane_req[i]
+                    if req is not None and req.deadline_s is not None:
+                        rem = self._predict_steps(b, req, int(run.lane_depth[i]))
+                        max_rem = max(max_rem, rem)
+            q_steps = sum(
+                self._predict_steps(b, r, r.ckpt_depth)
+                for r in sched.queues.get(b, ())
+                if r.deadline_s is not None
+            )
+            total += (max_rem + np.ceil(q_steps / sched.lanes)) * dt
+        return total
+
+    def quote(self, req: "Request") -> Quote:
+        """Price an explicit-SLO request against the current system state.
+        Pure — does not enqueue anything.
+
+        Assumes EDF ties resolve in arrival order (they do: the queue pop
+        keeps the first of equal deadlines), i.e. a later arrival with the
+        same relative SLO cannot displace an earlier accepted contract; a
+        strictly TIGHTER later arrival can, which the per-arrival d_l bound
+        prices for the arrival itself but not retroactively for the displaced
+        contract — the headroom absorbs that second-order effect."""
+        sched = self.sched
+        sched.sync_clock()      # shared-arbiter time may have moved while
+                                # this server was idle: price waits from the
+                                # true now, not a stale clock
+        bucket = sched.bucket_for(sched.engine.bucket_key(req))
+        steps = self._predict_steps(bucket, req, req.ckpt_depth)
+        service = self._service_s(bucket, steps)
+        wait = self._own_bucket_wait_s(bucket) + self._cross_bucket_backlog_s(bucket)
+        min_deadline = (wait + service) * self.headroom
+        feasible = (
+            req.deadline_s is not None
+            and req.deadline_s >= min_deadline * (1 - 1e-9)
+        )
+        return Quote(
+            bucket=bucket,
+            service_s=service,
+            wait_s=wait,
+            min_deadline_s=min_deadline,
+            feasible=feasible,
+        )
+
+    # ----------------------------------------------------------- admission
+    def _do_submit(self, req: "Request") -> None:
+        # the engine's submit() also stamps req.bucket; a bare scheduler
+        # only returns it
+        if self.server is self.sched:
+            req.bucket = self.sched.submit(req)
+        else:
+            self.server.submit(req)
+
+    def _bound_best_effort(self, bucket: int) -> List["Request"]:
+        shed: List["Request"] = []
+        if self.max_best_effort_queue is None:
+            return shed
+        sched = self.sched
+        excess = (
+            sched.queued_best_effort(bucket) + 1 - self.max_best_effort_queue
+        )
+        if excess > 0:
+            shed = sched.shed_oldest(bucket, n=excess)
+        return shed
+
+    def submit(self, req: "Request") -> AdmissionDecision:
+        """Admit, re-quote, reject, or shed-and-admit one request.
+
+        Best-effort (``deadline_s is None``): always admitted, but the
+        bucket's bounded queue may shed its OLDEST queued best-effort
+        requests to make room (returned on the decision).  Explicit SLO:
+        quoted; infeasible SLOs are rejected (decision carries the minimum
+        feasible deadline) or admitted at the quote per ``on_infeasible``.
+        """
+        sched = self.sched
+        bucket = sched.bucket_for(sched.engine.bucket_key(req))
+        if req.deadline_s is None:
+            shed = self._bound_best_effort(bucket)
+            self._do_submit(req)
+            sched.admission_stats["accepted"] += 1
+            return AdmissionDecision(True, "accepted", bucket, None, shed)
+        q = self.quote(req)
+        if q.feasible:
+            self._do_submit(req)
+            sched.admission_stats["accepted"] += 1
+            return AdmissionDecision(True, "accepted", bucket, q)
+        if self.on_infeasible == "requote":
+            req.quoted_deadline_s = req.deadline_s
+            req.deadline_s = q.min_deadline_s
+            self._do_submit(req)
+            sched.admission_stats["requoted"] += 1
+            return AdmissionDecision(True, "requoted", bucket, q)
+        sched.admission_stats["rejected"] += 1
+        return AdmissionDecision(False, "rejected", bucket, q)

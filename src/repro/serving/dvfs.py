@@ -496,6 +496,51 @@ class BatchedDVFSArbiter:
         self.steps += 1
         return ArbiterStepDecision(op=op, dt_s=dt, switched=switched, need_hz=need)
 
+    def checkpoint_lane(self, lane) -> _LaneClock:
+        """Preemption support: detach a lane's clock so the lane index can be
+        reused, FREEZING the lane's remaining budget while it sits parked in
+        the scheduler queue (parked time is a scheduling decision, not lane
+        latency — the DVFS layer keeps budgeting compute only).  The returned
+        clock stores elapsed-running-time in ``admit_s`` and budget-left in
+        ``deadline_s``; ``restore_lane`` re-anchors both."""
+        st = self._lanes.pop(lane)
+        st.deadline_s = st.deadline_s - self.now_s    # remaining budget
+        st.admit_s = self.now_s - st.admit_s          # elapsed running time
+        return st
+
+    def restore_lane(self, lane, clock: _LaneClock) -> None:
+        """Re-admit a checkpointed lane clock under a (possibly different)
+        lane key: depth, energy, prediction, and slowest-op carry over, the
+        deadline re-arms with the frozen remaining budget (floored at a
+        sliver: an already-late lane races at max V/f)."""
+        assert lane not in self._lanes, f"lane {lane} already in flight"
+        clock.admit_s = self.now_s - clock.admit_s
+        clock.deadline_s = self.now_s + max(clock.deadline_s, 1e-12)
+        self._lanes[lane] = clock
+
+    def min_latency_quote(
+        self, predicted_layers: float, cycles_per_layer: Optional[float] = None
+    ) -> float:
+        """Floor on achievable lane latency: the admission-control quote.
+
+        ``predicted_layers`` at the MAXIMUM operating point — no schedule can
+        beat the top table entry — plus ONE worst-case LDO/ADPLL switching
+        stall (admitting a slack-free lane may yank the shared clock from the
+        table's slowest point to its fastest).  An explicit SLO below this is
+        physically infeasible and must be rejected or re-quoted at admission
+        time instead of accepted and missed.
+        """
+        cyc = (
+            self.c.cycles_per_layer if cycles_per_layer is None
+            else float(cycles_per_layer)
+        )
+        lo, hi = self.c.table[0], self.c.max_op
+        stall = op_switch_overhead(
+            lo.vdd, lo.freq_hz, hi.vdd, hi.freq_hz,
+            power_mw_nom=self._power_mw_nom(),
+        )["time_s"]
+        return max(predicted_layers, 0.0) * cyc / hi.freq_hz + stall
+
     def retire(self, lane, exit_layer: int) -> LaneDVFSReport:
         """Lane exited: close its clock, emit its report, free the lane."""
         st = self._lanes.pop(lane)

@@ -89,15 +89,25 @@ class Request:
     result: Optional[np.ndarray] = None
     exit_layer: Optional[int] = None
     generated: List[int] = field(default_factory=list)
-    submit_time: float = 0.0
+    submit_time: float = 0.0            # WALL clock; caller-set only — the
+                                        # scheduler stamps modeled clocks and
+                                        # never mixes the two
     finish_time: float = 0.0
     bucket: Optional[int] = None        # length bucket the scheduler assigned
+    # ---- admission / preemption lifecycle ----
+    checkpoint: Optional[Any] = None    # engine-opaque lane snapshot while
+                                        # the request sits preempted in queue
+    ckpt_depth: int = 0                 # depth the checkpoint resumes at
+    preempted: int = 0                  # times this request was evicted
+    shed: bool = False                  # dropped by load shedding (never ran)
+    quoted_deadline_s: Optional[float] = None  # original SLO before a re-quote
     # ---- scheduler lifecycle stamps (queue-delay telemetry) ----
     arrival_step: Optional[int] = None        # dense-step count at submit()
     first_compute_step: Optional[int] = None  # step index of its first lane step
     retire_step: Optional[int] = None         # step index it retired on
     arrival_s: float = 0.0                    # modeled clock at submit()
     admit_s: float = 0.0                      # modeled clock at lane admission
+    retire_s: float = 0.0                     # modeled clock at retirement
     seq: int = 0                              # global submission order
     # per-layer off-ramp entropies observed while the sentence was in flight;
     # the DVFS controller replays this trace through Alg. 1
@@ -113,6 +123,13 @@ class Request:
 # hold lanes in flight at once, so the raw lane index no longer identifies a
 # request
 _SERVER_IDS = itertools.count()
+
+# admission/preemption lifecycle counters every server's telemetry() forwards
+# verbatim from the scheduler — one shared tuple so the engines cannot drift
+_LIFECYCLE_KEYS = (
+    "accepted", "rejected", "requoted", "shed",
+    "preemptions", "restored_steps_saved", "accepted_slo_misses",
+)
 
 
 # ===========================================================================
@@ -133,6 +150,10 @@ class ClassifierServer:
     ``arbiter`` — shared-clock batched arbitration: one (V, f) per fused step.
     The two model different hardware assumptions; pass at most one.
     ``policy``  — scheduling policy for ``step()`` (default EDF + WRR).
+    ``preempt`` — allow the scheduler to evict budget-free lanes for queued
+    explicit-SLO requests via ``lane_checkpoint``/``lane_restore`` (the
+    checkpointed ``(h, depth, kv_len)`` round-trips through the bucket's
+    existing compiled insert, so preemption adds zero traces).
     """
 
     def __init__(
@@ -144,6 +165,7 @@ class ClassifierServer:
         arbiter: Optional["BatchedDVFSArbiter"] = None,
         buckets=None,
         policy: Optional[SchedulingPolicy] = None,
+        preempt: bool = False,
     ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
         assert dvfs is None or arbiter is None, (
@@ -166,6 +188,7 @@ class ClassifierServer:
             # target as an implicit deadline, so EDF slack — not blind round
             # robin — decides which bucket gets each time slice
             default_deadline_s=ctrl.target_latency_s if ctrl is not None else None,
+            preempt=preempt,
         )
         # per-bucket engine state: {"h": [lanes, S, D], "len": [lanes],
         # "out": last step's host copies} — several buckets open at once
@@ -250,6 +273,13 @@ class ClassifierServer:
         st = self._bstate.get(bucket)
         return None if st is None else st.get("dt")
 
+    def clock_s(self) -> Optional[float]:
+        """Authoritative shared timeline: the arbiter's clock.  One LDO/ADPLL
+        serves every server sharing the arbiter, so arrival stamps and EDF
+        slack must fast-forward past time OTHER servers spent on it (the
+        scheduler syncs at every submit() and step())."""
+        return None if self.arbiter is None else self.arbiter.now_s
+
     def _arb_key(self, bucket: int, lane: int):
         return (self._sid, bucket, lane)
 
@@ -333,7 +363,12 @@ class ClassifierServer:
             after = self.arbiter.telemetry()
             for k in self._arb_acc:
                 self._arb_acc[k] += after[k] - before[k]
-            st["dt"] = decision.dt_s + (after["switch_time_s"] - before["switch_time_s"])
+            # advance the scheduler clock TO the shared arbiter clock rather
+            # than by an independently summed dt: combined with the
+            # clock_s() sync at submit()/step(), every server sharing the
+            # arbiter judges EDF slack, queue waits, and admission quotes on
+            # the one hardware timeline deadlines are judged by
+            st["dt"] = max(self.arbiter.now_s - self.sched.now_s, 0.0)
         h, lg, ent, retire = self._step(
             self.params, st["h"], jnp.asarray(active), jnp.asarray(st["len"]),
             jnp.float32(self.threshold),
@@ -387,6 +422,37 @@ class ClassifierServer:
     def bucket_end(self, bucket: int) -> None:
         del self._bstate[bucket]
 
+    def lane_checkpoint(self, bucket: int, lane: int, req: Request):
+        """Snapshot ``(h, kv_len)`` at the layer boundary (the scheduler
+        keeps the depth) plus the arbiter's lane clock, so an evicted
+        sentence resumes without re-running completed layers.  Pure host-side
+        reads — no new compiled traces."""
+        st = self._bstate[bucket]
+        payload = {
+            "h": np.asarray(st["h"][lane]),
+            "len": int(st["len"][lane]),
+        }
+        if self.arbiter is not None:
+            payload["clock"] = self.arbiter.checkpoint_lane(
+                self._arb_key(bucket, lane)
+            )
+        return payload
+
+    def lane_restore(self, bucket: int, lane: int, req: Request, payload) -> None:
+        """Reload a checkpointed sentence into a (possibly different) free
+        lane.  Reuses the bucket's existing ``_insert`` trace — the payload
+        has the same ``[1, S_bucket, D]`` shape as an embed — so restore is
+        bit-exact and adds zero traces."""
+        st = self._bstate[bucket]
+        st["h"] = self._insert(
+            st["h"], jnp.int32(lane), jnp.asarray(payload["h"])[None]
+        )
+        st["len"][lane] = payload["len"]
+        if self.arbiter is not None:
+            self.arbiter.restore_lane(
+                self._arb_key(bucket, lane), payload["clock"]
+            )
+
     def predict_remaining_steps(
         self, bucket: int, req: Request, depth: int
     ) -> float:
@@ -421,12 +487,18 @@ class ClassifierServer:
             "queue_delay_steps_p50": st["queue_delay_steps_p50"],
             "queue_delay_steps_p95": st["queue_delay_steps_p95"],
             "queue_delay_steps_max": st["queue_delay_steps_max"],
+            **{k: st[k] for k in _LIFECYCLE_KEYS},
         }
         ctrl = self._ctrl
-        if ctrl is not None and done:
-            reqs = done.values()
+        if ctrl is not None:
+            # every DVFS-accounting key exists even when NOTHING has retired
+            # yet (zero retirees, or zero retirees with explicit SLOs) — the
+            # empty-reduction guards are uniform, not ad hoc per key
+            reqs = list(done.values())
             out["energy_j"] = float(sum(r.energy_j or 0.0 for r in reqs))
-            out["modeled_latency_s"] = float(max((r.latency_s or 0.0) for r in reqs))
+            out["modeled_latency_s"] = (
+                float(max((r.latency_s or 0.0) for r in reqs)) if reqs else 0.0
+            )
             # per-request accounting: each request is judged against ITS OWN
             # deadline — submission-anchored, so modeled queue wait counts
             # toward an explicit SLO; only deadline-free requests fall back
@@ -441,6 +513,9 @@ class ClassifierServer:
                 return lat > limit * (1 + 1e-9)
 
             out["deadline_misses"] = sum(1 for r in reqs if _missed(r))
+            out["accepted_slo_misses"] = sum(
+                1 for r in reqs if r.deadline_s is not None and _missed(r)
+            )
         if self.arbiter is not None:
             # deltas accumulated across THIS server's drains only: a shared
             # arbiter keeps drain-global counters, and copying those verbatim
@@ -478,13 +553,16 @@ class DecoderServer:
         eos_id: int = 2,
         buckets=None,
         policy: Optional[SchedulingPolicy] = None,
+        preempt: bool = False,
     ):
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.sched = LaneScheduler(batch_lanes, self, buckets=buckets, policy=policy)
+        self.sched = LaneScheduler(
+            batch_lanes, self, buckets=buckets, policy=policy, preempt=preempt
+        )
         self._bucketed = buckets is not None
         # per-bucket engine state: {"cache", "pos": [lanes], "cur": [lanes, 1],
         # "out"} — several buckets open at once under time slicing
@@ -570,6 +648,7 @@ class DecoderServer:
             "lane_occupancy": st["lane_occupancy"],
             "queue_delay_steps_p50": st["queue_delay_steps_p50"],
             "queue_delay_steps_p95": st["queue_delay_steps_p95"],
+            **{k: st[k] for k in _LIFECYCLE_KEYS},
         }
 
     # ------------------------------------------------------- scheduler hooks
@@ -634,6 +713,34 @@ class DecoderServer:
     def bucket_end(self, bucket: int) -> None:
         del self._bstate[bucket]
 
+    def lane_checkpoint(self, bucket: int, lane: int, req: Request):
+        """Snapshot the lane's KV cache row, cache position, and pending
+        token so a preempted decode resumes exactly where it stopped (the
+        generated tokens already live on the request)."""
+        st = self._bstate[bucket]
+        return {
+            "cache": jax.tree_util.tree_map(
+                lambda x: np.asarray(x[:, lane]), st["cache"]
+            ),
+            "pos": int(st["pos"][lane]),
+            "cur": int(st["cur"][lane, 0]),
+        }
+
+    def lane_restore(self, bucket: int, lane: int, req: Request, payload) -> None:
+        """Write the checkpointed cache row back into a (possibly different)
+        free lane.  Eager fixed-shape updates on the bucket's existing cache
+        — the counted decode/prefill traces are untouched."""
+        st = self._bstate[bucket]
+        st["cache"] = jax.tree_util.tree_map(
+            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+                full, jnp.asarray(row)[:, None].astype(full.dtype), lane, axis=1
+            ),
+            st["cache"],
+            payload["cache"],
+        )
+        st["pos"][lane] = payload["pos"]
+        st["cur"][lane, 0] = payload["cur"]
+
     def predict_remaining_steps(
         self, bucket: int, req: Request, depth: int
     ) -> float:
@@ -666,6 +773,7 @@ class MultiTaskRouter:
         arbiter: Optional["BatchedDVFSArbiter"] = None,
         buckets=None,
         policy_factory: Optional[Any] = None,
+        preempt: bool = False,
     ):
         self.model = model
         self.shared_embed = shared_embed
@@ -680,6 +788,7 @@ class MultiTaskRouter:
             self.tasks[name] = ClassifierServer(
                 model, params, dvfs=dvfs, arbiter=arbiter, buckets=buckets,
                 policy=policy_factory() if policy_factory is not None else None,
+                preempt=preempt,
             )
 
     def submit(self, task: str, req: Request):

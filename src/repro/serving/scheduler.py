@@ -45,10 +45,32 @@ where remaining work comes from the engine's entropy-LUT exit prediction
 (``predict_remaining_steps`` hook -> ``core.early_exit``).  Buckets whose
 work carries no deadline fall back to weighted-round-robin time slicing, so a
 deep 128-token drain can no longer starve queued 32-token traffic.
+
+Preemption and lane checkpointing
+---------------------------------
+With ``preempt=True`` (and an engine implementing the optional
+``lane_checkpoint``/``lane_restore`` hooks) a queued EXPLICIT-SLO request no
+longer waits for a lane to drain when every lane is busy: the scheduler
+evicts a budget-free (deadline-less) lane — checkpointing its hidden state
+``(h, depth, kv_len)`` at the layer boundary — and re-queues the evicted
+request at the FRONT of its bucket's FIFO with the checkpoint attached.  A
+later refill restores the checkpoint into a free lane and the request resumes
+at its saved depth WITHOUT re-running completed layers; because the
+checkpoint round-trips through the same fixed ``[lanes, S_bucket]`` shapes
+the engine already traced, eviction and restore add ZERO new compiled traces.
+Preemption bounds an explicit request's lane wait by one fused step instead
+of one retire (or, FIFO-worst-case, one whole drain round).
+
+Admission control (``serving/admission.py``) sits in FRONT of ``submit()``:
+it quotes feasibility for explicit SLOs (reject / re-quote instead of
+accept-then-miss) and bounds the best-effort queue (``shed_oldest``) under
+sustained oversubscription.  The scheduler carries the shared telemetry
+counters — ``rejected`` / ``requoted`` / ``shed`` / ``preemptions`` /
+``restored_steps_saved`` — so one ``telemetry()`` call reports the whole
+admit -> [preempt/checkpoint] -> retire lifecycle.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import (
@@ -103,6 +125,17 @@ class EngineHooks(Protocol):
         from drifting apart.  ``None``/absent = use ``step_time_fn``."""
         ...
 
+    # -- optional (resolved via getattr; engines may omit it) ---------------
+    def clock_s(self) -> Optional[float]:
+        """Authoritative modeled time when the engine shares a hardware
+        timeline with others (e.g. several servers on ONE DVFS arbiter —
+        one LDO/ADPLL is one clock).  The scheduler fast-forwards its own
+        ``now_s`` to this at every ``submit()`` and ``step()``, so arrival
+        stamps, EDF slack, and admission quotes are judged on the same clock
+        deadlines are — even when OTHER servers advanced it in between.
+        ``None``/absent = the scheduler's own clock is authoritative."""
+        ...
+
     def lane_advance(
         self, bucket: int, lane: int, req: "Request", out: Any, depth: int
     ) -> bool:
@@ -124,6 +157,24 @@ class EngineHooks(Protocol):
         """Predicted fused steps this request still needs (entropy-LUT exit
         prediction for the classifier, generation budget for the decoder).
         ``None``/absent = unknown; the EDF policy then uses the bare deadline."""
+        ...
+
+    # -- optional (both required for preempt=True; resolved via getattr) ----
+    def lane_checkpoint(self, bucket: int, lane: int, req: "Request") -> Any:
+        """Snapshot a lane's engine state (hidden tensor row / KV cache row,
+        valid length, DVFS lane clock) at a layer boundary so the lane can be
+        freed for a tighter-SLO arrival.  Returns an opaque payload handed
+        back verbatim to ``lane_restore``; the scheduler separately remembers
+        the lane's depth.  Must not mutate the lane — the request may be
+        restored into a DIFFERENT lane index later."""
+        ...
+
+    def lane_restore(self, bucket: int, lane: int, req: "Request", payload: Any) -> None:
+        """Reload a checkpointed request into a free lane.  Must reuse the
+        bucket's existing fixed-shape compiled paths (zero new traces) and
+        reproduce the checkpointed state bit-identically, so a preempted-
+        then-restored request computes the same function as an uninterrupted
+        run."""
         ...
 
 
@@ -236,6 +287,16 @@ class FIFOPolicy:
         return min(views, key=lambda v: (v.earliest_seq, v.bucket)).bucket
 
 
+def _pop_at(q: deque, idx: int) -> "Request":
+    """Remove and return the element at ``idx`` from a deque in O(idx):
+    rotate it to the front, pop, rotate back (popping at the front is what
+    makes rotating by the PRE-pop index correct afterwards)."""
+    q.rotate(-idx)
+    item = q.popleft()
+    q.rotate(idx)
+    return item
+
+
 @dataclass
 class _BucketRun:
     """Scheduler-side lane bookkeeping of one OPEN bucket."""
@@ -282,6 +343,14 @@ class LaneScheduler:
                   backlog of budget-free work.  ``None`` keeps deadline-free
                   requests out of the EDF ranking entirely (WRR fallback
                   when nothing carries a deadline).
+    preempt:      enable lane eviction for explicit SLOs: when a bucket's
+                  queue holds an explicit-deadline request and every lane is
+                  busy, a budget-free lane is checkpointed
+                  (``engine.lane_checkpoint``) and re-queued at the FIFO
+                  front, to be restored later without re-running completed
+                  layers.  Requires the engine to implement the
+                  ``lane_checkpoint``/``lane_restore`` hooks; silently
+                  disabled otherwise.
     """
 
     def __init__(
@@ -293,6 +362,7 @@ class LaneScheduler:
         policy: Optional[SchedulingPolicy] = None,
         step_time_fn: Optional[Callable[[int], float]] = None,
         default_deadline_s: Optional[float] = None,
+        preempt: bool = False,
     ):
         assert lanes >= 1
         self.lanes = lanes
@@ -302,6 +372,10 @@ class LaneScheduler:
         self.policy: SchedulingPolicy = policy if policy is not None else EDFPolicy()
         self.step_time_fn = step_time_fn if step_time_fn is not None else (lambda b: 1.0)
         self.default_deadline_s = default_deadline_s
+        self.preempt = bool(preempt) and (
+            getattr(engine, "lane_checkpoint", None) is not None
+            and getattr(engine, "lane_restore", None) is not None
+        )
         self.queues: Dict[int, deque] = {}
         self.done: Dict[int, "Request"] = {}
         self.now_s = 0.0                # modeled clock (sum of step times)
@@ -319,6 +393,14 @@ class LaneScheduler:
         self._lane_steps = 0            # ACTIVE lane x step executions
         self._refills = 0
         self._bucket_steps: Dict[int, int] = {}
+        self._preemptions = 0
+        self._restored_steps_saved = 0  # checkpointed layers NOT re-run
+        self._shed = 0                  # best-effort requests dropped
+        # admission-layer verdict counters (``serving/admission.py`` updates
+        # these so one telemetry() call covers the whole request lifecycle)
+        self.admission_stats: Dict[str, int] = {
+            "accepted": 0, "rejected": 0, "requoted": 0,
+        }
 
     # ------------------------------------------------------------- queueing
     def bucket_for(self, key: int) -> int:
@@ -334,8 +416,14 @@ class LaneScheduler:
     def submit(self, req: "Request") -> int:
         """Queue a request — at any time, including between steps of an
         in-flight drain; it lands in a later refill of its bucket.  Returns
-        the bucket it landed in."""
-        req.submit_time = time.time()
+        the bucket it landed in.
+
+        Stamps MODELED clocks only (``arrival_s`` / ``arrival_step``).  The
+        wall-clock ``req.submit_time`` is deliberately NOT written here:
+        deadline math runs entirely on the modeled clock, and a wall-clock
+        stamp on the same object invited silently mixing the two (callers
+        that want wall time set it themselves)."""
+        self.sync_clock()
         req.arrival_step = self._dense_steps
         req.arrival_s = self.now_s
         req.seq = self._seq
@@ -347,6 +435,45 @@ class LaneScheduler:
             if d_abs < self._qmin_deadline.get(b, float("inf")):
                 self._qmin_deadline[b] = d_abs
         return b
+
+    def queued_best_effort(self, bucket: int) -> int:
+        """Budget-free (no explicit SLO) requests waiting in a bucket's queue,
+        excluding preempted requests carrying a checkpoint (those hold
+        partially computed state and are not shed)."""
+        return sum(
+            1
+            for r in self.queues.get(bucket, ())
+            if r.deadline_s is None and r.checkpoint is None
+        )
+
+    def shed_oldest(self, bucket: int, n: int = 1) -> List["Request"]:
+        """Load shedding: drop up to ``n`` of the OLDEST queued budget-free
+        requests from a bucket (oldest-drop keeps the freshest traffic, the
+        usual bounded-queue policy).  Explicit-SLO requests are never shed —
+        they were admission-quoted — and neither are preempted requests
+        carrying a checkpoint (their completed layers would be wasted).
+        Dropped requests are marked ``shed`` and returned; they never retire
+        and never appear in ``done``."""
+        out: List["Request"] = []
+        q = self.queues.get(bucket)
+        if not q:
+            return out
+        for _ in range(n):
+            idx = next(
+                (
+                    i
+                    for i, r in enumerate(q)
+                    if r.deadline_s is None and r.checkpoint is None
+                ),
+                None,
+            )
+            if idx is None:
+                break
+            victim = _pop_at(q, idx)
+            victim.shed = True
+            out.append(victim)
+            self._shed += 1
+        return out
 
     @property
     def pending(self) -> int:
@@ -363,6 +490,18 @@ class LaneScheduler:
         return self.pending == 0 and self.in_flight == 0
 
     # ---------------------------------------------------------- the clock
+    def sync_clock(self) -> None:
+        """Fast-forward ``now_s`` to the engine's authoritative shared clock
+        (``clock_s`` hook), if it has one and it ran ahead — e.g. another
+        server stepped the shared DVFS arbiter since we last ran.  No-op for
+        engines that own their timeline (monotone: never rewinds)."""
+        hook = getattr(self.engine, "clock_s", None)
+        if hook is None:
+            return
+        t = hook()
+        if t is not None and t > self.now_s:
+            self.now_s = float(t)
+
     def _predict_remaining(self, bucket: int, req: "Request", depth: int):
         hook = getattr(self.engine, "predict_remaining_steps", None)
         if hook is None:
@@ -393,9 +532,7 @@ class LaneScheduler:
                     best, best_d = idx, d
         if best is None:
             return q.popleft()
-        q.rotate(-best)
-        req = q.popleft()
-        q.rotate(best)
+        req = _pop_at(q, best)
         self._recompute_qmin(bucket)       # the minimum just left the queue
         return req
 
@@ -474,10 +611,51 @@ class LaneScheduler:
             out.append(self._view(b))
         return out
 
+    # --------------------------------------------------------- preemption
+    def _maybe_preempt(self, bucket: int, run: _BucketRun) -> None:
+        """Evict budget-free lanes for queued EXPLICIT-SLO requests.
+
+        Runs just before refill on the bucket ``step()`` chose: if the queue
+        holds more explicit requests than there are free lanes, budget-free
+        in-flight lanes are checkpointed (most predicted remaining work
+        first — the longest work is the cheapest to defer) and re-queued at
+        the FIFO front so the freed lanes take the contracts THIS step.  The
+        explicit request's lane wait is thereby bounded by one fused step
+        instead of one retire."""
+        q = self.queues.get(bucket)
+        if not q:
+            return
+        n_explicit = sum(1 for r in q if r.deadline_s is not None)
+        if not n_explicit:
+            return
+        free = sum(1 for r in run.lane_req if r is None)
+        need = n_explicit - free
+        if need <= 0:
+            return
+        victims = []
+        for i in range(self.lanes):
+            req = run.lane_req[i]
+            if req is None or req.deadline_s is not None:
+                continue
+            rem = self._predict_remaining(bucket, req, int(run.lane_depth[i]))
+            victims.append((-(rem if rem is not None else float(np.inf)), i))
+        victims.sort()
+        for _, i in victims[:need]:
+            req = run.lane_req[i]
+            req.checkpoint = self.engine.lane_checkpoint(bucket, i, req)
+            req.ckpt_depth = int(run.lane_depth[i])
+            req.preempted += 1
+            q.appendleft(req)
+            run.lane_req[i] = None
+            run.active[i] = False
+            self._preemptions += 1
+
     # ----------------------------------------------------------- stepping
     def step(self) -> Optional[StepReport]:
         """Advance ONE bucket by one fused step; returns what happened, or
         ``None`` when no work remains anywhere."""
+        self.sync_clock()       # another server may have advanced the shared
+                                # timeline: EDF slack and admit_s need it
         views = self._candidates()
         if not views:
             return None
@@ -496,6 +674,11 @@ class LaneScheduler:
             )
             self._open[bucket] = run
 
+        # evict budget-free lanes for queued explicit SLOs BEFORE refill, so
+        # the freed lanes take the contracts in this very step
+        if self.preempt:
+            self._maybe_preempt(bucket, run)
+
         # refill every free lane from this bucket's queue (continuation
         # batching: retired lanes never idle while work is queued)
         q = self.queues.get(bucket)
@@ -503,11 +686,22 @@ class LaneScheduler:
         for i in range(self.lanes):
             if run.lane_req[i] is None and q:
                 req = self._pop_next(bucket)
-                eng.lane_load(bucket, i, req)
-                req.first_compute_step = step_idx
-                req.admit_s = self.now_s
+                if req.checkpoint is not None:
+                    # preempted earlier: restore the checkpointed state and
+                    # resume at its saved depth — completed layers are NOT
+                    # re-run, and the original admission stamps survive (the
+                    # queue-delay telemetry measures the FIRST admission)
+                    eng.lane_restore(bucket, i, req, req.checkpoint)
+                    run.lane_depth[i] = req.ckpt_depth
+                    self._restored_steps_saved += req.ckpt_depth
+                    req.checkpoint = None
+                else:
+                    eng.lane_load(bucket, i, req)
+                    run.lane_depth[i] = 0
+                    req.admit_s = self.now_s
+                if req.first_compute_step is None:
+                    req.first_compute_step = step_idx
                 run.lane_req[i] = req
-                run.lane_depth[i] = 0
                 run.active[i] = True
                 self._refills += 1
         assert run.active.any(), "candidate bucket must have work after refill"
@@ -533,6 +727,7 @@ class LaneScheduler:
             if eng.lane_advance(bucket, i, req, out, int(run.lane_depth[i])):
                 eng.lane_finish(bucket, i, req, int(run.lane_depth[i]))
                 req.retire_step = step_idx
+                req.retire_s = self.now_s
                 self.done[req.uid] = req
                 self._completed.append(req)
                 self._sentences += 1
@@ -568,10 +763,13 @@ class LaneScheduler:
 
     # ------------------------------------------------------------ telemetry
     def telemetry(self) -> Dict[str, float]:
+        # guard uniformly against zero retirees (and against requests that
+        # somehow lack lifecycle stamps): every percentile / max / miss key
+        # must exist, as 0, even when nothing has retired yet
         delays = [
             r.first_compute_step - r.arrival_step
             for r in self.done.values()
-            if r.first_compute_step is not None
+            if r.first_compute_step is not None and r.arrival_step is not None
         ]
         return {
             "sentences": self._sentences,
@@ -589,4 +787,21 @@ class LaneScheduler:
             "queue_delay_steps_p50": float(np.percentile(delays, 50)) if delays else 0.0,
             "queue_delay_steps_p95": float(np.percentile(delays, 95)) if delays else 0.0,
             "queue_delay_steps_max": float(max(delays)) if delays else 0.0,
+            # ---- admission / preemption lifecycle counters ----
+            "accepted": self.admission_stats["accepted"],
+            "rejected": self.admission_stats["rejected"],
+            "requoted": self.admission_stats["requoted"],
+            "shed": self._shed,
+            "preemptions": self._preemptions,
+            "restored_steps_saved": self._restored_steps_saved,
+            # explicit SLOs judged on the MODELED engine clock (submission ->
+            # retirement), so the contract metric exists for every engine and
+            # DVFS configuration; servers with a DVFS controller overwrite it
+            # with the equivalent arbiter-latency accounting
+            "accepted_slo_misses": sum(
+                1
+                for r in self.done.values()
+                if r.deadline_s is not None
+                and r.retire_s - r.arrival_s > r.deadline_s * (1 + 1e-9)
+            ),
         }

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import early_exit as ee
 
@@ -102,3 +103,89 @@ class TestTokenLevelExit:
         logits, exit_layer = m.forward_token_exit(params, toks, threshold=np.inf)
         assert (np.asarray(exit_layer) == 1).all()
         assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestOnlineCalibratorDrift:
+    """Per-bin quantile convergence of ``OnlineExitCalibrator`` when the
+    entropy -> exit-layer relationship DRIFTS mid-stream: the bounded window
+    must forget the old regime and converge to the new one."""
+
+    def test_per_bin_quantile_converges_under_drift(self):
+        cal = ee.OnlineExitCalibrator(
+            12, lo=0.0, hi=1.0, n_bins=4, quantile=0.9, window=64
+        )
+        rng = np.random.default_rng(0)
+        # regime A: entropies in bin 1 (~0.3) exit shallow (2..4)
+        for _ in range(200):
+            cal.observe(float(rng.uniform(0.25, 0.45)), int(rng.integers(2, 5)))
+        pred_a = cal.predict(0.3)
+        assert pred_a <= 4.0
+        # regime B (drift): the SAME entropies now exit deep (9..11); after
+        # >= window observations the old regime has fully aged out
+        exits_b = []
+        for _ in range(200):
+            e = float(rng.uniform(0.25, 0.45))
+            x = int(rng.integers(9, 12))
+            cal.observe(e, x)
+            exits_b.append(x)
+        pred_b = cal.predict(0.3)
+        assert pred_b >= 9.0
+        # converged exactly to the window quantile of the NEW regime
+        want = float(np.quantile(exits_b[-64:], 0.9))
+        assert pred_b == pytest.approx(want)
+        # untouched bins keep the conservative cold start throughout
+        assert cal.predict(0.9) == 12.0
+
+    def test_drift_does_not_leak_across_bins(self):
+        """Drift observed in one entropy bin must not move another bin's
+        prediction (the LUT is per-bin, not global)."""
+        cal = ee.OnlineExitCalibrator(
+            12, lo=0.0, hi=1.0, n_bins=4, quantile=1.0, window=32
+        )
+        for _ in range(40):
+            cal.observe(0.1, 3)          # bin 0
+        before = cal.predict(0.6)        # bin 2: cold
+        for _ in range(40):
+            cal.observe(0.6, 8)          # drift lands in bin 2 only
+        assert cal.predict(0.1) == 3.0   # bin 0 unchanged
+        assert before == 12.0 and cal.predict(0.6) == 8.0
+
+
+class TestEscalationMonotone:
+    """``predicted_remaining_layers`` past a mispredicted exit: once a
+    sentence overruns its prediction, the remaining-work estimate escalates
+    to the conservative full-depth remainder and then decreases MONOTONICALLY
+    with depth (floored at 1) — it never dips back to the optimistic LUT
+    value, so EDF cannot starve an escalated lane."""
+
+    def test_escalation_is_monotone_in_depth(self):
+        n_layers, predicted = 12, 4
+        predict_fn = lambda e: float(predicted)
+        trace = [0.5]
+        # before the predicted exit: LUT remainder
+        for depth in range(0, predicted - 1):
+            rem = ee.predicted_remaining_layers(
+                trace, depth, n_layers, predict_fn=predict_fn
+            )
+            assert rem == pytest.approx(predicted - depth)
+        # past it: escalated to the full-depth remainder, strictly
+        # non-increasing step to step, floored at 1
+        prev = None
+        for depth in range(predicted, n_layers + 1):
+            rem = ee.predicted_remaining_layers(
+                trace, depth, n_layers, predict_fn=predict_fn
+            )
+            assert rem == pytest.approx(max(float(n_layers - depth), 1.0))
+            if prev is not None:
+                assert rem <= prev
+            prev = rem
+
+    def test_escalated_remainder_never_below_one(self):
+        rem = ee.predicted_remaining_layers(
+            [0.5], 12, 12, predict_fn=lambda e: 4.0
+        )
+        assert rem == 1.0                # the step that retires it
+
+    def test_cold_start_full_depth_without_trace_or_fn(self):
+        assert ee.predicted_remaining_layers([], 0, 12) == 12.0
+        assert ee.predicted_remaining_layers([0.3], 2, 12) == 10.0

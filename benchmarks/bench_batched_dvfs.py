@@ -274,6 +274,81 @@ def _admission_storm(model, params, cfg, buckets, data, ctrl_factory) -> dict:
     return out
 
 
+def _decode_early_exit(model, params, cfg, data, stats, ctrl_factory) -> dict:
+    """Mixed classifier+decoder storm on ONE shared arbiter: per-token exit
+    on vs off.
+
+    A classifier drain and an LM-decode drain share one LDO/ADPLL: the two
+    servers interleave bucket steps on the arbiter's clock, decoder SLOs are
+    explicit (priced conservatively to stay feasible in BOTH runs), and the
+    decoder is run twice with identical traffic — per-token entropy exit
+    ENABLED (off-ramp threshold probed to spread exits) vs full-depth
+    decode.  Exit-enabled decode must spend strictly less modeled energy at
+    EQUAL accepted-SLO misses (zero), with the fused EE decode still
+    compiling exactly once per cache bucket.
+    """
+    import dataclasses as _dc
+
+    from repro.serving.engine import DecoderServer, probe_exit_threshold
+
+    dcfg = _dc.replace(
+        get_smoke_config("deepseek_7b"), dtype="float32", remat_policy="none",
+        n_layers=cfg.n_layers,
+    )
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init_params(jax.random.PRNGKey(11))
+    rng = np.random.default_rng(11)
+    n_dec, max_new, dbuckets = 2 * LANES, 5, (16,)
+    prompts = [
+        rng.integers(4, dcfg.vocab_size, size=int(rng.integers(4, 9))).astype(np.int32)
+        for _ in range(n_dec)
+    ]
+
+    # the shared probe recipe: median observed first-off-ramp entropy, so
+    # the exit-enabled run genuinely spreads exits across layers
+    thr = probe_exit_threshold(
+        dmodel, dparams, prompts, batch_lanes=LANES, buckets=dbuckets,
+        max_new_tokens=max_new,
+    )
+
+    # classifier side of the storm: best-effort mixed lengths (same model
+    # family as the main drains; its bucket set anchors the arbiter stats)
+    cls_buckets = (16, 32) if data.seq_len <= 32 else (32, 64, data.seq_len)
+    cls_reqs = _mixed_queue(data, cls_buckets, 2 * LANES, seed=11)
+
+    # conservative decoder SLO: serialized classifier backlog at max op plus
+    # the request's own cold full-depth quote, with headroom — identical in
+    # both runs, so the miss comparison is apples to apples
+    t_cls_full = no_early_exit_baseline(stats)["latency_s"]
+    out = {}
+    for label, t in (("exit", thr), ("full", None)):
+        ctrl = ctrl_factory()
+        arb = BatchedDVFSArbiter(ctrl)
+        cls = ClassifierServer(
+            model, params, batch_lanes=LANES, arbiter=arb, buckets=cls_buckets,
+        )
+        dec = DecoderServer(
+            dmodel, dparams, batch_lanes=LANES, max_seq=32, eos_id=-1,
+            buckets=dbuckets, arbiter=arb, exit_threshold=t,
+        )
+        own_quote = arb.min_latency_quote(float(max_new), dec._cycles_for(16))
+        deadline = (len(cls_reqs) * t_cls_full + own_quote) * 2.0
+        for r in cls_reqs:
+            cls.submit(Request(uid=r.uid, tokens=r.tokens))
+        for i, p in enumerate(prompts):
+            dec.submit(Request(
+                uid=1000 + i, tokens=p, max_new_tokens=max_new,
+                deadline_s=deadline,
+            ))
+        while not (cls.sched.idle and dec.sched.idle):
+            cls.step()
+            dec.step()
+        st = dec.telemetry()
+        st["cls_step_traces"] = cls.telemetry()["step_traces"]
+        out[label] = st
+    return out
+
+
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--smoke", action="store_true", help="untrained weights, CI-fast")
@@ -412,6 +487,24 @@ def main() -> None:
         f"best_effort_p95={na['best_effort_p95_steps']:.1f};rejected=0",
     )
 
+    # ---- mixed classifier+decoder storm: per-token decode exit on vs off ----
+    dee = _decode_early_exit(
+        model, params, cfg, data, stats,
+        lambda: LatencyAwareDVFSController(stats, target, predictor=predictor),
+    )
+    de, df = dee["exit"], dee["full"]
+    emit(
+        "decode_early_exit", 0.0,
+        f"exit_energy_j={de['energy_j']:.4e};full_energy_j={df['energy_j']:.4e};"
+        f"exit_beats_full={int(de['energy_j'] < df['energy_j'])};"
+        f"accepted_slo_misses={de['accepted_slo_misses']};"
+        f"full_accepted_slo_misses={df['accepted_slo_misses']};"
+        f"avg_token_exit={de['avg_token_exit_layer']:.2f}/{cfg.n_layers};"
+        f"decode_savings={de['decode_runtime_savings']:.0%};"
+        f"step_traces={de['step_traces']};bucket_count=1;"
+        f"cls_step_traces={de['cls_step_traces']}",
+    )
+
     ok = True
     if e_shared >= e_max_vf:
         print(
@@ -477,6 +570,25 @@ def main() -> None:
             f"({ad['step_traces']}x for {len(buckets)} buckets)"
         )
         ok = False
+    if de["energy_j"] >= df["energy_j"]:
+        print(
+            f"FAIL: exit-enabled decode energy {de['energy_j']:.3e} !< "
+            f"full-depth decode {df['energy_j']:.3e} under the mixed storm"
+        )
+        ok = False
+    if de["accepted_slo_misses"] or df["accepted_slo_misses"]:
+        print(
+            f"FAIL: decode storm missed accepted SLOs (exit="
+            f"{de['accepted_slo_misses']}, full={df['accepted_slo_misses']}) "
+            "— the energy comparison must hold at zero misses on both sides"
+        )
+        ok = False
+    if de["step_traces"] > 1:
+        print(
+            f"FAIL: early-exit decode retraced the fused step "
+            f"({de['step_traces']}x for 1 cache bucket)"
+        )
+        ok = False
     for name, s in (("shared_clock", st), ("online", st_on)):
         if s["deadline_misses"]:
             print(
@@ -498,7 +610,10 @@ def main() -> None:
         f"0 accepted-SLO misses (baseline missed {na['accepted_slo_misses']}), "
         f"{ad['preemptions']} preemptions saved {ad['restored_steps_saved']} "
         f"layers, best-effort p95 {ad['best_effort_p95_steps']:.0f} vs "
-        f"{na['best_effort_p95_steps']:.0f} steps"
+        f"{na['best_effort_p95_steps']:.0f} steps; decode early exit: "
+        f"{df['energy_j'] / de['energy_j']:.2f}x below full depth at avg "
+        f"token exit {de['avg_token_exit_layer']:.1f}/{cfg.n_layers}, 0 SLO "
+        "misses both sides"
     )
 
 

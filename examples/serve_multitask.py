@@ -170,3 +170,47 @@ c = poweron_embedding_cost(s["value_bytes"], s["mask_bytes"])
 print(f"power-on embedding load: eNVM {c['envm_latency_s']*1e6:.1f}us vs "
       f"DRAM->SRAM {c['conventional_latency_s']*1e6:.1f}us "
       f"({c['latency_advantage']:.0f}x latency, {c['energy_advantage']:.0f}x energy)")
+
+# ---- decoder lane: per-token early exit + DVFS on the SAME shared clock ----
+# The paper's entropy off-ramp generalized to autoregressive decode: after
+# every layer the LM head is evaluated and a token below the threshold exits
+# (hidden-state propagation keeps later layers' KV defined), its realized
+# depth feeds a position-binned online LUT, and the SAME arbiter that served
+# the classifier tasks budgets each decode lane's (V, f) from the predicted
+# remaining layers of its remaining tokens — classifier and decoder traffic
+# admitted and arbitrated on one timeline.
+from repro.configs.base import get_smoke_config as _smoke
+from repro.models.model import build_model as _build
+from repro.serving.engine import DecoderServer, probe_exit_threshold
+
+_dcfg = dataclasses.replace(
+    _smoke("deepseek_7b"), dtype="float32", remat_policy="none", n_layers=4
+)
+_dmodel = _build(_dcfg)
+_dparams = _dmodel.init_params(jax.random.PRNGKey(7))
+_drng = np.random.default_rng(7)
+_prompts = [
+    _drng.integers(4, _dcfg.vocab_size, size=int(_drng.integers(4, 9))).astype(np.int32)
+    for _ in range(6)
+]
+
+# probe the off-ramp threshold exactly like the classifier above: the median
+# first-off-ramp entropy of a no-exit pass (the shared probe recipe)
+_thr = probe_exit_threshold(_dmodel, _dparams, _prompts)
+
+decoder = DecoderServer(
+    _dmodel, _dparams, batch_lanes=2, max_seq=32, eos_id=-1, buckets=(16,),
+    arbiter=arbiter, exit_threshold=_thr,
+)
+# submission-anchored SLO: own full-depth work plus the serialized backlog
+# ahead of it (6 requests over 2 lanes), with headroom for slack-stretching
+_t_req = (decoder._cycles_for(16) / dvfs.max_op.freq_hz) * 5    # 5 tokens, full depth
+_dl = _t_req * (len(_prompts) / 2) * 4
+for _i, _p in enumerate(_prompts):
+    decoder.submit(Request(uid=100 + _i, tokens=_p, max_new_tokens=5, deadline_s=_dl))
+st_dec = decoder.run()
+print(f"decoder lane (shared clock): {st_dec['tokens']} tokens, avg token exit "
+      f"{st_dec['avg_token_exit_layer']:.1f}/{_dcfg.n_layers} "
+      f"(decode savings {st_dec['decode_runtime_savings']:.0%}), energy "
+      f"{st_dec['energy_j']*1e6:.1f}uJ, {st_dec['accepted_slo_misses']} "
+      f"accepted-SLO misses, decode traces {st_dec['decode_traces_per_bucket']}")

@@ -25,7 +25,10 @@
 #     contract), `rejected` must be > 0 (the storm IS oversubscribed — the
 #     infeasible tail must be refused at submit time, not accepted and
 #     missed), and `best_effort_completed` must be > 0 (the bounded queue
-#     sheds instead of letting contracts starve best-effort forever).
+#     sheds instead of letting contracts starve best-effort forever);
+#   * decode early exit: under the mixed classifier+decoder storm,
+#     `exit_beats_full` must be 1 (per-token exit strictly cheaper than
+#     full-depth decode) at 0 accepted-SLO misses on BOTH decode runs.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,10 +66,10 @@ else
             echo "gate ok: ${traces} traces / ${count} buckets"
         fi
     done <<< "$pairs"
-    if [ "$npairs" -lt 3 ]; then
+    if [ "$npairs" -lt 4 ]; then
         echo "GATE FAIL: expected trace telemetry from the sequential, the"
-        echo "           interleaved AND the admission-storm scenario, got"
-        echo "           ${npairs} pair(s)"
+        echo "           interleaved, the admission-storm AND the"
+        echo "           decode-early-exit scenario, got ${npairs} pair(s)"
         gate=1
     fi
 fi
@@ -120,6 +123,36 @@ if [ -z "$be" ] || [ "$be" -eq 0 ]; then
     gate=1
 else
     echo "gate ok: ${be} best-effort completions under the storm"
+fi
+echo "== grep-gate: decode_early_exit (exit beats full depth, 0 accepted misses) =="
+dee=$(grep '^decode_early_exit,' "$batched_log" | head -1)
+if [ -z "$dee" ]; then
+    echo "GATE FAIL: no decode_early_exit telemetry emitted (mixed"
+    echo "           classifier+decoder storm missing from bench_batched_dvfs)"
+    gate=1
+else
+    beats=$(echo "$dee" | grep -o 'exit_beats_full=[0-9]*'); beats=${beats#*=}
+    if [ "$beats" != "1" ]; then
+        echo "GATE FAIL: exit-enabled decode did not beat full-depth decode"
+        echo "           on modeled energy under the mixed storm"
+        gate=1
+    else
+        echo "gate ok: exit-enabled decode below full-depth energy"
+    fi
+    # key anchored on the leading ';' so it cannot match inside
+    # 'full_accepted_slo_misses=' regardless of emit order
+    dmiss=$(echo "$dee" | grep -o ';accepted_slo_misses=[0-9]*' | head -1)
+    dmiss=${dmiss#*=}
+    fmiss=$(echo "$dee" | grep -o 'full_accepted_slo_misses=[0-9]*')
+    fmiss=${fmiss#*=}
+    if [ -z "$dmiss" ] || [ "$dmiss" -gt 0 ] || [ -z "$fmiss" ] || [ "$fmiss" -gt 0 ]; then
+        echo "GATE FAIL: decode storm missed accepted SLOs (exit=${dmiss:-?},"
+        echo "           full=${fmiss:-?}) — the energy win must hold at equal"
+        echo "           (zero) deadline-miss count"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses on both decode runs"
+    fi
 fi
 rm -f "$batched_log"
 

@@ -295,6 +295,75 @@ class OnlineExitCalibrator:
         )
 
 
+class PositionBinnedExitCalibrator(OnlineExitCalibrator):
+    """Token-level variant of the online LUT: keyed by DECODE POSITION bin.
+
+    The classifier's Alg. 1 predictor maps a sentence's first-off-ramp
+    entropy to its exit layer.  Autoregressive decode has no single "first
+    off-ramp" per request — every generated token takes its own off-ramp
+    walk — but token exit depth correlates strongly with the token's
+    POSITION in the generation (early tokens copy prompt structure and exit
+    shallow; later tokens carry more uncertainty), so the decode-side LUT
+    bins on position instead: ``observe(position, exit_layer)`` folds a
+    generated token into its position bin's running quantile and
+    ``predict(position)`` reads it back.  Machinery (bounded windows,
+    per-bin quantiles, conservative full-depth cold start) is inherited
+    unchanged from ``OnlineExitCalibrator`` — position is just a different
+    scalar key into the same SRAM-table image.
+    """
+
+    def __init__(
+        self,
+        n_layers: int,
+        *,
+        max_pos: int = 256,
+        n_bins: int = 8,
+        quantile: float = 1.0,
+        window: int = 256,
+    ):
+        assert max_pos >= 1
+        super().__init__(
+            n_layers, lo=0.0, hi=float(max_pos), n_bins=n_bins,
+            quantile=quantile, window=window,
+        )
+
+    def predict_range(self, pos_start: int, pos_end: int) -> float:
+        """Vectorized ``predicted_token_layers`` over [pos_start, pos_end):
+        one digitize over the position range instead of a per-token Python
+        loop — the serving engine refreshes every active lane's remainder
+        each fused step, so this is hot-path."""
+        if pos_end <= pos_start:
+            return 0.0
+        idx = np.digitize(np.arange(pos_start, pos_end, dtype=np.float64),
+                          self.bin_edges)
+        return float(np.clip(self.bin_exit[idx], 1.0, self.n_layers).sum())
+
+
+def predicted_token_layers(
+    predict_fn: Callable[[int], float],
+    pos_start: int,
+    pos_end: int,
+    n_layers: int,
+) -> float:
+    """Predicted TOTAL layers for the tokens at positions [pos_start, pos_end).
+
+    ``predict_fn`` is a per-position exit-depth predictor (e.g.
+    ``PositionBinnedExitCalibrator.predict``); each position's prediction is
+    clamped to ``[1, n_layers]`` so a cold calibrator quotes the conservative
+    full depth for every remaining token.  This is the decode-side analogue
+    of ``predicted_remaining_layers``: the scheduler's EDF slack, the DVFS
+    arbiter's required frequency, and the admission feasibility quote all
+    consume it, so the three layers budget decode work off ONE prediction
+    chain.
+    """
+    if pos_end <= pos_start:
+        return 0.0
+    total = 0.0
+    for t in range(int(pos_start), int(pos_end)):
+        total += float(np.clip(predict_fn(t), 1.0, n_layers))
+    return total
+
+
 def predicted_remaining_layers(
     entropy_trace,
     depth: int,

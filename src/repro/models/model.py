@@ -871,6 +871,107 @@ class Model:
         logits = self.lm_logits(p, h)
         return logits, cache
 
+    def decode_step_ee(
+        self,
+        p: Params,
+        cache: Params,
+        tokens: jnp.ndarray,          # [B, 1]
+        pos,                           # scalar or [B]: current cache position
+        threshold,                     # entropy threshold (traced scalar ok)
+    ) -> Tuple[jnp.ndarray, Params, jnp.ndarray, jnp.ndarray]:
+        """One decode step with PER-TOKEN early exit (EdgeBERT Alg. 1's
+        entropy off-ramp generalized to autoregressive decode; the serving
+        counterpart of the training-time ``forward_token_exit``).
+
+        After every layer the shared LM head (post final-norm) is evaluated
+        on the current hidden state; once its entropy drops below
+        ``threshold`` the token FREEZES — hidden-state propagation: the
+        remaining layers still write their KV rows (future tokens need
+        something to attend to at every layer, so the frozen state is pushed
+        through each remaining layer's KV projections), but the token's own
+        representation stops evolving and the returned exit depth is what
+        the modeled hardware actually executes (the DVFS layer charges
+        layers ``1..exit`` only).  The computation is fully masked, so the
+        fused serving step stays fixed-shape: one compile per bucket, and a
+        batch-1 call computes bit-identically to a vmapped lane.
+
+        Returns ``(logits [B,1,V], cache, exit_layer [B], first_entropy [B])``
+        where ``exit_layer`` is 1-based and ``first_entropy`` is the LM-head
+        entropy after layer 1 (the token's first off-ramp reading).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe", "albert"), (
+            "per-token exit decode: KV-cache decoder families only"
+        )
+        positions = pos + jnp.arange(tokens.shape[1])
+        h = self.embed(p, tokens, positions=positions)
+        B = h.shape[0]
+        V = cfg.vocab_size
+        n_layers = cfg.n_layers
+
+        def head_entropy(hh):
+            lg = self.lm_logits(p, L.apply_norm(p["final_norm"], hh, cfg.norm))
+            return lg, entropy_from_logits(lg)
+
+        def body(carry, xs):
+            h, done, logits, exit_layer, first_ent, i = carry
+            if cfg.family == "albert":
+                ck, cv = xs
+                lp, span_z = p["layer"], self._span_for_layer(p, 0)
+            else:
+                lp, ck, cv, span_z = xs
+            h_new, _, c = self._dense_layer_step(
+                lp, h, causal=True, positions=positions,
+                span_z=span_z, cache=(ck, cv), cache_pos=pos,
+            )
+            # frozen tokens keep their exited representation; the layer's KV
+            # write above came from that frozen input (state propagation)
+            h = jnp.where(done[..., None], h, h_new)
+            lg, ent = head_entropy(h)                    # [B,1,V], [B,1]
+            exit_now = jnp.logical_and(jnp.logical_not(done), ent < threshold)
+            last = i == n_layers - 1
+            take = jnp.logical_or(
+                exit_now, jnp.logical_and(last, jnp.logical_not(done))
+            )
+            logits = jnp.where(take[..., None], lg, logits)
+            exit_layer = jnp.where(take[:, 0], i + 1, exit_layer)
+            first_ent = jnp.where(i == 0, ent[:, 0], first_ent)
+            done = jnp.logical_or(done, exit_now)
+            return (h, done, logits, exit_layer, first_ent, i + 1), (c[0], c[1])
+
+        init = (
+            h,
+            jnp.zeros((B, 1), bool),
+            jnp.zeros((B, 1, V), jnp.float32),
+            jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.float32),
+            jnp.array(0, jnp.int32),
+        )
+        if cfg.family == "albert":
+            (h, done, logits, exit_layer, first_ent, _), (ks, vs) = jax.lax.scan(
+                body, init, (cache["k"], cache["v"])
+            )
+        else:
+            span = p.get("span_z")
+            if span is not None:
+                span_xs = (
+                    jnp.broadcast_to(span[:1], (cfg.n_layers, cfg.n_heads))
+                    if span.shape[0] == 1 else span
+                )
+            else:
+                span_xs = None
+            if span_xs is not None:
+                (h, done, logits, exit_layer, first_ent, _), (ks, vs) = jax.lax.scan(
+                    body, init, (p["layers"], cache["k"], cache["v"], span_xs)
+                )
+            else:
+                (h, done, logits, exit_layer, first_ent, _), (ks, vs) = jax.lax.scan(
+                    lambda cr, xs: body(cr, (xs[0], xs[1], xs[2], None)),
+                    init, (p["layers"], cache["k"], cache["v"]),
+                )
+        cache = dict(cache, k=ks, v=vs)
+        return logits, cache, exit_layer, first_ent
+
     def _cross_decode(self, lp, h, ik, iv):
         """Cross-attention of decode queries against cached image K/V."""
         cfg = self.cfg

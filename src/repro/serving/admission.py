@@ -19,6 +19,11 @@ closes that gap with three mechanisms:
   table entry, plus one worst-case LDO/ADPLL switching stall), the
   entropy-LUT predicted exit depth (``predict_remaining_steps``; cold
   requests quote the conservative full depth), and the CURRENT queue state.
+  Decoder SLOs price the same way off the TOKEN-level predictor: the
+  engine's ``predict_remaining_steps`` returns fractional full-depth fused
+  steps from the position-binned exit LUT and ``_cycles_for`` the
+  full-depth fused-step cycles, so a warm calibrator tightens decode quotes
+  while a cold one quotes every remaining token at full depth.
   Lane availability is priced by the deadline structure, not by max-op
   completion times: Alg. 1 deliberately stretches every slack-rich lane to
   finish JUST IN TIME, so an outstanding contract occupies its lane up to

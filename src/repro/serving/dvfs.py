@@ -318,11 +318,17 @@ class _LaneClock:
     target_s: float                       # the lane's latency budget (per-
                                           # request SLO or controller target)
     cycles_per_layer: float               # this lane's BUCKET layer cost
-    depth: int = 0                        # encoder layers completed
+    depth: int = 0                        # layers completed (decode lanes:
+                                          # summed over the tokens generated)
     predicted_exit: Optional[float] = None  # set after the first off-ramp
     first_entropy: Optional[float] = None
     energy_j: float = 0.0
     slowest_op: Optional[OperatingPoint] = None
+    # decode lanes: predicted layers still to run across ALL remaining tokens
+    # (position-binned per-token exit predictions, conservative full depth
+    # cold).  When set it REPLACES the classifier entropy-LUT chain in
+    # ``required_hz`` — the engine refreshes it before every fused step.
+    pred_layers_remaining: Optional[float] = None
 
 
 @dataclass
@@ -429,6 +435,16 @@ class BatchedDVFSArbiter:
             st.first_entropy = float(entropy)
             st.predicted_exit = max(self.c.predict(entropy), float(st.depth + 1))
 
+    def set_remaining_layers(self, lane, layers: float) -> None:
+        """Decode lanes: refresh the predicted layers this lane still needs
+        across ALL its remaining tokens (the engine sums its position-binned
+        per-token exit predictions, conservative full depth per token while
+        the calibrator is cold).  Overrides the classifier entropy-LUT chain
+        in ``required_hz`` — per-token escalation is folded into the
+        prediction itself (the calibrator's quantile tracks realized depths,
+        and every fused step re-budgets from the refreshed value)."""
+        self._lanes[lane].pred_layers_remaining = max(float(layers), 0.0)
+
     def required_hz(self, lane) -> float:
         """Frequency this lane needs from the SHARED clock right now.
 
@@ -440,8 +456,18 @@ class BatchedDVFSArbiter:
         its predicted exit escalates (misprediction guard), and exhausted
         slack leaves no choice.  Remaining work is costed at the lane's OWN
         bucket cycles and judged against the lane's OWN deadline.
+
+        Decode lanes (``set_remaining_layers``) substitute the token-level
+        predicted remainder for the classifier entropy chain — same
+        remaining-cycles-over-remaining-time rule, Alg. 1 lines 3-4 on the
+        token timeline.
         """
         st = self._lanes[lane]
+        if st.pred_layers_remaining is not None:
+            t_rem = st.deadline_s - self.now_s
+            if t_rem <= 0:
+                return float("inf")
+            return st.pred_layers_remaining * st.cycles_per_layer / t_rem
         predicted = st.predicted_exit
         if predicted is None:
             predicted = float(self.c.stats.n_layers)   # conservative line 1
@@ -453,13 +479,24 @@ class BatchedDVFSArbiter:
         remaining = predicted - st.depth
         return remaining * st.cycles_per_layer / t_rem
 
-    def step(self, active_lanes: Sequence) -> ArbiterStepDecision:
+    def step(
+        self, active_lanes: Sequence, layers: Optional[Dict] = None
+    ) -> ArbiterStepDecision:
         """Arbitrate + account ONE fused step over ``active_lanes``.
 
         The scheduler steps one bucket at a time, so the stepped lanes share
         a bucket; the step duration is that bucket's layer time (max over the
         stepped lanes' cycle costs) and each lane's energy is charged at its
         own bucket's cost.
+
+        ``layers`` (optional): layers each lane actually executed this fused
+        step.  Classifier fused steps run exactly ONE encoder layer per lane
+        (the default); a decode fused step runs one TOKEN per lane, whose
+        realized cost is that token's early-exit depth — the engine passes
+        ``{lane: exit_depth}`` so energy and step duration charge only the
+        layers the off-ramp let run.  The (V, f) decision itself is made
+        from pre-step state (the refreshed per-lane predictions), exactly as
+        in the per-layer case.
         """
         lanes = list(active_lanes)
         assert lanes, "step() needs at least one active lane"
@@ -482,13 +519,15 @@ class BatchedDVFSArbiter:
         step_cycles = 0.0
         for i in lanes:
             st = self._lanes[i]
-            st.depth += 1
+            nl = 1 if layers is None else int(layers[i])
+            assert nl >= 1, f"lane {i}: a fused step runs at least one layer"
+            st.depth += nl
             # energy ~ P(V) * cycles / f: scale the controller's per-layer
             # energy by this lane's bucket cycle ratio
-            e_lane = e_layer * (st.cycles_per_layer / self.c.cycles_per_layer)
+            e_lane = nl * e_layer * (st.cycles_per_layer / self.c.cycles_per_layer)
             st.energy_j += e_lane
             self.compute_energy_j += e_lane
-            step_cycles = max(step_cycles, st.cycles_per_layer)
+            step_cycles = max(step_cycles, nl * st.cycles_per_layer)
             if st.slowest_op is None or op.freq_hz < st.slowest_op.freq_hz:
                 st.slowest_op = op
         dt = step_cycles / op.freq_hz

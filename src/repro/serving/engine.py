@@ -47,6 +47,13 @@ Architecture (this module + ``serving/scheduler.py`` + ``serving/dvfs.py``):
   their actual prompt end instead of the max active position — no pad-
   position burn), with EOS retirement + refill and a jitted fixed-shape
   masked prefill.  Cache shapes bucket by prompt + generation budget.
+  With ``exit_threshold=`` the fused step additionally runs the paper's
+  entropy off-ramp PER TOKEN (``Model.decode_step_ee``: layer -> LM-head ->
+  entropy -> masked freeze), realized exit depths feed a position-binned
+  online LUT, and with ``arbiter=`` each token is charged at its exit depth
+  while the lane's required frequency budgets the predicted remaining
+  layers of its remaining tokens — classifier and decoder traffic arbitrate
+  on one shared timeline.
 * ``MultiTaskRouter`` — the paper's multi-task scenario: one shared
   (eNVM-resident) embedding + per-task encoder/classifier weights; switching
   tasks swaps only task weights (paper §III-D).  All task servers can share
@@ -70,7 +77,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.early_exit import offramp_logits, predicted_remaining_layers
+from repro.core.early_exit import (
+    PositionBinnedExitCalibrator,
+    offramp_logits,
+    predicted_remaining_layers,
+    predicted_token_layers,
+)
 from repro.core.entropy import entropy_from_logits
 from repro.models.model import Model
 from repro.serving.scheduler import LaneScheduler, SchedulingPolicy, StepReport
@@ -89,6 +101,9 @@ class Request:
     result: Optional[np.ndarray] = None
     exit_layer: Optional[int] = None
     generated: List[int] = field(default_factory=list)
+    # decoder early exit: 1-based off-ramp exit depth of each generated token
+    # (full depth when per-token exit is disabled)
+    token_exit_layers: List[int] = field(default_factory=list)
     submit_time: float = 0.0            # WALL clock; caller-set only — the
                                         # scheduler stamps modeled clocks and
                                         # never mixes the two
@@ -130,6 +145,24 @@ _LIFECYCLE_KEYS = (
     "accepted", "rejected", "requoted", "shed",
     "preemptions", "restored_steps_saved", "accepted_slo_misses",
 )
+
+
+def _fold_miss(
+    acc: Dict[str, Any], req: Request, latency_s: float, target_s: float
+) -> None:
+    """THE per-request deadline-miss rule, shared by both engines: an
+    explicit SLO is submission-anchored (modeled queue wait counts), a
+    deadline-free request is judged against the admission-anchored
+    controller target.  Folds into the incremental accumulators."""
+    if req.deadline_s is not None:
+        latency_s += req.admit_s - req.arrival_s        # queue wait
+        limit = req.deadline_s
+    else:
+        limit = target_s
+    if latency_s > limit * (1 + 1e-9):
+        acc["deadline_misses"] += 1
+        if req.deadline_s is not None:
+            acc["accepted_slo_misses"] += 1
 
 
 # ===========================================================================
@@ -199,6 +232,13 @@ class ClassifierServer:
         self._arb_acc = {
             "op_switches": 0, "switch_time_s": 0.0,
             "switch_energy_j": 0.0, "total_energy_j": 0.0,
+        }
+        # incremental per-retiree accounting: telemetry() must not rescan
+        # ``done`` (whose payloads poll() is allowed to drop) — every sum /
+        # max / miss count folds in at lane_finish instead
+        self._acc = {
+            "retired": 0, "exit_sum": 0.0, "energy_j": 0.0, "lat_max": 0.0,
+            "deadline_misses": 0, "accepted_slo_misses": 0,
         }
 
         def embed_fn(params, tokens):
@@ -309,9 +349,11 @@ class ClassifierServer:
         """Advance one bucket by one fused step (see ``LaneScheduler.step``)."""
         return self.sched.step()
 
-    def poll(self) -> List[Request]:
-        """Requests retired since the last poll (completion order)."""
-        return self.sched.poll()
+    def poll(self, *, pin: bool = False) -> List[Request]:
+        """Requests retired since the last poll (completion order).  By
+        default the polled requests' payloads are DROPPED from ``done`` —
+        the caller now owns them; ``pin=True`` keeps them resident."""
+        return self.sched.poll(pin=pin)
 
     def run(self) -> Dict[str, float]:
         """Drain every bucket with continuation batching. Returns telemetry.
@@ -418,6 +460,21 @@ class ClassifierServer:
             # online calibration AFTER the report: a sentence's own exit must
             # not leak into its own prediction
             self.dvfs.observe_exit(req.entropy_trace[0], depth)
+        self._account_retiree(req, depth)
+
+    def _account_retiree(self, req: Request, depth: int) -> None:
+        """Fold one retirement into the incremental telemetry accumulators
+        (``telemetry()`` never rescans ``done`` — retired payloads may have
+        been dropped by ``poll()``)."""
+        acc = self._acc
+        acc["retired"] += 1
+        acc["exit_sum"] += depth
+        ctrl = self._ctrl
+        if ctrl is None:
+            return
+        acc["energy_j"] += req.energy_j or 0.0
+        acc["lat_max"] = max(acc["lat_max"], req.latency_s or 0.0)
+        _fold_miss(acc, req, req.latency_s or 0.0, ctrl.target_latency_s)
 
     def bucket_end(self, bucket: int) -> None:
         del self._bstate[bucket]
@@ -467,10 +524,8 @@ class ClassifierServer:
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, float]:
         st = self.sched.telemetry()
-        done = self.sched.done
-        avg_exit = (
-            float(np.mean([r.exit_layer for r in done.values()])) if done else 0.0
-        )
+        acc = self._acc
+        avg_exit = acc["exit_sum"] / acc["retired"] if acc["retired"] else 0.0
         out = {
             "sentences": st["sentences"],
             "layer_calls": st["lane_steps"],
@@ -489,33 +544,15 @@ class ClassifierServer:
             "queue_delay_steps_max": st["queue_delay_steps_max"],
             **{k: st[k] for k in _LIFECYCLE_KEYS},
         }
-        ctrl = self._ctrl
-        if ctrl is not None:
-            # every DVFS-accounting key exists even when NOTHING has retired
-            # yet (zero retirees, or zero retirees with explicit SLOs) — the
-            # empty-reduction guards are uniform, not ad hoc per key
-            reqs = list(done.values())
-            out["energy_j"] = float(sum(r.energy_j or 0.0 for r in reqs))
-            out["modeled_latency_s"] = (
-                float(max((r.latency_s or 0.0) for r in reqs)) if reqs else 0.0
-            )
-            # per-request accounting: each request is judged against ITS OWN
-            # deadline — submission-anchored, so modeled queue wait counts
-            # toward an explicit SLO; only deadline-free requests fall back
-            # to the (admission-anchored) controller-global target
-            def _missed(r: Request) -> bool:
-                lat = r.latency_s or 0.0
-                if r.deadline_s is not None:
-                    lat += r.admit_s - r.arrival_s      # queue wait
-                    limit = r.deadline_s
-                else:
-                    limit = ctrl.target_latency_s
-                return lat > limit * (1 + 1e-9)
-
-            out["deadline_misses"] = sum(1 for r in reqs if _missed(r))
-            out["accepted_slo_misses"] = sum(
-                1 for r in reqs if r.deadline_s is not None and _missed(r)
-            )
+        if self._ctrl is not None:
+            # incremental accumulators (folded in at lane_finish): every
+            # DVFS-accounting key exists even when NOTHING has retired yet,
+            # and none of them depends on ``done`` still holding payloads
+            # (poll() may have dropped them)
+            out["energy_j"] = float(acc["energy_j"])
+            out["modeled_latency_s"] = float(acc["lat_max"])
+            out["deadline_misses"] = acc["deadline_misses"]
+            out["accepted_slo_misses"] = acc["accepted_slo_misses"]
         if self.arbiter is not None:
             # deltas accumulated across THIS server's drains only: a shared
             # arbiter keeps drain-global counters, and copying those verbatim
@@ -533,7 +570,8 @@ class ClassifierServer:
 
 
 class DecoderServer:
-    """Continuation-batching LM decode with PER-LANE cache positions.
+    """Continuation-batching LM decode with PER-LANE cache positions and
+    (optionally) PER-TOKEN entropy early exit under shared-clock DVFS.
 
     The decode step is vmapped over lanes, so every lane attends its own
     ``[0, pos_lane]`` cache window and refilled lanes continue from their
@@ -542,6 +580,32 @@ class DecoderServer:
     prompt-plus-generation budget; one decode/prefill trace per bucket.
     Caches live in a bucket-keyed dict: the scheduler time-slices across
     buckets, so several caches can be live at once.
+
+    Per-token early exit (``exit_threshold=``): the fused decode step runs
+    ``Model.decode_step_ee`` per lane — after every layer the shared LM head
+    is evaluated and a token whose entropy drops below the threshold FREEZES
+    (hidden-state propagation keeps the remaining layers' KV rows defined),
+    so a lane that exits at layer k skips layers k+1..L for that token while
+    the traced shapes stay fixed: one compile per bucket, and the per-lane
+    exit-depth vector is just another masked output.  Exit depths feed a
+    ``PositionBinnedExitCalibrator`` (EdgeBERT's LUT keyed by decode
+    position instead of first-off-ramp entropy; cold bins predict the
+    conservative full depth), and that ONE prediction chain drives all three
+    consumers on the same timeline: the scheduler's EDF slack
+    (``predict_remaining_steps`` in fractional full-depth steps), the
+    arbiter's required frequency (``set_remaining_layers``: predicted layers
+    for ALL remaining tokens over remaining time-to-deadline), and the
+    admission feasibility quote (``_cycles_for`` full-depth step cycles x
+    predicted fractional steps at the max operating point).
+
+    Shared-clock DVFS (``arbiter=``): one (V, f) per fused step across every
+    lane the arbiter serves — classifier and decoder traffic arbitrate on
+    one hardware timeline when they share the arbiter.  Each decode token is
+    charged at its realized exit depth and at this bucket's PER-TOKEN layer
+    cost (the bucket layer cycles amortized per position: decode processes
+    one token against <= bucket cached positions).  Prefill is not charged —
+    the DVFS model budgets the decode phase, matching the paper's
+    per-sentence accounting which starts at layer 1 of compute.
     """
 
     def __init__(
@@ -554,20 +618,46 @@ class DecoderServer:
         buckets=None,
         policy: Optional[SchedulingPolicy] = None,
         preempt: bool = False,
+        arbiter: Optional["BatchedDVFSArbiter"] = None,
+        exit_threshold: Optional[float] = None,
+        exit_calibrator: Optional[Any] = None,
     ):
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.n_layers = model.cfg.n_layers
+        self.arbiter = arbiter
+        self.threshold = exit_threshold
+        if exit_threshold is not None and exit_calibrator is None:
+            exit_calibrator = PositionBinnedExitCalibrator(
+                self.n_layers, max_pos=max_seq
+            )
+        self.calib = exit_calibrator
+        self._sid = next(_SERVER_IDS)
+        ctrl = arbiter.c if arbiter is not None else None
         self.sched = LaneScheduler(
-            batch_lanes, self, buckets=buckets, policy=policy, preempt=preempt
+            batch_lanes, self, buckets=buckets, policy=policy, preempt=preempt,
+            step_time_fn=self._step_time_s,
+            default_deadline_s=ctrl.target_latency_s if ctrl is not None else None,
         )
         self._bucketed = buckets is not None
         # per-bucket engine state: {"cache", "pos": [lanes], "cur": [lanes, 1],
-        # "out"} — several buckets open at once under time slicing
+        # "reqs": per-lane Request refs, "out"} — several buckets open at once
         self._bstate: Dict[int, Dict[str, Any]] = {}
         self._traces = {"decode": {}, "prefill": {}}  # keyed by bucket
+        self._arb_acc = {
+            "op_switches": 0, "switch_time_s": 0.0,
+            "switch_energy_j": 0.0, "total_energy_j": 0.0,
+        }
+        # incremental per-retiree accounting (telemetry() must not rescan
+        # ``done`` — poll() may drop retired payloads)
+        self._acc = {
+            "retired": 0, "tokens": 0, "token_layers": 0.0,
+            "energy_j": 0.0, "lat_max": 0.0,
+            "deadline_misses": 0, "accepted_slo_misses": 0,
+        }
 
         def decode_fn(params, cache, tokens, pos, bucket):
             """One decode step with PER-LANE positions.
@@ -588,6 +678,34 @@ class DecoderServer:
                 one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes)
             )(cache, tokens[:, 0], pos)
             return lg, cache
+
+        def decode_ee_fn(params, cache, tokens, pos, threshold, bucket):
+            """Fused layer -> LM-head off-ramp -> entropy -> per-token exit.
+
+            Same per-lane vmap as ``decode_fn``; each lane additionally
+            returns its token's 1-based exit depth and first-off-ramp
+            entropy.  Masked freeze keeps the shapes fixed, so the EE step
+            traces exactly once per bucket too.
+            """
+            self._traces["decode"][bucket] = self._traces["decode"].get(bucket, 0) + 1
+            lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
+
+            def one_lane(cache_l, tok, p):
+                cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
+                lg, cache_b, xl, fe = model.decode_step_ee(
+                    params, cache_b, tok[None, None], p, threshold
+                )
+                return (
+                    lg[0],
+                    jax.tree_util.tree_map(lambda x: x[:, 0], cache_b),
+                    xl[0],
+                    fe[0],
+                )
+
+            lg, cache, xl, fe = jax.vmap(
+                one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes, 0, 0)
+            )(cache, tokens[:, 0], pos)
+            return lg, cache, xl, fe
 
         def prefill_fn(params, cache, tokens, lane, length):
             """Write one lane's prompt[:length-1] into the KV cache.
@@ -616,7 +734,82 @@ class DecoderServer:
             return jax.tree_util.tree_map(merge, scratch, cache)
 
         self._decode = jax.jit(decode_fn, static_argnums=(4,))
+        self._decode_ee = jax.jit(decode_ee_fn, static_argnums=(5,))
         self._prefill = jax.jit(prefill_fn)
+
+    # ---------------------------------------------------------- DVFS helpers
+    @property
+    def _ctrl(self) -> Optional["LatencyAwareDVFSController"]:
+        return self.arbiter.c if self.arbiter is not None else None
+
+    def _cycles_token_layer(self, bucket: int) -> Optional[float]:
+        """Modeled cycles for ONE decode token through ONE layer at this
+        bucket: the bucket's full-sequence layer cycles amortized per
+        position (matmul work is token-linear and attention-score work
+        token-quadratic, so both divide out to a per-token cost that scales
+        with the cache window)."""
+        ctrl = self._ctrl
+        if ctrl is None:
+            return None
+        return ctrl.cycles_for_seq_len(bucket) / bucket
+
+    def _cycles_for(self, bucket: int) -> Optional[float]:
+        """Cycles of one FULL-DEPTH fused decode step (one token through all
+        layers) — the unit ``predict_remaining_steps`` counts in, so the
+        admission quote (steps x this at the max op) prices decode SLOs at
+        the token-level predicted depth."""
+        cyc = self._cycles_token_layer(bucket)
+        return None if cyc is None else cyc * self.n_layers
+
+    def _step_time_s(self, bucket: int) -> float:
+        """NOMINAL duration of one full-depth fused decode step at the max
+        operating point (1.0 step units without a hw model)."""
+        ctrl = self._ctrl
+        if ctrl is None:
+            return 1.0
+        return self._cycles_for(bucket) / ctrl.max_op.freq_hz
+
+    def step_dt_s(self, bucket: int) -> Optional[float]:
+        """Actual modeled duration of the step just run (arbiter op period
+        at realized exit depths + any switching stall)."""
+        if self.arbiter is None:
+            return None
+        st = self._bstate.get(bucket)
+        return None if st is None else st.get("dt")
+
+    def clock_s(self) -> Optional[float]:
+        """Authoritative shared timeline: the arbiter's clock (classifier and
+        decoder servers sharing one arbiter arbitrate on ONE timeline)."""
+        return None if self.arbiter is None else self.arbiter.now_s
+
+    def _arb_key(self, bucket: int, lane: int):
+        return (self._sid, bucket, lane)
+
+    def _explicit_budget_remaining(self, req: Request) -> Optional[float]:
+        """Submission-anchored SLO minus time already spent in queue (the
+        DVFS layer budgets from admission; floored at a sliver so an
+        already-late request races at max V/f)."""
+        if req.deadline_s is None:
+            return None
+        spent_in_queue = self.sched.now_s - req.arrival_s
+        return max(req.deadline_s - spent_in_queue, 1e-12)
+
+    def _predicted_layers_remaining(self, req: Request) -> float:
+        """Predicted layers for ALL of this request's remaining tokens via
+        the position-binned LUT (conservative full depth per token when the
+        calibrator is cold or per-token exit is disabled)."""
+        start = len(req.generated)
+        end = req.max_new_tokens
+        if end <= start:                 # the retiring token is still due
+            end = start + 1
+        if self.calib is None:
+            return float(end - start) * self.n_layers
+        fast = getattr(self.calib, "predict_range", None)
+        if fast is not None:             # vectorized: this runs per lane per step
+            return fast(start, end)
+        return predicted_token_layers(
+            self.calib.predict, start, end, self.n_layers
+        )
 
     # ---------------------------------------------------------------- public
     def submit(self, req: Request):
@@ -633,23 +826,12 @@ class DecoderServer:
     def step(self) -> Optional[StepReport]:
         return self.sched.step()
 
-    def poll(self) -> List[Request]:
-        return self.sched.poll()
+    def poll(self, *, pin: bool = False) -> List[Request]:
+        return self.sched.poll(pin=pin)
 
     def run(self) -> Dict[str, float]:
-        st = self.sched.run()
-        return {
-            "decode_steps": st["dense_steps"],
-            "completed": len(self.sched.done),
-            "decode_traces": sum(self._traces["decode"].values()),
-            "prefill_traces": sum(self._traces["prefill"].values()),
-            "decode_traces_per_bucket": dict(self._traces["decode"]),
-            "buckets_used": st["buckets_used"],
-            "lane_occupancy": st["lane_occupancy"],
-            "queue_delay_steps_p50": st["queue_delay_steps_p50"],
-            "queue_delay_steps_p95": st["queue_delay_steps_p95"],
-            **{k: st[k] for k in _LIFECYCLE_KEYS},
-        }
+        self.sched.run()
+        return self.telemetry()
 
     # ------------------------------------------------------- scheduler hooks
     def bucket_key(self, req: Request) -> int:
@@ -664,6 +846,7 @@ class DecoderServer:
             "cache": self.model.init_cache(self.lanes, bucket),
             "pos": np.zeros(self.lanes, np.int32),
             "cur": np.zeros((self.lanes, 1), np.int32),
+            "reqs": [None] * self.lanes,
             "out": None,
         }
 
@@ -680,25 +863,96 @@ class DecoderServer:
         )
         st["pos"][lane] = len(req.tokens) - 1
         st["cur"][lane, 0] = req.tokens[-1]
+        st["reqs"][lane] = req
+        if self.arbiter is not None:
+            key = self._arb_key(bucket, lane)
+            self.arbiter.admit(
+                key,
+                deadline_s=self._explicit_budget_remaining(req),
+                cycles_per_layer=self._cycles_token_layer(bucket),
+            )
+            self.arbiter.set_remaining_layers(
+                key, self._predicted_layers_remaining(req)
+            )
 
     def lanes_step(self, bucket: int, active: np.ndarray):
         st = self._bstate[bucket]
-        logits, st["cache"] = self._decode(
-            self.params,
-            st["cache"],
-            jnp.asarray(st["cur"]),
-            jnp.asarray(st["pos"]),
-            bucket,
+        if self.arbiter is not None:
+            # refresh every active lane's predicted remaining layers BEFORE
+            # the shared-clock decision: the (V, f) pick budgets the
+            # position-binned token predictions against each lane's deadline
+            for i in range(self.lanes):
+                if active[i] and st["reqs"][i] is not None:
+                    self.arbiter.set_remaining_layers(
+                        self._arb_key(bucket, i),
+                        self._predicted_layers_remaining(st["reqs"][i]),
+                    )
+        if self.threshold is not None:
+            logits, st["cache"], xl, fe = self._decode_ee(
+                self.params,
+                st["cache"],
+                jnp.asarray(st["cur"]),
+                jnp.asarray(st["pos"]),
+                jnp.float32(self.threshold),
+                bucket,
+            )
+            exit_layers = np.asarray(xl)
+            first_ent = np.asarray(fe)
+        else:
+            logits, st["cache"] = self._decode(
+                self.params,
+                st["cache"],
+                jnp.asarray(st["cur"]),
+                jnp.asarray(st["pos"]),
+                bucket,
+            )
+            exit_layers = np.full(self.lanes, self.n_layers, np.int32)
+            first_ent = None
+        if self.arbiter is not None:
+            # one (V, f) across the stepped lanes, each token charged at its
+            # REALIZED exit depth (the decision was made from pre-step
+            # predictions above); deltas accrue per server like the
+            # classifier, and the actual dt feeds the scheduler clock
+            before = self.arbiter.telemetry()
+            decision = self.arbiter.step(
+                [self._arb_key(bucket, i) for i in range(self.lanes) if active[i]],
+                layers={
+                    self._arb_key(bucket, i): int(exit_layers[i])
+                    for i in range(self.lanes)
+                    if active[i]
+                },
+            )
+            after = self.arbiter.telemetry()
+            for k in self._arb_acc:
+                self._arb_acc[k] += after[k] - before[k]
+            st["dt"] = max(self.arbiter.now_s - self.sched.now_s, 0.0)
+        st["out"] = (
+            np.asarray(jnp.argmax(logits[:, -1], axis=-1)),
+            exit_layers,
+            first_ent,
+            # EE path: keep final-token logits ON DEVICE — only a retiring
+            # lane's row is materialized (in lane_finish), so the hot loop
+            # never pays a [lanes, vocab] host transfer; plain decode keeps
+            # the old argmax-only transfer
+            logits[:, -1] if self.threshold is not None else None,
         )
-        st["out"] = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         return st["out"]
 
     def lane_advance(
         self, bucket: int, lane: int, req: Request, out, depth: int
     ) -> bool:
         st = self._bstate[bucket]
-        tok = int(out[lane])
+        toks, exit_layers, first_ent, _ = out
+        tok = int(toks[lane])
         req.generated.append(tok)
+        xl = int(exit_layers[lane])
+        req.token_exit_layers.append(xl)
+        if first_ent is not None:
+            req.entropy_trace.append(float(first_ent[lane]))
+        if self.calib is not None:
+            # observe AFTER the step: the token's own exit fed neither this
+            # step's arbitration nor its own prediction
+            self.calib.observe(len(req.generated) - 1, xl)
         st["pos"][lane] += 1                 # this lane's OWN position only
         st["cur"][lane, 0] = tok
         return (
@@ -708,7 +962,29 @@ class DecoderServer:
         )
 
     def lane_finish(self, bucket: int, lane: int, req: Request, depth: int) -> None:
+        st = self._bstate[bucket]
+        _, _, _, logits = st["out"]
+        if logits is not None:               # EE path: one lane row, host-side
+            req.result = np.asarray(logits[lane])
         req.finish_time = time.time()
+        st["reqs"][lane] = None
+        acc = self._acc
+        acc["retired"] += 1
+        acc["tokens"] += len(req.token_exit_layers)
+        acc["token_layers"] += float(sum(req.token_exit_layers))
+        if self.arbiter is not None:
+            # the lane's total arbiter depth is the summed realized exit
+            # depth of every token it generated (across preemption stints)
+            rep = self.arbiter.retire(
+                self._arb_key(bucket, lane), int(sum(req.token_exit_layers))
+            )
+            req.energy_j = rep.energy_j
+            req.latency_s = rep.latency_s
+            req.op_vdd = rep.slowest_op.vdd
+            req.op_freq_hz = rep.slowest_op.freq_hz
+            acc["energy_j"] += rep.energy_j
+            acc["lat_max"] = max(acc["lat_max"], rep.latency_s)
+            _fold_miss(acc, req, rep.latency_s, self.arbiter.c.target_latency_s)
 
     def bucket_end(self, bucket: int) -> None:
         del self._bstate[bucket]
@@ -716,15 +992,22 @@ class DecoderServer:
     def lane_checkpoint(self, bucket: int, lane: int, req: Request):
         """Snapshot the lane's KV cache row, cache position, and pending
         token so a preempted decode resumes exactly where it stopped (the
-        generated tokens already live on the request)."""
+        generated tokens and their exit depths already live on the request);
+        with an arbiter, the lane clock is frozen alongside."""
         st = self._bstate[bucket]
-        return {
+        payload = {
             "cache": jax.tree_util.tree_map(
                 lambda x: np.asarray(x[:, lane]), st["cache"]
             ),
             "pos": int(st["pos"][lane]),
             "cur": int(st["cur"][lane, 0]),
         }
+        st["reqs"][lane] = None
+        if self.arbiter is not None:
+            payload["clock"] = self.arbiter.checkpoint_lane(
+                self._arb_key(bucket, lane)
+            )
+        return payload
 
     def lane_restore(self, bucket: int, lane: int, req: Request, payload) -> None:
         """Write the checkpointed cache row back into a (possibly different)
@@ -740,12 +1023,101 @@ class DecoderServer:
         )
         st["pos"][lane] = payload["pos"]
         st["cur"][lane, 0] = payload["cur"]
+        st["reqs"][lane] = req
+        if self.arbiter is not None:
+            self.arbiter.restore_lane(
+                self._arb_key(bucket, lane), payload["clock"]
+            )
 
     def predict_remaining_steps(
         self, bucket: int, req: Request, depth: int
     ) -> float:
-        """EDF slack input: tokens left in this request's generation budget."""
-        return float(max(req.max_new_tokens - len(req.generated), 1))
+        """EDF slack input in FRACTIONAL full-depth fused steps: the
+        position-binned LUT's predicted layers for the remaining tokens over
+        the full depth (plain remaining-token count when per-token exit is
+        off — every token then costs one full-depth step)."""
+        if self.calib is None:
+            return float(max(req.max_new_tokens - len(req.generated), 1))
+        return max(
+            self._predicted_layers_remaining(req) / self.n_layers,
+            1.0 / self.n_layers,             # the step that retires it
+        )
+
+    # ------------------------------------------------------------- telemetry
+    def telemetry(self) -> Dict[str, float]:
+        st = self.sched.telemetry()
+        acc = self._acc
+        avg_exit = (
+            acc["token_layers"] / acc["tokens"] if acc["tokens"] else 0.0
+        )
+        out = {
+            "decode_steps": st["dense_steps"],
+            "completed": st["sentences"],
+            "sentences": st["sentences"],
+            "tokens": acc["tokens"],
+            "token_layer_calls": acc["token_layers"],
+            "avg_token_exit_layer": avg_exit,
+            "decode_runtime_savings": (
+                1.0 - avg_exit / self.n_layers if acc["tokens"] else 0.0
+            ),
+            "decode_traces": sum(self._traces["decode"].values()),
+            "prefill_traces": sum(self._traces["prefill"].values()),
+            "decode_traces_per_bucket": dict(self._traces["decode"]),
+            "step_traces": sum(self._traces["decode"].values()),
+            "step_traces_per_bucket": dict(self._traces["decode"]),
+            "buckets_used": st["buckets_used"],
+            "bucket_steps": st["bucket_steps"],
+            "lane_occupancy": st["lane_occupancy"],
+            "queue_delay_steps_p50": st["queue_delay_steps_p50"],
+            "queue_delay_steps_p95": st["queue_delay_steps_p95"],
+            "queue_delay_steps_max": st["queue_delay_steps_max"],
+            **{k: st[k] for k in _LIFECYCLE_KEYS},
+        }
+        if self.arbiter is not None:
+            out["energy_j"] = float(acc["energy_j"])
+            out["modeled_latency_s"] = float(acc["lat_max"])
+            out["deadline_misses"] = acc["deadline_misses"]
+            out["accepted_slo_misses"] = acc["accepted_slo_misses"]
+            out["op_switches"] = self._arb_acc["op_switches"]
+            out["switch_energy_j"] = self._arb_acc["switch_energy_j"]
+            out["switch_time_s"] = self._arb_acc["switch_time_s"]
+            out["arb_energy_j"] = self._arb_acc["total_energy_j"]
+        return out
+
+
+def probe_exit_threshold(
+    model: Model,
+    params: Any,
+    prompts,
+    *,
+    batch_lanes: int = 2,
+    max_seq: int = 32,
+    eos_id: int = -1,
+    buckets=(16,),
+    max_new_tokens: int = 5,
+    quantile: float = 0.5,
+) -> float:
+    """Pick a decode off-ramp entropy threshold from observed traffic.
+
+    Drains ``prompts`` through a throwaway ``DecoderServer`` whose threshold
+    sits below any entropy (no token exits, but first-off-ramp telemetry is
+    live) and cuts at the ``quantile`` of the observed readings, so the
+    exit-enabled deployment genuinely spreads exits across layers instead
+    of all-or-nothing — the decode analogue of the classifier demos'
+    dense-profiling-pass threshold pick.  The ONE probe recipe shared by
+    the benchmark, the example, and the parity tests."""
+    probe = DecoderServer(
+        model, params, batch_lanes=batch_lanes, max_seq=max_seq,
+        eos_id=eos_id, buckets=buckets, exit_threshold=-1.0,
+    )
+    for i, p in enumerate(prompts):
+        probe.submit(Request(
+            uid=i, tokens=np.asarray(p, np.int32), max_new_tokens=max_new_tokens
+        ))
+    probe.run()
+    ents = [e for r in probe.done.values() for e in r.entropy_trace]
+    assert ents, "probe produced no off-ramp readings"
+    return float(np.quantile(ents, quantile))
 
 
 # ===========================================================================

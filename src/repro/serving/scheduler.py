@@ -12,6 +12,13 @@ wrapper (``while work remains: step()``) for callers that still want the
 drain-the-world API.  ``telemetry()`` reports lifetime counters, including
 per-request queue delay (``arrival_step -> first_compute_step``) percentiles.
 
+Retention: ``poll()`` RELEASES the polled requests' payloads from ``done``
+(the caller owns them now; ``pin=True`` keeps them resident), and every
+retirement-derived telemetry figure — queue-delay percentiles (bounded
+reservoir), SLO-miss counters — folds in incrementally at retirement, so a
+long-running submit/step/poll server stays bounded-memory while the
+batch-drain idiom (``run()`` then index ``done``) is unchanged.
+
 Engine hooks
 ------------
 ``ClassifierServer`` and ``DecoderServer`` used to each own a private copy of
@@ -287,6 +294,38 @@ class FIFOPolicy:
         return min(views, key=lambda v: (v.earliest_seq, v.bucket)).bucket
 
 
+class _DelayReservoir:
+    """Bounded-memory percentile sample for the queue-delay telemetry.
+
+    Classic reservoir sampling (deterministic seed, so telemetry is
+    reproducible): the first ``cap`` observations are kept exactly — small
+    drains report EXACT percentiles, unchanged from the rescan-the-retirees
+    implementation — and a long-running server degrades gracefully to a
+    uniform sample instead of growing without bound.  The max is tracked
+    exactly (it is O(1) state)."""
+
+    def __init__(self, cap: int = 4096, seed: int = 0):
+        assert cap >= 1
+        self.cap = cap
+        self.n = 0
+        self.buf: List[float] = []
+        self.max = 0.0
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        self.max = max(self.max, float(x))
+        if len(self.buf) < self.cap:
+            self.buf.append(float(x))
+        else:
+            j = int(self._rng.integers(0, self.n))
+            if j < self.cap:
+                self.buf[j] = float(x)
+
+    def percentile(self, q: float) -> float:
+        return float(np.percentile(self.buf, q)) if self.buf else 0.0
+
+
 def _pop_at(q: deque, idx: int) -> "Request":
     """Remove and return the element at ``idx`` from a deque in O(idx):
     rotate it to the front, pop, rotate back (popping at the front is what
@@ -396,6 +435,11 @@ class LaneScheduler:
         self._preemptions = 0
         self._restored_steps_saved = 0  # checkpointed layers NOT re-run
         self._shed = 0                  # best-effort requests dropped
+        # incremental retirement accounting: telemetry() must not rescan
+        # ``done`` (poll() drops retired payloads unless pinned, so a
+        # long-running submit/step/poll server stays bounded-memory)
+        self._delays = _DelayReservoir()
+        self._slo_misses = 0            # explicit SLOs missed (modeled clock)
         # admission-layer verdict counters (``serving/admission.py`` updates
         # these so one telemetry() call covers the whole request lifecycle)
         self.admission_stats: Dict[str, int] = {
@@ -731,6 +775,18 @@ class LaneScheduler:
                 self.done[req.uid] = req
                 self._completed.append(req)
                 self._sentences += 1
+                # fold retirement telemetry in NOW — once poll() hands the
+                # request to the caller its payload may be gone
+                if (
+                    req.first_compute_step is not None
+                    and req.arrival_step is not None
+                ):
+                    self._delays.add(req.first_compute_step - req.arrival_step)
+                if (
+                    req.deadline_s is not None
+                    and req.retire_s - req.arrival_s > req.deadline_s * (1 + 1e-9)
+                ):
+                    self._slo_misses += 1
                 report.retired.append(req)
                 run.lane_req[i] = None
                 run.active[i] = False
@@ -740,10 +796,22 @@ class LaneScheduler:
             del self._open[bucket]
         return report
 
-    def poll(self) -> List["Request"]:
-        """Requests retired since the last ``poll()`` (completion order)."""
+    def poll(self, *, pin: bool = False) -> List["Request"]:
+        """Requests retired since the last ``poll()`` (completion order).
+
+        By default the polled requests are DROPPED from ``done`` — the
+        caller now owns the payloads (tokens, logits, entropy traces), and a
+        long-running submit/step/poll server keeps ``done`` at
+        O(retired-but-unpolled) instead of growing forever (telemetry is
+        folded incrementally at retirement, so nothing is lost).
+        ``pin=True`` keeps the polled requests resident in ``done`` — the
+        batch-drain idiom (``run()`` then index ``done`` by uid) is
+        unaffected either way, since it never polls."""
         out = list(self._completed)
         self._completed.clear()
+        if not pin:
+            for r in out:
+                self.done.pop(r.uid, None)
         return out
 
     def run(self) -> Dict[str, float]:
@@ -763,14 +831,11 @@ class LaneScheduler:
 
     # ------------------------------------------------------------ telemetry
     def telemetry(self) -> Dict[str, float]:
-        # guard uniformly against zero retirees (and against requests that
-        # somehow lack lifecycle stamps): every percentile / max / miss key
-        # must exist, as 0, even when nothing has retired yet
-        delays = [
-            r.first_compute_step - r.arrival_step
-            for r in self.done.values()
-            if r.first_compute_step is not None and r.arrival_step is not None
-        ]
+        # all retirement-derived keys come from INCREMENTAL accumulators
+        # (delay reservoir, miss counters) folded in at retirement: they are
+        # exact for small drains, bounded-memory for long-running servers,
+        # and independent of whether poll() already dropped the payloads;
+        # every key exists, as 0, even when nothing has retired yet
         return {
             "sentences": self._sentences,
             "dense_steps": self._dense_steps,
@@ -784,9 +849,9 @@ class LaneScheduler:
                 else 0.0
             ),
             "modeled_now_s": self.now_s,
-            "queue_delay_steps_p50": float(np.percentile(delays, 50)) if delays else 0.0,
-            "queue_delay_steps_p95": float(np.percentile(delays, 95)) if delays else 0.0,
-            "queue_delay_steps_max": float(max(delays)) if delays else 0.0,
+            "queue_delay_steps_p50": self._delays.percentile(50),
+            "queue_delay_steps_p95": self._delays.percentile(95),
+            "queue_delay_steps_max": self._delays.max if self._delays.n else 0.0,
             # ---- admission / preemption lifecycle counters ----
             "accepted": self.admission_stats["accepted"],
             "rejected": self.admission_stats["rejected"],
@@ -798,10 +863,5 @@ class LaneScheduler:
             # retirement), so the contract metric exists for every engine and
             # DVFS configuration; servers with a DVFS controller overwrite it
             # with the equivalent arbiter-latency accounting
-            "accepted_slo_misses": sum(
-                1
-                for r in self.done.values()
-                if r.deadline_s is not None
-                and r.retire_s - r.arrival_s > r.deadline_s * (1 + 1e-9)
-            ),
+            "accepted_slo_misses": self._slo_misses,
         }

@@ -151,6 +151,82 @@ class TestOnlineCalibratorDrift:
         assert before == 12.0 and cal.predict(0.6) == 8.0
 
 
+class TestPositionBinnedCalibrator:
+    """Decode-side LUT variant: same running-quantile machinery, keyed by
+    token POSITION bin instead of first-off-ramp entropy — mirrors the
+    sentence-bin drift/leak/cold-start suite above."""
+
+    def test_per_position_quantile_converges_under_drift(self):
+        cal = ee.PositionBinnedExitCalibrator(
+            12, max_pos=32, n_bins=4, quantile=0.9, window=64
+        )
+        rng = np.random.default_rng(0)
+        # regime A: tokens at positions ~10 (bin 1) exit shallow (2..4)
+        for _ in range(200):
+            cal.observe(int(rng.integers(8, 15)), int(rng.integers(2, 5)))
+        assert cal.predict(10) <= 4.0
+        # regime B (drift): the SAME positions now exit deep (9..11); the
+        # bounded window must forget regime A completely
+        exits_b = []
+        for _ in range(200):
+            x = int(rng.integers(9, 12))
+            cal.observe(int(rng.integers(8, 15)), x)
+            exits_b.append(x)
+        pred_b = cal.predict(10)
+        assert pred_b >= 9.0
+        assert pred_b == pytest.approx(float(np.quantile(exits_b[-64:], 0.9)))
+        # untouched position bins keep the conservative cold start
+        assert cal.predict(30) == 12.0
+
+    def test_drift_does_not_leak_across_position_bins(self):
+        cal = ee.PositionBinnedExitCalibrator(
+            12, max_pos=32, n_bins=4, quantile=1.0, window=32
+        )
+        for _ in range(40):
+            cal.observe(2, 3)            # bin 0: early tokens exit shallow
+        before = cal.predict(20)         # bin 2: cold
+        for _ in range(40):
+            cal.observe(20, 8)           # drift lands in bin 2 only
+        assert cal.predict(2) == 3.0     # bin 0 unchanged
+        assert before == 12.0 and cal.predict(20) == 8.0
+
+    def test_cold_start_quotes_full_depth(self):
+        """A cold calibrator must quote the conservative full depth at EVERY
+        position, and ``predicted_token_layers`` must therefore price a cold
+        request at tokens x n_layers — the admission-side guarantee."""
+        cal = ee.PositionBinnedExitCalibrator(12, max_pos=32)
+        for pos in (0, 7, 31):
+            assert cal.predict(pos) == 12.0
+        assert ee.predicted_token_layers(cal.predict, 0, 5, 12) == 60.0
+
+    def test_predicted_token_layers_clamps_and_sums(self):
+        # predictions below 1 / above n_layers are clamped per token
+        assert ee.predicted_token_layers(lambda t: 0.0, 0, 3, 12) == 3.0
+        assert ee.predicted_token_layers(lambda t: 99.0, 0, 3, 12) == 36.0
+        # empty ranges cost nothing; sums follow the per-position LUT
+        assert ee.predicted_token_layers(lambda t: 4.0, 5, 5, 12) == 0.0
+        assert ee.predicted_token_layers(
+            lambda t: 2.0 if t < 2 else 6.0, 0, 4, 12
+        ) == pytest.approx(2 * 2.0 + 2 * 6.0)
+
+    def test_monotone_escalation_of_windowed_max(self):
+        """quantile=1.0 (the safe default): the per-bin prediction is the
+        windowed MAX of realized depths — it escalates monotonically as
+        deeper exits are observed and never dips below a depth still in the
+        window (the decode-side misprediction guard)."""
+        cal = ee.PositionBinnedExitCalibrator(
+            12, max_pos=16, n_bins=2, quantile=1.0, window=64
+        )
+        prev = 0.0
+        for depth in (2, 3, 3, 5, 8, 8, 11):
+            cal.observe(1, depth)
+            pred = cal.predict(1)
+            assert pred >= depth          # never below a windowed observation
+            assert pred >= prev           # monotone escalation
+            prev = pred
+        assert cal.predict(1) == 11.0
+
+
 class TestEscalationMonotone:
     """``predicted_remaining_layers`` past a mispredicted exit: once a
     sentence overruns its prediction, the remaining-work estimate escalates

@@ -400,3 +400,113 @@ class TestPerLaneKVDecode:
         # 4 requests x 3 tokens over 2 lanes = 12 lane-steps in 6 fused steps
         assert stats["decode_steps"] == 6
         assert stats["lane_occupancy"] == 1.0
+
+
+class _NullEngine:
+    """Minimal host-only engine: every request retires after ``steps_per_req``
+    fused steps — lets the scheduler churn 10k requests in milliseconds."""
+
+    def __init__(self, steps_per_req=1):
+        self.steps_per_req = steps_per_req
+
+    def bucket_key(self, req):
+        return len(req.tokens)
+
+    def bucket_begin(self, bucket):
+        pass
+
+    def lane_load(self, bucket, lane, req):
+        pass
+
+    def lanes_step(self, bucket, active):
+        return None
+
+    def lane_advance(self, bucket, lane, req, out, depth):
+        return depth >= self.steps_per_req
+
+    def lane_finish(self, bucket, lane, req, depth):
+        pass
+
+    def bucket_end(self, bucket):
+        pass
+
+
+class TestRetiredRequestRetention:
+    """ROADMAP retention item: a long-running submit/step/poll server must
+    not accumulate every retired Request forever — poll() releases payloads
+    (unless pinned) and telemetry folds incrementally."""
+
+    def test_poll_drops_payloads_unless_pinned(self):
+        sched = LaneScheduler(2, _NullEngine(), buckets=(8,))
+        for i in range(4):
+            sched.submit(Request(uid=i, tokens=np.zeros(4, np.int32)))
+        while sched.step() is not None:
+            pass
+        assert len(sched.done) == 4          # nothing polled yet: all resident
+        got = sched.poll(pin=True)
+        assert len(got) == 4 and len(sched.done) == 4   # pinned: kept
+        for i in range(4, 8):
+            sched.submit(Request(uid=i, tokens=np.zeros(4, np.int32)))
+        while sched.step() is not None:
+            pass
+        got = sched.poll()                   # default: payloads released
+        assert sorted(r.uid for r in got) == [4, 5, 6, 7]
+        assert sorted(sched.done) == [0, 1, 2, 3]
+
+    def test_ten_thousand_request_drain_stays_bounded(self):
+        """The acceptance drain: 10k requests through submit/step/poll keep
+        ``done`` at O(outstanding) and the queue-delay reservoir at O(cap) —
+        while the lifetime telemetry still counts every retiree."""
+        lanes, wave = 4, 100
+        sched = LaneScheduler(lanes, _NullEngine(), buckets=(8,))
+        total, max_done = 10_000, 0
+        uid = 0
+        for _ in range(total // wave):
+            for _ in range(wave):
+                sched.submit(Request(uid=uid, tokens=np.zeros(4, np.int32)))
+                uid += 1
+            while sched.step() is not None:
+                sched.poll()
+                max_done = max(max_done, len(sched.done))
+            sched.poll()
+        # retired-but-unpolled work is bounded by one wave, nowhere near 10k
+        assert max_done <= wave
+        assert len(sched.done) == 0
+        st = sched.telemetry()
+        assert st["sentences"] == total      # accounting survived every drop
+        assert len(sched._delays.buf) <= sched._delays.cap
+        assert st["queue_delay_steps_p95"] >= st["queue_delay_steps_p50"] >= 0.0
+
+    def test_incremental_delay_stats_match_rescan_semantics(self):
+        """Below the reservoir cap the incremental percentiles are EXACT —
+        identical to rescanning the retirees like the old telemetry did."""
+        sched = LaneScheduler(2, _NullEngine(), buckets=(8,))
+        for i in range(12):
+            sched.submit(Request(uid=i, tokens=np.zeros(4, np.int32)))
+        delays = []
+        while sched.step() is not None:
+            for r in sched.poll():
+                delays.append(r.first_compute_step - r.arrival_step)
+        for r in sched.poll():
+            delays.append(r.first_compute_step - r.arrival_step)
+        st = sched.telemetry()
+        assert st["queue_delay_steps_p50"] == float(np.percentile(delays, 50))
+        assert st["queue_delay_steps_p95"] == float(np.percentile(delays, 95))
+        assert st["queue_delay_steps_max"] == float(max(delays))
+
+    def test_slo_miss_counter_survives_poll_drop(self):
+        """accepted_slo_misses is folded at retirement: dropping payloads
+        via poll() must not erase recorded misses."""
+        sched = LaneScheduler(1, _NullEngine(steps_per_req=3), buckets=(8,))
+        sched.submit(Request(
+            uid=0, tokens=np.zeros(4, np.int32), deadline_s=0.5
+        ))                                   # 3 steps at 1.0s/step: missed
+        sched.submit(Request(
+            uid=1, tokens=np.zeros(4, np.int32), deadline_s=100.0
+        ))                                   # met
+        while sched.step() is not None:
+            pass
+        assert sched.telemetry()["accepted_slo_misses"] == 1
+        sched.poll()
+        assert len(sched.done) == 0
+        assert sched.telemetry()["accepted_slo_misses"] == 1

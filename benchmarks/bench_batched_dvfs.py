@@ -349,6 +349,109 @@ def _decode_early_exit(model, params, cfg, data, stats, ctrl_factory) -> dict:
     return out
 
 
+def _pallas_serving_bench(model, params, cfg, data, buckets, ctrl_factory) -> dict:
+    """Ref vs Pallas fused serving step: parity gates + wall-clock timing.
+
+    The SAME mixed queue (half best-effort, half explicit contracts admitted
+    at their own feasibility quote) drains through two otherwise-identical
+    servers, ``use_pallas=False`` and ``True``.  The first drain compiles and
+    gates parity (logits fp-tolerance, exit depths exact, zero accepted-SLO
+    misses); a second identical drain on the now-warm server times each
+    fused ``step()`` with ``time.perf_counter`` for p50/p95 wall clock and
+    must add ZERO new traces.  On CPU the kernels run in interpret mode —
+    Python-rate, so the speedup column is diagnostic there and only becomes
+    a gate on a real TPU backend.
+    """
+    import time as _time
+
+    from repro.serving.admission import AdmissionController
+
+    n = 3 * LANES
+    reqs = _mixed_queue(data, buckets, n, seed=23)
+    out = {}
+    for label, use_pallas in (("ref", False), ("pallas", True)):
+        arb = BatchedDVFSArbiter(ctrl_factory())
+        srv = ClassifierServer(
+            model, params, batch_lanes=LANES, arbiter=arb, buckets=buckets,
+            use_pallas=use_pallas,
+        )
+        ac = AdmissionController(srv)
+        for i, r in enumerate(reqs):
+            if i % 2:
+                q = ac.quote(Request(uid=r.uid, tokens=r.tokens, deadline_s=1e9))
+                d = ac.submit(Request(
+                    uid=r.uid, tokens=r.tokens, deadline_s=q.min_deadline_s
+                ))
+                assert d.admitted, r.uid
+            else:
+                srv.submit(Request(uid=r.uid, tokens=r.tokens))
+        srv.run()                              # compile + parity drain
+        traces_cold = srv.telemetry()["step_traces"]
+        for r in reqs:                         # identical warm traffic, timed
+            srv.submit(Request(uid=10_000 + r.uid, tokens=r.tokens))
+        wall = []
+        while True:
+            t0 = _time.perf_counter()
+            if srv.step() is None:
+                break
+            wall.append(_time.perf_counter() - t0)
+        st = srv.telemetry()
+        st["warm_added_traces"] = st["step_traces"] - traces_cold
+        st["wall_p50_ms"] = float(np.percentile(wall, 50) * 1e3)
+        st["wall_p95_ms"] = float(np.percentile(wall, 95) * 1e3)
+        st["energy_per_req_j"] = st["arb_energy_j"] / (2 * n)
+        st["slo_miss_rate"] = (
+            st["accepted_slo_misses"] / st["accepted"] if st["accepted"] else 0.0
+        )
+        st["exits"] = [srv.done[r.uid].exit_layer for r in reqs]
+        st["logits"] = np.stack(
+            [np.asarray(srv.done[r.uid].result) for r in reqs]
+        )
+        out[label] = st
+    ref, pal = out["ref"], out["pallas"]
+    out["max_abs_logit_diff"] = float(
+        np.max(np.abs(ref["logits"] - pal["logits"]))
+    )
+    out["logit_parity"] = bool(out["max_abs_logit_diff"] <= 2e-4)
+    out["exit_parity"] = bool(ref["exits"] == pal["exits"])
+    out["speedup"] = ref["wall_p50_ms"] / pal["wall_p50_ms"]
+    return out
+
+
+def _write_bench_serving(path: str, pal: dict, buckets, target_mult: float) -> None:
+    """Versioned machine-readable artifact for CI trend tracking."""
+    import json
+
+    def scenario(st):
+        return {
+            "step_wall_p50_ms": st["wall_p50_ms"],
+            "step_wall_p95_ms": st["wall_p95_ms"],
+            "energy_per_request_j": st["energy_per_req_j"],
+            "accepted": st["accepted"],
+            "accepted_slo_misses": st["accepted_slo_misses"],
+            "accepted_slo_miss_rate": st["slo_miss_rate"],
+            "step_traces": st["step_traces"],
+            "warm_added_traces": st["warm_added_traces"],
+        }
+
+    payload = {
+        "version": 1,
+        "backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "target_mult": target_mult,
+        "bucket_count": len(buckets),
+        "ref": scenario(pal["ref"]),
+        "pallas": scenario(pal["pallas"]),
+        "speedup_ref_over_pallas_p50": pal["speedup"],
+        "max_abs_logit_diff": pal["max_abs_logit_diff"],
+        "logit_parity": pal["logit_parity"],
+        "exit_depth_parity": pal["exit_parity"],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--smoke", action="store_true", help="untrained weights, CI-fast")
@@ -505,6 +608,27 @@ def main() -> None:
         f"cls_step_traces={de['cls_step_traces']}",
     )
 
+    # ---- ref vs Pallas fused serving step: parity + wall clock ---------------
+    pal = _pallas_serving_bench(
+        model, params, cfg, data, buckets,
+        lambda: LatencyAwareDVFSController(stats, target, predictor=predictor),
+    )
+    pr, pp = pal["ref"], pal["pallas"]
+    emit(
+        "pallas_serving_step", 0.0,
+        f"ref_p50_ms={pr['wall_p50_ms']:.2f};ref_p95_ms={pr['wall_p95_ms']:.2f};"
+        f"pallas_p50_ms={pp['wall_p50_ms']:.2f};pallas_p95_ms={pp['wall_p95_ms']:.2f};"
+        f"speedup={pal['speedup']:.2f}x;parity={int(pal['logit_parity'])};"
+        f"exit_parity={int(pal['exit_parity'])};"
+        f"max_abs_logit_diff={pal['max_abs_logit_diff']:.1e};"
+        f"pallas_slo_misses={pp['accepted_slo_misses']};"
+        f"energy_per_req_j={pp['energy_per_req_j']:.3e};"
+        f"step_traces={pp['step_traces']};bucket_count={len(buckets)}",
+    )
+    bench_json = os.path.join(_ROOT, "BENCH_serving.json")
+    _write_bench_serving(bench_json, pal, buckets, args.target_mult)
+    print(f"wrote {os.path.normpath(bench_json)}", flush=True)
+
     ok = True
     if e_shared >= e_max_vf:
         print(
@@ -589,6 +713,37 @@ def main() -> None:
             f"({de['step_traces']}x for 1 cache bucket)"
         )
         ok = False
+    if not pal["logit_parity"] or not pal["exit_parity"]:
+        print(
+            f"FAIL: Pallas serving step diverged from ref (max logit diff "
+            f"{pal['max_abs_logit_diff']:.2e}, exit parity "
+            f"{pal['exit_parity']}) — the dispatch layer must be "
+            "numerically interchangeable"
+        )
+        ok = False
+    for lbl, s in (("ref", pr), ("pallas", pp)):
+        if s["accepted_slo_misses"]:
+            print(
+                f"FAIL: {lbl} serving drain missed {s['accepted_slo_misses']} "
+                "accepted SLOs (quotes must stay conservative under Pallas)"
+            )
+            ok = False
+        if s["warm_added_traces"]:
+            print(
+                f"FAIL: {lbl} warm timed drain added {s['warm_added_traces']} "
+                "step traces (the timed pass must reuse every compile)"
+            )
+            ok = False
+    if pp["step_traces"] != pr["step_traces"]:
+        print(
+            f"FAIL: Pallas routing changed the compile count "
+            f"({pp['step_traces']} vs ref {pr['step_traces']}) — the flag is "
+            "static and must add zero traces"
+        )
+        ok = False
+    # NOTE: no speedup gate — on CPU the kernels run in interpret mode
+    # (Python-rate); ref-vs-pallas wall clock is a trend metric there and
+    # only meaningful as a gate on a TPU backend.
     for name, s in (("shared_clock", st), ("online", st_on)):
         if s["deadline_misses"]:
             print(

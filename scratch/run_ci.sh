@@ -28,7 +28,13 @@
 #     sheds instead of letting contracts starve best-effort forever);
 #   * decode early exit: under the mixed classifier+decoder storm,
 #     `exit_beats_full` must be 1 (per-token exit strictly cheaper than
-#     full-depth decode) at 0 accepted-SLO misses on BOTH decode runs.
+#     full-depth decode) at 0 accepted-SLO misses on BOTH decode runs;
+#   * pallas serving step: `parity=1` and `exit_parity=1` (use_pallas=True
+#     numerically interchangeable with the ref path over a full drain) at
+#     `pallas_slo_misses=0`, and the run must write a well-formed versioned
+#     BENCH_serving.json (step wall-clock p50/p95, energy/request,
+#     accepted-SLO miss rate, trace counts, ref-vs-pallas speedup).  No
+#     speedup gate: on CPU the kernels run in interpret mode.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -154,6 +160,55 @@ else
         echo "gate ok: 0 accepted-SLO misses on both decode runs"
     fi
 fi
+echo "== grep-gate: pallas_serving_step (parity, 0 accepted misses) + BENCH_serving.json =="
+psl=$(grep '^pallas_serving_step,' "$batched_log" | head -1)
+if [ -z "$psl" ]; then
+    echo "GATE FAIL: no pallas_serving_step telemetry emitted (ref-vs-pallas"
+    echo "           serving scenario missing from bench_batched_dvfs)"
+    gate=1
+else
+    for key in parity exit_parity; do
+        val=$(echo "$psl" | grep -o ";${key}=[0-9]*" | head -1); val=${val#*=}
+        if [ "$val" != "1" ]; then
+            echo "GATE FAIL: pallas serving ${key}=${val:-?} — use_pallas=True"
+            echo "           must be numerically interchangeable with ref"
+            gate=1
+        else
+            echo "gate ok: pallas serving ${key}=1"
+        fi
+    done
+    pmiss=$(echo "$psl" | grep -o 'pallas_slo_misses=[0-9]*'); pmiss=${pmiss#*=}
+    if [ -z "$pmiss" ] || [ "$pmiss" -gt 0 ]; then
+        echo "GATE FAIL: pallas serving drain missed ${pmiss:-?} accepted SLOs"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses under use_pallas=True"
+    fi
+fi
+if python - <<'EOF'
+import json, sys
+try:
+    with open("BENCH_serving.json") as f:
+        b = json.load(f)
+except Exception as e:
+    print(f"GATE FAIL: BENCH_serving.json unreadable: {e}")
+    sys.exit(1)
+need = {"version", "backend", "ref", "pallas", "speedup_ref_over_pallas_p50",
+        "logit_parity", "exit_depth_parity"}
+missing = need - b.keys()
+if missing or b["version"] < 1:
+    print(f"GATE FAIL: BENCH_serving.json malformed (missing {sorted(missing)})")
+    sys.exit(1)
+sk = {"step_wall_p50_ms", "step_wall_p95_ms", "energy_per_request_j",
+      "accepted_slo_miss_rate", "step_traces"}
+for side in ("ref", "pallas"):
+    if sk - b[side].keys():
+        print(f"GATE FAIL: BENCH_serving.json {side} missing {sorted(sk - b[side].keys())}")
+        sys.exit(1)
+print(f"gate ok: BENCH_serving.json v{b['version']} ({b['backend']}, "
+      f"speedup {b['speedup_ref_over_pallas_p50']:.2f}x)")
+EOF
+then :; else gate=1; fi
 rm -f "$batched_log"
 
 echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched gate=$gate =="

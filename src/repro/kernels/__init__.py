@@ -3,9 +3,26 @@
 Kernels (each <name>.py with pl.pallas_call + BlockSpec, validated in
 interpret mode against ref.py):
   span_attention   — windowed flash attention with per-head span predication
+                     AND per-row kv_len masking (bucket padding); spans and
+                     lengths ride in one scalar-prefetch operand, so both
+                     may be TRACED values (vmap/jit-safe per-lane lengths)
   adaptivfloat_k   — AF quantize + AF8-weight matmul (8b mult / 32b acc)
   block_sparse     — CSR-of-blocks sparse matmul (pruning tile skip)
   softmax_entropy  — fused Algorithm-1 softmax + Eq.-4 entropy
   layernorm        — fused two-moment LayerNorm (Eq. 5)
+
+Serving integration (``dispatch.py``): the fused classifier/decoder steps
+route their eligible inner ops here when a server is built with
+``use_pallas=True`` — a static Python bool closed over by the jit'd step
+closures, so the routing adds zero traces and preserves
+one-compile-per-bucket. On CPU the kernels run in INTERPRET mode (bodies
+execute as Python at reference numerics — this is how CI exercises the
+Pallas path without a TPU); on TPU they compile to Mosaic.  Eligibility is
+decided per op: soft ramped span masks and KV-cache decode attention stay
+on the ref path (no kernel equivalent), everything else — dense/windowed
+attention with per-lane kv_len, layernorm, off-ramp entropy, activation
+quant, block-sparse MLP tiles — dispatches.  Parity vs the ref path over
+full serving drains is CI-gated in ``tests/test_pallas_serving.py`` and
+the ``pallas_serving_step`` benchmark scenario.
 """
 from repro.kernels import ref

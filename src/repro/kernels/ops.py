@@ -34,11 +34,26 @@ def layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: flo
 
 @jax.jit
 def softmax_entropy_op(logits: jnp.ndarray, mask: Optional[jnp.ndarray] = None):
+    """Fused softmax + entropy over the last axis.
+
+    Mask semantics (audited, see tests/test_kernels.py): the kernel computes
+    the entropy of the FULL softmax distribution and applies `mask` only to
+    the returned probs — it does NOT renormalize over unmasked entries.
+    `mask=None` therefore means "no positions are padding", which is exactly
+    the serving off-ramp case: the engines call this on [lanes, C] class
+    logits where every class column is real (lane padding is masked upstream
+    in attention via per-lane kv_len, so padded positions never reach the
+    off-ramp logits).  Callers with genuinely padded logit columns must mask
+    or slice BEFORE the softmax; passing `mask` here only zeroes probs.
+    """
     shape = logits.shape
     x2 = logits.reshape(-1, shape[-1])
     if mask is None:
         mask = jnp.ones_like(x2)
     else:
+        assert mask.shape == logits.shape, (
+            f"mask shape {mask.shape} must match logits shape {logits.shape}"
+        )
         mask = mask.reshape(-1, shape[-1])
     p, h = softmax_entropy.softmax_entropy(x2, mask, interpret=_interpret())
     return p.reshape(shape), h.reshape(shape[:-1])
@@ -71,7 +86,8 @@ def span_attention_op(
     q: jnp.ndarray,            # [B, S, H, dh]
     k: jnp.ndarray,            # [B, S, KV, dh]
     v: jnp.ndarray,            # [B, S, KV, dh]
-    spans: Sequence[int],      # STATIC per-head integer spans (len H; 0 = off)
+    spans,                     # per-head integer spans (len H; 0 = off) —
+                               # static sequence OR a traced int array
     *,
     causal: bool,
     bq: int = 128,
@@ -81,10 +97,37 @@ def span_attention_op(
 
     Returns [B, S, H, dh] with zero context vectors for span-0 heads (the
     accelerator writes zeros to the UAB for those heads, §V-D1).
+
+    With STATIC spans, dead heads are gathered out host-side and the kernel
+    window shrinks to the max surviving span (the deploy fast path).  With
+    TRACED spans (called under jit with spans as an operand) no host-side
+    numpy indexing is possible: all heads run with a full static window and
+    the exact spans ride in via scalar prefetch — span-0 heads come back as
+    zero rows from the kernel itself, so semantics match the gather path.
     """
     B, Sq, H, dh = q.shape
     KV = k.shape[2]
     G = H // KV
+
+    if isinstance(spans, jax.core.Tracer):
+        qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+        kh = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+        vh = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+        sp = jnp.tile(spans.astype(jnp.int32), B)
+        Sk = k.shape[1]
+        out = span_attention.span_attention(
+            qh,
+            kh.reshape(B * H, Sk, dh),
+            vh.reshape(B * H, Sk, dh),
+            sp,
+            Sk,                      # window covers any span; exact spans
+            causal=causal,           # still mask element-wise in the kernel
+            bq=bq,
+            bk=bk,
+            interpret=_interpret(),
+        ).reshape(B, H, Sq, dh)
+        return out.transpose(0, 2, 1, 3)
+
     spans_np = np.asarray(spans, np.int32)
     active, window = active_head_indices(spans_np)
     if len(active) == 0:

@@ -30,7 +30,8 @@ NEG_INF = -1e30
 
 
 def _span_attn_kernel(
-    span_ref,            # scalar prefetch: [BH] int32 spans
+    meta_ref,            # scalar prefetch: [2, BH] int32 — row 0 spans,
+                         # row 1 per-row valid key counts (kv_lens)
     q_ref,               # [1, bq, dh]
     k_ref,               # [1, bk, dh]
     v_ref,               # [1, bk, dh]
@@ -72,12 +73,15 @@ def _span_attn_kernel(
         q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         k_pos = k_blk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         d = q_pos - k_pos
-        span = span_ref[bh]
+        span = meta_ref[0, bh]
+        kvl = meta_ref[1, bh]
         if causal:
             ok = (d >= 0) & (d < span)
         else:
             ok = (jnp.abs(d) < span)
-        ok = ok & (k_pos < sk) & (q_pos < sq)
+        # kvl masks this ROW's padding (engine lanes are right-padded to the
+        # bucket length); sk masks the call-level block padding
+        ok = ok & (k_pos < kvl) & (k_pos < sk) & (q_pos < sq)
         scores = jnp.where(ok, scores, NEG_INF)
 
         m_prev = m_ref[...]
@@ -126,6 +130,8 @@ def span_attention(
     bq: int = 128,
     bk: int = 128,
     interpret: bool = True,
+    kv_lens: jnp.ndarray = None,  # [BH] int32 valid keys per row (right-
+                                  # padded inputs); None = all Sk keys valid
 ) -> jnp.ndarray:
     BH, Sq, dh = q.shape
     Sk = k.shape[1]
@@ -154,12 +160,18 @@ def span_attention(
         window=window, causal=causal, scale=scale,
     )
 
-    def q_index(bh, qi, s, spans):
+    def q_index(bh, qi, s, meta):
         return (bh, qi, 0)
 
-    def kv_index(bh, qi, s, spans):
+    def kv_index(bh, qi, s, meta):
         base = _base_block(qi, bq_, bk_, window, causal)
         return (bh, jnp.minimum(base + s, n_kb - 1), 0)
+
+    if kv_lens is None:
+        kv_lens = jnp.full((BH,), Sk, jnp.int32)
+    meta = jnp.stack(
+        [spans.astype(jnp.int32), jnp.broadcast_to(kv_lens, (BH,)).astype(jnp.int32)]
+    )
 
     out = pl.pallas_call(
         kernel,
@@ -180,5 +192,5 @@ def span_attention(
         ),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(spans.astype(jnp.int32), q, k, v)
+    )(meta, q, k, v)
     return out[:, :Sq]

@@ -15,6 +15,13 @@ from repro.common.util import ceil_div
 Params = Dict[str, Any]
 
 
+def _dispatch():
+    # lazy: pulls in pallas machinery only when a use_pallas=True path runs
+    from repro.kernels import dispatch
+
+    return dispatch
+
+
 # ---------------------------------------------------------------------------
 # Init helpers
 # ---------------------------------------------------------------------------
@@ -41,12 +48,18 @@ def init_norm(kind: str, d: int, dtype) -> Params:
     return {"scale": jnp.ones((d,), dtype), "norm_bias": jnp.zeros((d,), dtype)}
 
 
-def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+def apply_norm(
+    p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     if kind == "rms":
+        # no Pallas kernel for RMS norm; the flag is a no-op here
         var = jnp.mean(xf * xf, axis=-1, keepdims=True)
         y = xf * jax.lax.rsqrt(var + eps)
         return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    if use_pallas:
+        return _dispatch().layernorm(x, p["scale"], p["norm_bias"], eps=eps)
     mean = jnp.mean(xf, axis=-1, keepdims=True)
     # E[X^2] - E[X]^2 form (matches the accelerator's running-moment unit)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True) - mean * mean
@@ -256,6 +269,8 @@ def attention_layer(
     kv_source: Optional[jnp.ndarray] = None,  # cross-attention keys/values input
     kv_len: Any = None,             # valid key length (right-padded inputs);
                                     # cache-free paths only — decode derives it
+    use_pallas: bool = False,       # route eligible attention to the Pallas
+                                    # span kernel (see kernels.dispatch)
 ) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
     assert kv_len is None or cache is None, "kv_len is derived from the cache"
     B, S, _ = x.shape
@@ -311,15 +326,27 @@ def attention_layer(
         if getattr(cfg, "fused_attention", False)
         else contextlib.nullcontext()
     )
+    # Pallas eligibility: the hard-window span kernel cannot reproduce the
+    # soft (ramped) span mask, and cache decode fuses the KV update/codec
+    # with the attention math — those stay ref.  What remains is exactly the
+    # serving fused-step case: cache-free self-attention on right-padded
+    # lanes, which routes to the span kernel with a full window + per-row
+    # kv_len masking.
+    pallas_ok = (
+        use_pallas and cache is None and kv_source is None and span_z is None
+    )
     with scope:
-        out = attention(
-            q, k, v,
-            causal=causal and kv_source is None,
-            q_offset=q_offset,
-            span_z=span_z,
-            span_ramp=span_ramp,
-            kv_len=kv_len,
-        )
+        if pallas_ok:
+            out = _dispatch().dense_attention(q, k, v, causal=causal, kv_len=kv_len)
+        else:
+            out = attention(
+                q, k, v,
+                causal=causal and kv_source is None,
+                q_offset=q_offset,
+                span_z=span_z,
+                span_ramp=span_ramp,
+                kv_len=kv_len,
+            )
     out = out.reshape(B, S, H * hd) @ p["wo"]
     return out, cache
 
@@ -343,17 +370,27 @@ def init_mlp(rng, d: int, ff: int, act: str, dtype) -> Params:
     }
 
 
-def apply_mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+def apply_mlp(
+    p: Params, x: jnp.ndarray, act: str,
+    use_pallas: bool = False,
+    block_masks: Optional[Dict[str, Any]] = None,  # STATIC occupancy masks
+                                                   # (kernels.dispatch.mlp_block_masks)
+) -> jnp.ndarray:
+    def mm(h_, name):
+        if use_pallas and block_masks and block_masks.get(name) is not None:
+            return _dispatch().sparse_matmul(h_, p[name], block_masks[name])
+        return h_ @ p[name]
+
     if act == "swiglu":
-        g = x @ p["w_gate"]
-        u = x @ p["w_up"]
+        g = mm(x, "w_gate")
+        u = mm(x, "w_up")
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     else:
-        h = x @ p["w_up"]
+        h = mm(x, "w_up")
         if act == "gelu":
             h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
         elif act == "relu2":
             h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
         else:
             raise ValueError(act)
-    return h @ p["w_down"]
+    return mm(h, "w_down")

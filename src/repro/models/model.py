@@ -226,9 +226,13 @@ class Model:
             o["offramp_pooler_w"], o["offramp_pooler_b"], o["offramp_cls_w"], o["offramp_cls_b"]
         )
 
-    def _maybe_actquant(self, h: jnp.ndarray) -> jnp.ndarray:
+    def _maybe_actquant(self, h: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
         q = self.cfg.edgebert.quant
         if q.enabled and q.quantize_activations:
+            if use_pallas:
+                from repro.kernels import dispatch
+
+                return dispatch.act_quantize(h, q.n_bits, q.n_exp)
             return fake_quant(h, AFFormat(q.n_bits, q.n_exp))
         return h
 
@@ -257,6 +261,8 @@ class Model:
         cache=None,
         cache_pos=None,
         kv_len=None,
+        use_pallas=False,
+        block_masks=None,
     ):
         cfg = self.cfg
         post_ln = cfg.family == "albert"
@@ -266,28 +272,37 @@ class Model:
                 lp["attn"], h, cfg, causal=causal, positions=positions,
                 span_z=span_z, span_ramp=cfg.edgebert.span.ramp,
                 cache=cache, cache_pos=cache_pos, kv_len=kv_len,
+                use_pallas=use_pallas,
             )
-            h = L.apply_norm(lp["norm1"], h + attn_out, cfg.norm)
+            h = L.apply_norm(lp["norm1"], h + attn_out, cfg.norm, use_pallas=use_pallas)
             if "moe" in lp:
                 mo, aux = moe.apply_moe(lp["moe"], h, cfg)
             else:
-                mo = L.apply_mlp(lp["mlp"], h, cfg.act)
-            h = L.apply_norm(lp["norm2"], h + mo, cfg.norm)
+                mo = L.apply_mlp(
+                    lp["mlp"], h, cfg.act,
+                    use_pallas=use_pallas, block_masks=block_masks,
+                )
+            h = L.apply_norm(lp["norm2"], h + mo, cfg.norm, use_pallas=use_pallas)
         else:
             attn_out, cache = L.attention_layer(
-                lp["attn"], L.apply_norm(lp["norm1"], h, cfg.norm), cfg,
+                lp["attn"], L.apply_norm(lp["norm1"], h, cfg.norm, use_pallas=use_pallas),
+                cfg,
                 causal=causal, positions=positions,
                 span_z=span_z, span_ramp=cfg.edgebert.span.ramp,
                 cache=cache, cache_pos=cache_pos, kv_len=kv_len,
+                use_pallas=use_pallas,
             )
             h = self._sp_constrain(h + attn_out)
-            hn = L.apply_norm(lp["norm2"], h, cfg.norm)
+            hn = L.apply_norm(lp["norm2"], h, cfg.norm, use_pallas=use_pallas)
             if "moe" in lp:
                 mo, aux = moe.apply_moe(lp["moe"], hn, cfg)
             else:
-                mo = L.apply_mlp(lp["mlp"], hn, cfg.act)
+                mo = L.apply_mlp(
+                    lp["mlp"], hn, cfg.act,
+                    use_pallas=use_pallas, block_masks=block_masks,
+                )
             h = self._sp_constrain(h + mo)
-        return self._maybe_actquant(h), aux, cache
+        return self._maybe_actquant(h, use_pallas=use_pallas), aux, cache
 
     def _cross_layer_step(self, lp: Params, h, img, cache_kv=None):
         """Gated cross-attention layer (llama-3.2-vision style)."""
@@ -326,21 +341,26 @@ class Model:
         h = h + out
         return self._maybe_actquant(h), {"conv": new_conv, "ssm": new_ssm}
 
-    def _shared_attn_step(self, sp: Params, h, x0, *, span_z=None, cache=None, cache_pos=None, positions=None):
+    def _shared_attn_step(self, sp: Params, h, x0, *, span_z=None, cache=None,
+                          cache_pos=None, positions=None, use_pallas=False):
         """Zamba2 shared attention block on concat([h, x0])."""
         cfg = self.cfg
         import dataclasses
 
         acfg = dataclasses.replace(cfg, d_model=2 * cfg.d_model, qkv_bias=False)
         z = jnp.concatenate([h, x0], axis=-1)
-        zi = L.apply_norm(sp["norm1"], z, cfg.norm)
+        zi = L.apply_norm(sp["norm1"], z, cfg.norm, use_pallas=use_pallas)
         a, cache = L.attention_layer(
             sp["attn"], zi, acfg, causal=True, positions=positions,
             span_z=span_z, span_ramp=cfg.edgebert.span.ramp,
-            cache=cache, cache_pos=cache_pos,
+            cache=cache, cache_pos=cache_pos, use_pallas=use_pallas,
         )
         z = z + a
-        m = L.apply_mlp(sp["mlp"], L.apply_norm(sp["norm2"], z, cfg.norm), "gelu")
+        m = L.apply_mlp(
+            sp["mlp"],
+            L.apply_norm(sp["norm2"], z, cfg.norm, use_pallas=use_pallas),
+            "gelu",
+        )
         z = z + m
         return h + z @ sp["out_proj"], cache
 
@@ -721,6 +741,7 @@ class Model:
         tokens: jnp.ndarray,          # [B, 1]
         pos,                           # scalar: current position (cache fill)
         aux: Optional[Dict[str, jnp.ndarray]] = None,
+        use_pallas: bool = False,
     ) -> Tuple[jnp.ndarray, Params]:
         cfg = self.cfg
         positions = pos + jnp.arange(tokens.shape[1])
@@ -733,6 +754,7 @@ class Model:
                 h, _, c = self._dense_layer_step(
                     lp, h, causal=True, positions=positions,
                     span_z=span_z, cache=(ck, cv), cache_pos=pos,
+                    use_pallas=use_pallas,
                 )
                 return h, (c[0], c[1])
 
@@ -758,6 +780,7 @@ class Model:
                 h, _, c = self._dense_layer_step(
                     lp, h, causal=True, positions=positions,
                     span_z=self._span_for_layer(p, 0), cache=(ck, cv), cache_pos=pos,
+                    use_pallas=use_pallas,
                 )
                 return h, (c[0], c[1])
 
@@ -867,7 +890,10 @@ class Model:
         else:
             raise ValueError(cfg.family)
 
-        h = L.apply_norm(p["final_norm"], h, "layernorm" if cfg.family == "ssm" else cfg.norm)
+        h = L.apply_norm(
+            p["final_norm"], h, "layernorm" if cfg.family == "ssm" else cfg.norm,
+            use_pallas=use_pallas,
+        )
         logits = self.lm_logits(p, h)
         return logits, cache
 
@@ -878,6 +904,7 @@ class Model:
         tokens: jnp.ndarray,          # [B, 1]
         pos,                           # scalar or [B]: current cache position
         threshold,                     # entropy threshold (traced scalar ok)
+        use_pallas: bool = False,
     ) -> Tuple[jnp.ndarray, Params, jnp.ndarray, jnp.ndarray]:
         """One decode step with PER-TOKEN early exit (EdgeBERT Alg. 1's
         entropy off-ramp generalized to autoregressive decode; the serving
@@ -910,7 +937,13 @@ class Model:
         n_layers = cfg.n_layers
 
         def head_entropy(hh):
-            lg = self.lm_logits(p, L.apply_norm(p["final_norm"], hh, cfg.norm))
+            lg = self.lm_logits(
+                p, L.apply_norm(p["final_norm"], hh, cfg.norm, use_pallas=use_pallas)
+            )
+            if use_pallas:
+                from repro.kernels import dispatch
+
+                return lg, dispatch.entropy(lg)
             return lg, entropy_from_logits(lg)
 
         def body(carry, xs):
@@ -923,6 +956,7 @@ class Model:
             h_new, _, c = self._dense_layer_step(
                 lp, h, causal=True, positions=positions,
                 span_z=span_z, cache=(ck, cv), cache_pos=pos,
+                use_pallas=use_pallas,
             )
             # frozen tokens keep their exited representation; the layer's KV
             # write above came from that frozen input (state propagation)

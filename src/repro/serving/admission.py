@@ -29,7 +29,12 @@ closes that gap with three mechanisms:
   finish JUST IN TIME, so an outstanding contract occupies its lane up to
   its own absolute deadline and a new arrival waits (at worst) for the
   lanes-th largest outstanding deadline in its bucket, plus other buckets'
-  serialized explicit backlog.  An SLO below the quote is **rejected** — the
+  serialized explicit backlog.  Cross-traffic (other buckets, and other
+  ENGINES sharing the arbiter's clock) is priced by the same stretched-
+  occupancy logic: its remaining work at the SLOWEST operating point,
+  capped by its deadline structure — max-op pricing there was refutably
+  optimistic (the pinned counterexample in tests/test_arbiter_properties.py,
+  now a passing regression test).  An SLO below the quote is **rejected** — the
   caller receives the minimum feasible deadline — or, with
   ``on_infeasible="requote"``, admitted at that quoted deadline instead of
   the infeasible one.
@@ -230,22 +235,45 @@ class AdmissionController:
                 free_at.append(rem * dt)
         return sorted(free_at)[min(k, sched.lanes - 1)]
 
+    def _slow_step_time_s(self, bucket: int) -> Optional[float]:
+        """One fused step of ``bucket`` at the SLOWEST operating point — the
+        unconditional occupancy bound for cross-traffic on a shared clock
+        (every step the arbiter schedules runs at >= table[0].freq_hz, so no
+        contract can hold the clock longer than its work priced here).
+        None without a hw model (bare schedulers have no op table)."""
+        ctrl = getattr(self.server, "_ctrl", None)
+        cycles_for = getattr(self.server, "_cycles_for", None)
+        if ctrl is None or cycles_for is None:
+            return None
+        cyc = cycles_for(bucket)
+        return None if cyc is None else cyc / ctrl.table[0].freq_hz
+
     def _cross_bucket_backlog_s(self, bucket: int) -> float:
         """Clock time OTHER buckets' explicit work steals before ours runs:
         the scheduler advances one bucket per step and EDF ranks explicit
         work above everything, so a contract conservatively waits for other
-        buckets' contracts too.  Priced serialized at max-op step times —
-        in-flight lanes advance together (max remaining), queued contracts
-        share lanes (summed work over the lane count).  An approximation
-        (cross-bucket contracts can stretch their steps just like own-bucket
-        ones); the ``headroom`` multiplier absorbs the residual."""
+        buckets' contracts too.  In-flight lanes advance together (max
+        remaining steps), queued contracts share lanes (summed work over the
+        lane count).
+
+        Pricing: Alg. 1 STRETCHES slack-rich cross-traffic toward its
+        deadline, so max-op step times are refutably optimistic here (the
+        pinned counterexample in tests/test_arbiter_properties.py).  With a
+        hw model each bucket's steal is priced as the smaller of two valid
+        upper bounds: its work serialized at the SLOWEST operating point
+        (no schedule can run slower), capped by its deadline structure (an
+        admitted contract's lane is occupied at most until its own absolute
+        deadline, exactly as ``_own_bucket_wait_s`` prices lanes).  Bare
+        schedulers keep the nominal step-time pricing."""
         sched = self.sched
         total = 0.0
         for b in set(sched.queues) | set(sched._open):
             if b == bucket:
                 continue
-            dt = float(sched.step_time_fn(b))
+            dt_slow = self._slow_step_time_s(b)
+            dt = float(sched.step_time_fn(b)) if dt_slow is None else dt_slow
             max_rem = 0.0
+            latest_deadline = None
             run = sched._open.get(b)
             if run is not None:
                 for i in range(sched.lanes):
@@ -253,12 +281,61 @@ class AdmissionController:
                     if req is not None and req.deadline_s is not None:
                         rem = self._predict_steps(b, req, int(run.lane_depth[i]))
                         max_rem = max(max_rem, rem)
-            q_steps = sum(
-                self._predict_steps(b, r, r.ckpt_depth)
-                for r in sched.queues.get(b, ())
-                if r.deadline_s is not None
+                        d_abs = req.arrival_s + req.deadline_s
+                        if latest_deadline is None or d_abs > latest_deadline:
+                            latest_deadline = d_abs
+            q_steps = 0.0
+            for r in sched.queues.get(b, ()):
+                if r.deadline_s is None:
+                    continue
+                q_steps += self._predict_steps(b, r, r.ckpt_depth)
+                d_abs = r.arrival_s + r.deadline_s
+                if latest_deadline is None or d_abs > latest_deadline:
+                    latest_deadline = d_abs
+            steal = (max_rem + np.ceil(q_steps / sched.lanes)) * dt
+            if dt_slow is not None and latest_deadline is not None:
+                # after the latest outstanding deadline the bucket holds no
+                # explicit work — whichever bound is tighter is still valid
+                steal = min(steal, max(0.0, latest_deadline - sched.now_s))
+            total += steal
+        return total
+
+    def _cross_engine_backlog_s(self) -> float:
+        """Clock time OTHER ENGINES' in-flight lanes steal on the shared
+        arbiter.  One LDO/ADPLL pair serves every server on the arbiter, so
+        a classifier quote that ignores a co-resident decoder's contracts
+        (or vice versa) is optimistic on exactly the shared-clock mixes the
+        arbiter exists for — the cross-ENGINE half of the pinned
+        counterexample.
+
+        Each foreign lane is priced by its remaining work at the SLOWEST
+        operating point: predicted remaining layers when the lane publishes
+        them (decode), else the conservative full remaining depth, times the
+        lane's own admitted per-layer cycle cost.  Summed per lane — lanes
+        stepping together are charged the max, so the sum over-counts
+        concurrency, which only errs conservative (the quote contract is
+        one-sided).  Foreign queued work is not visible through the arbiter;
+        the headroom multiplier absorbs it."""
+        arb = getattr(self.server, "arbiter", None)
+        if arb is None:
+            return 0.0
+        sid = getattr(self.server, "_sid", None)
+        ctrl = arb.c
+        slow_hz = ctrl.table[0].freq_hz
+        n_layers = ctrl.stats.n_layers
+        total = 0.0
+        for key, clk in arb._lanes.items():
+            own = (
+                isinstance(key, tuple) and len(key) == 3 and key[0] == sid
             )
-            total += (max_rem + np.ceil(q_steps / sched.lanes)) * dt
+            if own:
+                continue        # own-sid lanes are priced by the scheduler-
+                                # side scans above — never double-count
+            if clk.pred_layers_remaining is not None:
+                rem = float(clk.pred_layers_remaining)
+            else:
+                rem = max(float(n_layers - clk.depth), 0.0)
+            total += rem * clk.cycles_per_layer / slow_hz
         return total
 
     def quote(self, req: "Request") -> Quote:
@@ -278,7 +355,11 @@ class AdmissionController:
         bucket = sched.bucket_for(sched.engine.bucket_key(req))
         steps = self._predict_steps(bucket, req, req.ckpt_depth)
         service = self._service_s(bucket, steps)
-        wait = self._own_bucket_wait_s(bucket) + self._cross_bucket_backlog_s(bucket)
+        wait = (
+            self._own_bucket_wait_s(bucket)
+            + self._cross_bucket_backlog_s(bucket)
+            + self._cross_engine_backlog_s()
+        )
         min_deadline = (wait + service) * self.headroom
         feasible = (
             req.deadline_s is not None

@@ -79,12 +79,11 @@ import numpy as np
 
 from repro.core.early_exit import (
     PositionBinnedExitCalibrator,
-    offramp_logits,
     predicted_remaining_layers,
     predicted_token_layers,
 )
-from repro.core.entropy import entropy_from_logits
 from repro.models.model import Model
+from repro.serving import step_math
 from repro.serving.scheduler import LaneScheduler, SchedulingPolicy, StepReport
 
 if TYPE_CHECKING:  # typing-only: dvfs is not a runtime dependency of the engine
@@ -187,6 +186,12 @@ class ClassifierServer:
     explicit-SLO requests via ``lane_checkpoint``/``lane_restore`` (the
     checkpointed ``(h, depth, kv_len)`` round-trips through the bucket's
     existing compiled insert, so preemption adds zero traces).
+    ``use_pallas`` — route the fused step's inner math (attention, layernorm,
+    off-ramp entropy, activation quant, pruned MLP tiles) to the Pallas
+    kernels via ``serving.step_math`` / ``kernels.dispatch``.  The flag is a
+    static Python bool closed over by the jit'd closures, so it preserves
+    one-compile-per-bucket and adds zero traces; on CPU the kernels run in
+    interpret mode, on TPU they compile to Mosaic.
     """
 
     def __init__(
@@ -199,6 +204,7 @@ class ClassifierServer:
         buckets=None,
         policy: Optional[SchedulingPolicy] = None,
         preempt: bool = False,
+        use_pallas: bool = False,
     ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
         assert dvfs is None or arbiter is None, (
@@ -212,6 +218,15 @@ class ClassifierServer:
         self.threshold = model.cfg.edgebert.early_exit.entropy_threshold
         self.dvfs = dvfs
         self.arbiter = arbiter
+        self.use_pallas = use_pallas
+        # STATIC block-occupancy masks for the shared encoder MLP, derived
+        # host-side from the concrete (post-pruning) weights; None entries /
+        # None dict mean the matmul stays dense (ref path)
+        self._block_masks = None
+        if use_pallas and "mlp" in params.get("layer", {}):
+            from repro.kernels import dispatch
+
+            self._block_masks = dispatch.mlp_block_masks(params["layer"]["mlp"])
         self._sid = next(_SERVER_IDS)
         ctrl = arbiter.c if arbiter is not None else dvfs
         self.sched = LaneScheduler(
@@ -241,43 +256,27 @@ class ClassifierServer:
             "deadline_misses": 0, "accepted_slo_misses": 0,
         }
 
+        # thin wrappers around serving.step_math: the closures own ONLY the
+        # host-side trace counters (bumped inside the traced body, so they
+        # advance exactly when XLA retraces); the step math itself — and the
+        # static use_pallas routing — lives in step_math
         def embed_fn(params, tokens):
             S = tokens.shape[1]                  # static at trace time
             self._traces["embed"][S] = self._traces["embed"].get(S, 0) + 1
-            return model.embed(params, tokens)
+            return step_math.classifier_embed(model, params, tokens)
 
         def step_fn(params, h, active, lengths, threshold):
-            """Fused: encoder layer -> off-ramp -> entropy -> retire mask.
-
-            h:       [lanes, S_bucket, D] static-shape hidden states
-            active:  [lanes] bool — inactive lanes are frozen by the mask
-            lengths: [lanes] int32 valid token count per lane — positions
-                     beyond a lane's length are bucket padding, masked out of
-                     attention via kv_len so a padded sentence computes the
-                     SAME function as at its native length
-            """
             S = h.shape[1]                       # static at trace time
             self._traces["step"][S] = self._traces["step"].get(S, 0) + 1
-            span_z = model._span_for_layer(params, 0)
-
-            def one_lane(h_l, length):
-                h2, _, _ = model._dense_layer_step(
-                    params["layer"], h_l[None], causal=False, span_z=span_z,
-                    kv_len=length,
-                )
-                return h2[0]
-
-            h_new = jax.vmap(one_lane)(h, lengths)
-            h = jnp.where(active[:, None, None], h_new, h)
-            lg = offramp_logits(h, model._offramp(params))
-            ent = entropy_from_logits(lg)
-            retire = jnp.logical_and(active, ent < threshold)
-            return h, lg, ent, retire
+            return step_math.classifier_fused_step(
+                model, params, h, active, lengths, threshold,
+                use_pallas=self.use_pallas, block_masks=self._block_masks,
+            )
 
         def insert_fn(h, lane, h_new):
             S = h.shape[1]
             self._traces["insert"][S] = self._traces["insert"].get(S, 0) + 1
-            return jax.lax.dynamic_update_slice_in_dim(h, h_new, lane, axis=0)
+            return step_math.lane_insert(h, lane, h_new)
 
         self._embed = jax.jit(embed_fn)
         self._step = jax.jit(step_fn)
@@ -621,6 +620,7 @@ class DecoderServer:
         arbiter: Optional["BatchedDVFSArbiter"] = None,
         exit_threshold: Optional[float] = None,
         exit_calibrator: Optional[Any] = None,
+        use_pallas: bool = False,
     ):
         self.model = model
         self.params = params
@@ -630,6 +630,11 @@ class DecoderServer:
         self.n_layers = model.cfg.n_layers
         self.arbiter = arbiter
         self.threshold = exit_threshold
+        # static routing of the fused step's eligible inner math to the
+        # Pallas kernels (decode attention stays ref — it fuses the KV
+        # update/codec — but norms, LM-head entropy, and act quant route);
+        # closed over by the jit'd closures, so zero extra traces
+        self.use_pallas = use_pallas
         if exit_threshold is not None and exit_calibrator is None:
             exit_calibrator = PositionBinnedExitCalibrator(
                 self.n_layers, max_pos=max_seq
@@ -659,79 +664,30 @@ class DecoderServer:
             "deadline_misses": 0, "accepted_slo_misses": 0,
         }
 
+        # thin wrappers around serving.step_math (pure per-lane vmapped step
+        # math): the closures own ONLY the host-side trace counters — decode
+        # advances every lane at its own position, the EE variant adds the
+        # per-token off-ramp, prefill is one fixed-shape trace per bucket
         def decode_fn(params, cache, tokens, pos, bucket):
-            """One decode step with PER-LANE positions.
-
-            tokens: [lanes, 1]; pos: [lanes] — each lane reads/writes its own
-            cache row at its own position (vmap over the lane axis), so lanes
-            at different depths advance together in ONE fixed-shape trace.
-            """
             self._traces["decode"][bucket] = self._traces["decode"].get(bucket, 0) + 1
-            lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
-
-            def one_lane(cache_l, tok, p):
-                cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
-                lg, cache_b = model.decode_step(params, cache_b, tok[None, None], p)
-                return lg[0], jax.tree_util.tree_map(lambda x: x[:, 0], cache_b)
-
-            lg, cache = jax.vmap(
-                one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes)
-            )(cache, tokens[:, 0], pos)
-            return lg, cache
+            return step_math.decoder_decode(
+                model, params, cache, tokens, pos, use_pallas=self.use_pallas
+            )
 
         def decode_ee_fn(params, cache, tokens, pos, threshold, bucket):
-            """Fused layer -> LM-head off-ramp -> entropy -> per-token exit.
-
-            Same per-lane vmap as ``decode_fn``; each lane additionally
-            returns its token's 1-based exit depth and first-off-ramp
-            entropy.  Masked freeze keeps the shapes fixed, so the EE step
-            traces exactly once per bucket too.
-            """
             self._traces["decode"][bucket] = self._traces["decode"].get(bucket, 0) + 1
-            lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
-
-            def one_lane(cache_l, tok, p):
-                cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
-                lg, cache_b, xl, fe = model.decode_step_ee(
-                    params, cache_b, tok[None, None], p, threshold
-                )
-                return (
-                    lg[0],
-                    jax.tree_util.tree_map(lambda x: x[:, 0], cache_b),
-                    xl[0],
-                    fe[0],
-                )
-
-            lg, cache, xl, fe = jax.vmap(
-                one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes, 0, 0)
-            )(cache, tokens[:, 0], pos)
-            return lg, cache, xl, fe
+            return step_math.decoder_decode_ee(
+                model, params, cache, tokens, pos, threshold,
+                use_pallas=self.use_pallas,
+            )
 
         def prefill_fn(params, cache, tokens, lane, length):
-            """Write one lane's prompt[:length-1] into the KV cache.
-
-            tokens: [bucket] zero-padded prompt; lane/length: scalars.  The
-            prompt is decoded step-by-step in a fori_loop on a scratch cache,
-            then merged back under a lane one-hot so other lanes' cache rows
-            are untouched — the whole prefill is ONE fixed-shape trace per
-            bucket instead of a Python loop of per-token dispatches.
-            """
             bucket = tokens.shape[0]             # static at trace time
             self._traces["prefill"][bucket] = self._traces["prefill"].get(bucket, 0) + 1
-            lane_ids = jnp.arange(self.lanes)
-
-            def body(t, c):
-                tok = jnp.where(lane_ids == lane, tokens[t], 0)[:, None]
-                _, c = model.decode_step(params, c, tok, t)
-                return c
-
-            scratch = jax.lax.fori_loop(0, length - 1, body, cache)
-
-            def merge(new, old):
-                mask = (lane_ids == lane).reshape((1, self.lanes) + (1,) * (new.ndim - 2))
-                return jnp.where(mask, new, old)
-
-            return jax.tree_util.tree_map(merge, scratch, cache)
+            return step_math.decoder_prefill(
+                model, params, cache, tokens, lane, length, self.lanes,
+                use_pallas=self.use_pallas,
+            )
 
         self._decode = jax.jit(decode_fn, static_argnums=(4,))
         self._decode_ee = jax.jit(decode_ee_fn, static_argnums=(5,))

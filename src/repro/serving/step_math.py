@@ -1,0 +1,181 @@
+"""Pure math of one fused serving step, isolated from scheduling.
+
+The engines in ``serving/engine.py`` used to build their jit'd closures
+inline, entangling three concerns: the numerical step (what one fused step
+computes), trace accounting (host-side counters bumped inside traced
+bodies), and scheduling (which bucket steps when).  This module owns the
+first concern only: every function here is pure array math — no scheduler,
+no telemetry, no host state — so the engine closures reduce to thin
+wrappers that bump a trace counter and delegate.
+
+This is also where ``use_pallas`` lands.  Each function takes the flag as a
+plain Python keyword (closed over by the engine's jit'd closures, hence
+static): ``True`` routes the eligible inner ops — attention, layernorm,
+off-ramp entropy, activation quant, pruned MLP tiles — to the Pallas
+kernels via ``repro.kernels.dispatch``; ``False`` keeps the byte-identical
+reference path.  Either way the step is one compile per bucket: the flag
+never becomes a traced value, so flipping it cannot add traces at runtime.
+
+Lane structure: both engines vmap a one-lane body over the lane axis.  The
+per-lane kv_len / position scalars become traced per-lane operands, which
+the Pallas span kernel accepts through scalar prefetch — verified to
+compose with vmap+jit in interpret mode (CPU CI) and on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.early_exit import offramp_logits
+from repro.core.entropy import entropy_from_logits
+from repro.models.model import Model
+
+
+# ---------------------------------------------------------------------------
+# Classifier (early-exit encoder) fused step
+# ---------------------------------------------------------------------------
+
+
+def classifier_embed(model: Model, params: Any, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Embed one lane's padded token row: [1, S_bucket] -> [1, S_bucket, D]."""
+    return model.embed(params, tokens)
+
+
+def classifier_fused_step(
+    model: Model,
+    params: Any,
+    h: jnp.ndarray,          # [lanes, S_bucket, D] static-shape hidden states
+    active: jnp.ndarray,     # [lanes] bool — inactive lanes frozen by the mask
+    lengths: jnp.ndarray,    # [lanes] int32 valid token count per lane
+    threshold: jnp.ndarray,  # scalar entropy threshold
+    *,
+    use_pallas: bool = False,
+    block_masks: Optional[Dict[str, Any]] = None,
+):
+    """Fused: encoder layer -> off-ramp logits -> entropy -> retire mask.
+
+    Positions beyond a lane's length are bucket padding, masked out of
+    attention via kv_len so a padded sentence computes the SAME function as
+    at its native length.  Returns ``(h, logits, entropy, retire)``.
+    """
+    span_z = model._span_for_layer(params, 0)
+
+    def one_lane(h_l, length):
+        h2, _, _ = model._dense_layer_step(
+            params["layer"], h_l[None], causal=False, span_z=span_z,
+            kv_len=length, use_pallas=use_pallas, block_masks=block_masks,
+        )
+        return h2[0]
+
+    h_new = jax.vmap(one_lane)(h, lengths)
+    h = jnp.where(active[:, None, None], h_new, h)
+    lg = offramp_logits(h, model._offramp(params))
+    if use_pallas:
+        from repro.kernels import dispatch
+
+        ent = dispatch.entropy(lg)
+    else:
+        ent = entropy_from_logits(lg)
+    retire = jnp.logical_and(active, ent < threshold)
+    return h, lg, ent, retire
+
+
+def lane_insert(h: jnp.ndarray, lane: jnp.ndarray, h_new: jnp.ndarray) -> jnp.ndarray:
+    """Overwrite one lane row; reused verbatim for load AND restore so
+    preemption round-trips through the same compiled trace."""
+    return jax.lax.dynamic_update_slice_in_dim(h, h_new, lane, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (LM) fused steps
+# ---------------------------------------------------------------------------
+
+
+def decoder_decode(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,     # [lanes, 1]
+    pos: jnp.ndarray,        # [lanes] per-lane cache positions
+    *,
+    use_pallas: bool = False,
+):
+    """One decode step with PER-LANE positions (vmap over the lane axis)."""
+    lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
+
+    def one_lane(cache_l, tok, p):
+        cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
+        lg, cache_b = model.decode_step(
+            params, cache_b, tok[None, None], p, use_pallas=use_pallas
+        )
+        return lg[0], jax.tree_util.tree_map(lambda x: x[:, 0], cache_b)
+
+    return jax.vmap(
+        one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes)
+    )(cache, tokens[:, 0], pos)
+
+
+def decoder_decode_ee(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,
+    pos: jnp.ndarray,
+    threshold,
+    *,
+    use_pallas: bool = False,
+):
+    """Fused layer -> LM-head off-ramp -> entropy -> per-token exit.
+
+    Same per-lane vmap as ``decoder_decode``; each lane additionally returns
+    its token's 1-based exit depth and first-off-ramp entropy.
+    """
+    lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
+
+    def one_lane(cache_l, tok, p):
+        cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
+        lg, cache_b, xl, fe = model.decode_step_ee(
+            params, cache_b, tok[None, None], p, threshold,
+            use_pallas=use_pallas,
+        )
+        return (
+            lg[0],
+            jax.tree_util.tree_map(lambda x: x[:, 0], cache_b),
+            xl[0],
+            fe[0],
+        )
+
+    return jax.vmap(
+        one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes, 0, 0)
+    )(cache, tokens[:, 0], pos)
+
+
+def decoder_prefill(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,     # [bucket] zero-padded prompt
+    lane,                    # scalar lane index
+    length,                  # scalar prompt length
+    lanes: int,              # static lane count
+    *,
+    use_pallas: bool = False,
+):
+    """Write one lane's prompt[:length-1] into the KV cache (fori_loop on a
+    scratch cache, merged back under a lane one-hot)."""
+    lane_ids = jnp.arange(lanes)
+
+    def body(t, c):
+        tok = jnp.where(lane_ids == lane, tokens[t], 0)[:, None]
+        _, c = model.decode_step(params, c, tok, t, use_pallas=use_pallas)
+        return c
+
+    scratch = jax.lax.fori_loop(0, length - 1, body, cache)
+
+    def merge(new, old):
+        mask = (lane_ids == lane).reshape((1, lanes) + (1,) * (new.ndim - 2))
+        return jnp.where(mask, new, old)
+
+    return jax.tree_util.tree_map(merge, scratch, cache)

@@ -20,7 +20,12 @@ lanes arbitrate in separate fused calls interleaved on one shared clock:
     max op (the naive reading of the admission formula) is refutably
     optimistic on a shared clock (counterexample: a 12-layer classifier
     sharing the clock with two full-depth decode tokens whose own deadline
-    lets them crawl);
+    lets them crawl).  ``AdmissionController`` now prices exactly this way:
+    cross-bucket backlog at slowest-op stretched occupancy capped by the
+    bucket's deadline structure, plus a cross-ENGINE term summing foreign
+    arbiter lanes' remaining layers at the slowest point —
+    ``TestCrossEngineAdmissionRegression`` pins the counterexample
+    end-to-end through the real servers;
   * per-step energy is monotone nonincreasing in slack — at fixed remaining
     work a larger remaining-time budget never selects a higher-energy
     operating point — and a LANE's drain energy is monotone nonincreasing
@@ -326,3 +331,129 @@ class TestInvariantsDeterministic:
                 )
                 energies.append(done[0].energy_j)
             assert energies[1] <= energies[0] * (1 + 1e-9), (lane, lo, hi)
+
+class TestCrossEngineAdmissionRegression:
+    """The pinned counterexample, end-to-end through the REAL stack: a
+    classifier sharing one arbiter clock with slack-rich decoder contracts
+    that Alg. 1 stretches to crawl at the slowest operating point.
+
+    Under the old max-op pricing the classifier's quote ignored the foreign
+    lanes entirely (its own bucket queue is empty, cross-bucket sees no
+    classifier work) and an SLO accepted at that quote was missed.  With
+    cross-engine backlog priced at slowest-op remaining layers the quote
+    covers the steal and the contract holds — the one-sided guarantee
+    ``accepted => met`` that admission control rests on."""
+
+    def _servers(self):
+        import dataclasses
+
+        import jax
+
+        from repro.configs.base import get_smoke_config
+        from repro.data.synthetic import SyntheticCLS
+        from repro.models.model import build_model
+        from repro.serving.engine import ClassifierServer, DecoderServer
+
+        ccfg = get_smoke_config("albert_edgebert")
+        ccfg = dataclasses.replace(ccfg, dtype="float32", remat_policy="none")
+        ccfg = ccfg.with_edgebert(          # threshold ~0: deterministic full depth
+            early_exit=dataclasses.replace(
+                ccfg.edgebert.early_exit, entropy_threshold=1e-9
+            )
+        )
+        cmodel = build_model(ccfg)
+        cparams = cmodel.init_params(jax.random.PRNGKey(0))
+
+        dcfg = dataclasses.replace(
+            get_smoke_config("deepseek_7b"), dtype="float32", remat_policy="none"
+        )
+        dmodel = build_model(dcfg)
+        dparams = dmodel.init_params(jax.random.PRNGKey(1))
+
+        stats = albert_layer_stats(seq_len=16)
+        stats.n_layers = ccfg.n_layers
+        ctrl = LatencyAwareDVFSController(
+            stats, no_early_exit_baseline(stats)["latency_s"] * 1.5
+        )
+        arb = BatchedDVFSArbiter(ctrl)
+        dec = DecoderServer(dmodel, dparams, batch_lanes=2, max_seq=32,
+                            buckets=(16,), arbiter=arb)
+        cls = ClassifierServer(cmodel, cparams, batch_lanes=2, buckets=(16,),
+                               arbiter=arb)
+        batch = SyntheticCLS(ccfg.vocab_size, 32, 8, num_classes=3,
+                             seed=0).batch(0)
+        return arb, ctrl, dec, cls, batch
+
+    def test_accepted_classifier_slo_survives_crawling_decoder_lanes(self):
+        from repro.serving.admission import AdmissionController
+        from repro.serving.engine import Request
+
+        arb, ctrl, dec, cls, batch = self._servers()
+        # slack-rich decoder contracts: deadline = 4x their own slowest-op
+        # work, so Alg. 1 stretches them onto the table's slowest point
+        prompt = np.arange(1, 6, dtype=np.int32)
+        # one request's slowest-op work: 10 tokens of full-depth decode
+        # steps (plus margin for the un-charged prefill rounds)
+        slow = dec._cycles_for(16) * 12 / ctrl.table[0].freq_hz
+        for i in range(2):
+            dec.submit(Request(uid=100 + i, tokens=prompt, max_new_tokens=10,
+                               deadline_s=slow * 4.0))
+        dec.step()                     # foreign lanes in flight on the clock
+
+        ac = AdmissionController(cls)
+        # the quote must see the foreign occupancy (old pricing: exactly 0)
+        xterm = ac._cross_engine_backlog_s()
+        assert xterm > 0.0
+        req = Request(uid=0, tokens=batch["tokens"][0][:12], deadline_s=1e9)
+        q = ac.quote(req)
+        assert q.wait_s >= xterm
+
+        # WITHOUT the cross-engine term the same mix misses the accepted
+        # SLO — the refutation the module docstring pins; keep it live so a
+        # pricing regression resurfaces as a failure here, not in prod
+        q_old_deadline = (q.wait_s - xterm + q.service_s) * ac.headroom
+        assert q_old_deadline < q.min_deadline_s
+
+        d = ac.submit(Request(uid=0, tokens=batch["tokens"][0][:12],
+                              deadline_s=q.min_deadline_s))
+        assert d.admitted
+        while not (cls.sched.idle and dec.sched.idle):
+            dec.step()
+            cls.step()
+        assert cls.telemetry()["accepted_slo_misses"] == 0
+        assert dec.telemetry()["accepted_slo_misses"] == 0
+        r = cls.done[0]
+        assert r.retire_s - r.arrival_s <= r.deadline_s * (1 + 1e-9)
+        # and the fix was load-bearing: realized latency exceeds what the
+        # old optimistic quote promised
+        assert r.retire_s - r.arrival_s > q_old_deadline
+
+    def test_old_pricing_counterexample_still_refuted(self):
+        """Suppress the cross-engine term (restoring the old optimistic
+        quote) and drive the identical mix: the accepted SLO MUST miss.
+        Guards the test itself — if the scenario ever stops distinguishing
+        the two pricings, this fails instead of silently passing."""
+        from repro.serving.admission import AdmissionController
+        from repro.serving.engine import Request
+
+        arb, ctrl, dec, cls, batch = self._servers()
+        prompt = np.arange(1, 6, dtype=np.int32)
+        # one request's slowest-op work: 10 tokens of full-depth decode
+        # steps (plus margin for the un-charged prefill rounds)
+        slow = dec._cycles_for(16) * 12 / ctrl.table[0].freq_hz
+        for i in range(2):
+            dec.submit(Request(uid=100 + i, tokens=prompt, max_new_tokens=10,
+                               deadline_s=slow * 4.0))
+        dec.step()
+
+        ac = AdmissionController(cls)
+        ac._cross_engine_backlog_s = lambda: 0.0     # old pricing
+        q = ac.quote(Request(uid=0, tokens=batch["tokens"][0][:12],
+                             deadline_s=1e9))
+        d = ac.submit(Request(uid=0, tokens=batch["tokens"][0][:12],
+                              deadline_s=q.min_deadline_s))
+        assert d.admitted
+        while not (cls.sched.idle and dec.sched.idle):
+            dec.step()
+            cls.step()
+        assert cls.telemetry()["accepted_slo_misses"] >= 1

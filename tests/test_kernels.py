@@ -143,3 +143,64 @@ class TestSpanAttention:
         q, k, v = _r((B, S, H, dh)), _r((B, S, H, dh)), _r((B, S, H, dh))
         out = ops.span_attention_op(q, k, v, [0, 0, 0, 0], causal=True)
         assert (np.asarray(out) == 0).all()
+
+    def test_ops_traced_spans_under_jit(self):
+        """Regression: ``span_attention_op`` used host-side numpy indexing on
+        the span vector, so TRACED spans (e.g. learned spans flowing through
+        a jit'd serving step) crashed at trace time.  Traced spans must now
+        route through the kernel's scalar-prefetch operand and match the
+        static-span result."""
+        B, S, H, KV, dh = 2, 64, 4, 2, 8
+        q, k, v = _r((B, S, H, dh), 20), _r((B, S, KV, dh), 21), _r((B, S, KV, dh), 22)
+        spans = [9, 0, 33, 17]
+
+        @jax.jit
+        def f(q, k, v, sp):
+            return ops.span_attention_op(q, k, v, sp, causal=True, bq=32, bk=32)
+
+        got = f(q, k, v, jnp.asarray(spans, jnp.int32))   # spans TRACED
+        want = ops.span_attention_op(q, k, v, spans, causal=True, bq=32, bk=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_kv_lens_masks_padded_keys(self, causal):
+        """Per-row kv_len (bucket padding) must compute the SAME function as
+        physically truncating the key/value rows — incl. under jit(vmap) with
+        a traced per-row length, the shape the serving lane vmap produces."""
+        BH, S, dh, window = 4, 64, 8, 64
+        q, k, v = _r((BH, S, dh), 23), _r((BH, S, dh), 24), _r((BH, S, dh), 25)
+        spans = jnp.full((BH,), window, jnp.int32)
+        kvl = 23
+        got = span_attention(q, k, v, spans, window, causal=causal, bq=32,
+                             bk=32, kv_lens=jnp.full((BH,), kvl, jnp.int32))
+        # oracle: the first kvl query rows of the padded run must equal a run
+        # on the physically truncated arrays (rows past kvl are padding)
+        want = ref.span_attention(
+            q[:, None, :kvl], k[:, None, :kvl], v[:, None, :kvl],
+            jnp.asarray([window]), causal=causal,
+        )[:, 0]
+        np.testing.assert_allclose(
+            np.asarray(got)[:, :kvl], np.asarray(want), atol=2e-5
+        )
+
+        @jax.jit
+        def lane_step(q, k, v, lens):
+            def one(ql, kl, vl, n):
+                return span_attention(
+                    ql[None], kl[None], vl[None],
+                    jnp.full((1,), window, jnp.int32), window,
+                    causal=causal, bq=32, bk=32, kv_lens=n[None],
+                )[0]
+            return jax.vmap(one)(q, k, v, lens)
+
+        lens = jnp.asarray([23, 64, 1, 40], jnp.int32)   # per-lane, TRACED
+        got_v = lane_step(q, k, v, lens)
+        for i, n in enumerate([23, 64, 1, 40]):
+            want = ref.span_attention(
+                q[i : i + 1, None, :n], k[i : i + 1, None, :n],
+                v[i : i + 1, None, :n], jnp.asarray([window]), causal=causal,
+            )[0, 0]
+            np.testing.assert_allclose(
+                np.asarray(got_v)[i, :n], np.asarray(want), atol=2e-5,
+                err_msg=str(i),
+            )

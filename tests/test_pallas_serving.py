@@ -1,0 +1,214 @@
+"""Serving-level parity gates for the Pallas-fused step (``use_pallas=``).
+
+Each test drains the SAME request mix through two otherwise-identical
+servers — ``use_pallas=False`` (reference jnp math) and ``use_pallas=True``
+(Pallas kernels via ``serving.step_math`` / ``kernels.dispatch``, interpret
+mode on CPU) — and gates:
+
+  * logits within fp tolerance (kernels accumulate in f32; the only drift
+    source is reduction order),
+  * exit depths EXACTLY equal (entropy-vs-threshold decisions must not flip
+    across the dispatch boundary — a flipped exit changes latency, energy,
+    and the DVFS replay, not just a few ulps),
+  * telemetry trace counts EQUAL with ``step_traces <= bucket count`` (the
+    flag is static: routing to Pallas must add zero compiles),
+  * the checkpoint/preempt/restore cycle round-trips through the Pallas
+    step bit-identically to an uninterrupted Pallas run.
+
+The smoke albert_edgebert config keeps adaptive span ENABLED, so its
+serving attention stays on the reference path (a soft ramped span mask has
+no hard-window kernel equivalent) while layernorm, off-ramp entropy, and
+activation quant route to Pallas.  The span-DISABLED variant below is what
+drives ``dispatch.dense_attention`` (the span kernel at full window with
+per-lane kv_len) in serving — asserted via a call counter so the kernel
+path can't silently stop firing.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.data.synthetic import SyntheticCLS
+from repro.models.model import build_model
+from repro.serving.engine import ClassifierServer, DecoderServer, Request
+
+ATOL = 2e-4          # f32 logits, reduction-order drift only
+
+
+def _albert_model(threshold=1.06, span=True):
+    # default threshold sits mid-distribution of the random-init first
+    # off-ramp entropies (probed: ~1.03..1.08) so the drain mixes early
+    # exits with full-depth lanes — exit-depth parity must not be vacuous
+    cfg = get_smoke_config("albert_edgebert")
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="none")
+    cfg = cfg.with_edgebert(
+        early_exit=dataclasses.replace(
+            cfg.edgebert.early_exit, entropy_threshold=threshold
+        ),
+        span=dataclasses.replace(cfg.edgebert.span, enabled=span),
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _decoder_model():
+    cfg = dataclasses.replace(
+        get_smoke_config("deepseek_7b"), dtype="float32", remat_policy="none"
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    return model, params, cfg
+
+
+def _cls_requests(cfg, n=8):
+    batch = SyntheticCLS(cfg.vocab_size, 32, n, num_classes=3, seed=0).batch(0)
+    lengths = [12, 16, 9, 24, 32, 16, 27, 12]
+    return [
+        Request(uid=i, tokens=batch["tokens"][i][: lengths[i % len(lengths)]])
+        for i in range(n)
+    ]
+
+
+def _drain_pair(model, params, n_requests_cfg, **server_kw):
+    """Run the same mix through ref and Pallas servers; return both."""
+    servers = {}
+    for use_pallas in (False, True):
+        srv = ClassifierServer(model, params, use_pallas=use_pallas, **server_kw)
+        for r in _cls_requests(n_requests_cfg):
+            srv.submit(dataclasses.replace(r))
+        srv.run()
+        servers[use_pallas] = srv
+    return servers[False], servers[True]
+
+
+class TestClassifierParity:
+    def test_bucketed_drain_logits_exits_traces(self):
+        model, params, cfg = _albert_model()
+        ref, pal = _drain_pair(
+            model, params, cfg, batch_lanes=4, buckets=(16, 32)
+        )
+        n = len(ref.done)
+        assert n == len(pal.done) == 8
+        for i in range(n):
+            assert pal.done[i].exit_layer == ref.done[i].exit_layer, i
+            np.testing.assert_allclose(
+                pal.done[i].result, ref.done[i].result, atol=ATOL
+            )
+        # the threshold must actually split the mix, or exit parity is vacuous
+        depths = {ref.done[i].exit_layer for i in range(n)}
+        assert any(d < cfg.n_layers for d in depths)
+        # zero additional traces from the Pallas routing; one per bucket
+        t_ref, t_pal = ref.telemetry(), pal.telemetry()
+        assert t_pal["step_traces"] == t_ref["step_traces"]
+        assert t_pal["step_traces"] <= 2      # <= bucket count
+        assert t_pal["embed_traces"] == t_ref["embed_traces"]
+        assert t_pal["insert_traces"] == t_ref["insert_traces"]
+
+    def test_span_disabled_variant_fires_span_kernel(self):
+        """Without learned spans serving attention routes to the Pallas span
+        kernel (full window, per-lane kv_len); parity must hold AND the
+        kernel must demonstrably fire."""
+        model, params, cfg = _albert_model(span=False)
+        assert "span_z" not in params          # precondition for the route
+
+        from repro.kernels import dispatch
+
+        calls = {"n": 0}
+        orig = dispatch.dense_attention
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return orig(*a, **kw)
+
+        dispatch.dense_attention = counting
+        try:
+            ref, pal = _drain_pair(
+                model, params, cfg, batch_lanes=2, buckets=(16, 32)
+            )
+        finally:
+            dispatch.dense_attention = orig
+        assert calls["n"] >= 1                 # traced at least once
+        for i in range(len(ref.done)):
+            assert pal.done[i].exit_layer == ref.done[i].exit_layer, i
+            np.testing.assert_allclose(
+                pal.done[i].result, ref.done[i].result, atol=ATOL
+            )
+
+    def test_preempt_restore_roundtrip_under_pallas(self):
+        """Checkpoint/preempt/restore through the Pallas step: identical
+        results and exit depths vs an uninterrupted Pallas run, zero extra
+        traces (restore reuses the bucket's compiled insert)."""
+        model, params, cfg = _albert_model(threshold=1e-9)
+        batch = SyntheticCLS(cfg.vocab_size, 32, 8, num_classes=3,
+                             seed=0).batch(0)
+        srv = ClassifierServer(model, params, batch_lanes=2, buckets=(16,),
+                               preempt=True, use_pallas=True)
+        ref = ClassifierServer(model, params, batch_lanes=2, buckets=(16,),
+                               use_pallas=True)
+        for s in (srv, ref):
+            for i in range(3):
+                s.submit(Request(uid=i, tokens=batch["tokens"][i][:12]))
+        srv.step()
+        srv.step()
+        srv.submit(Request(
+            uid=99, tokens=batch["tokens"][4][:12],
+            deadline_s=float(cfg.n_layers + 3),
+        ))
+        while srv.step() is not None:
+            pass
+        while ref.step() is not None:
+            pass
+        st, st_ref = srv.telemetry(), ref.telemetry()
+        assert st["preemptions"] >= 1
+        assert any(srv.done[i].preempted for i in range(3))
+        for i in range(3):
+            assert srv.done[i].exit_layer == ref.done[i].exit_layer, i
+            assert np.array_equal(srv.done[i].result, ref.done[i].result), i
+        assert st["step_traces"] == st_ref["step_traces"] == 1
+        assert st["insert_traces"] == st_ref["insert_traces"] == 1
+
+
+class TestDecoderParity:
+    def test_early_exit_drain_tokens_and_depths(self):
+        model, params, cfg = _decoder_model()
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(3, cfg.vocab_size, s).astype(np.int32)
+                   for s in (4, 6, 5, 7)]
+        servers = {}
+        for use_pallas in (False, True):
+            srv = DecoderServer(model, params, batch_lanes=2, max_seq=32,
+                                # probed median of the random-init per-token
+                                # first-off-ramp entropies (~6.224..6.227)
+                                buckets=(16,), exit_threshold=6.2255,
+                                use_pallas=use_pallas)
+            for i, p in enumerate(prompts):
+                srv.submit(Request(uid=i, tokens=p, max_new_tokens=6))
+            srv.run()
+            servers[use_pallas] = srv
+        ref, pal = servers[False], servers[True]
+        for i in range(len(prompts)):
+            assert pal.done[i].generated == ref.done[i].generated, i
+            assert pal.done[i].token_exit_layers == ref.done[i].token_exit_layers, i
+        # the EE threshold must bite somewhere or depth parity is vacuous
+        depths = [d for i in range(len(prompts))
+                  for d in ref.done[i].token_exit_layers]
+        assert any(d < cfg.n_layers for d in depths)
+        t_ref, t_pal = ref.telemetry(), pal.telemetry()
+        assert t_pal["decode_traces"] == t_ref["decode_traces"] == 1
+        assert t_pal["prefill_traces"] == t_ref["prefill_traces"]
+
+    def test_full_depth_drain_matches_ref(self):
+        """No early exit (decode_fn path): generated tokens exactly equal."""
+        model, params, cfg = _decoder_model()
+        prompt = np.arange(2, 7, dtype=np.int32)
+        outs = {}
+        for use_pallas in (False, True):
+            srv = DecoderServer(model, params, batch_lanes=2, max_seq=32,
+                                buckets=(16,), use_pallas=use_pallas)
+            srv.submit(Request(uid=0, tokens=prompt, max_new_tokens=6))
+            srv.run()
+            outs[use_pallas] = srv.done[0].generated
+        assert outs[True] == outs[False]

@@ -85,7 +85,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, trained_albert
+from benchmarks.common import append_bench_history, emit, git_tag, trained_albert
 from repro.configs.base import get_smoke_config
 from repro.core.early_exit import OnlineExitCalibrator
 from repro.data.synthetic import SyntheticCLS
@@ -419,8 +419,14 @@ def _pallas_serving_bench(model, params, cfg, data, buckets, ctrl_factory) -> di
 
 
 def _write_bench_serving(path: str, pal: dict, buckets, target_mult: float) -> None:
-    """Versioned machine-readable artifact for CI trend tracking."""
-    import json
+    """Append this run to the versioned BENCH_serving.json history.
+
+    Each run is ONE entry (scenario ``pallas_serving``) in a bounded
+    ``{"version": 2, "history": [...]}`` list — newest last, stamped with the
+    backend, device count and a git-describable tag — so CI diffs the newest
+    entry against the previous comparable one instead of only shape-checking
+    an overwritten snapshot.  A pre-existing flat v1 file is migrated as the
+    history's first entry."""
 
     def scenario(st):
         return {
@@ -434,9 +440,11 @@ def _write_bench_serving(path: str, pal: dict, buckets, target_mult: float) -> N
             "warm_added_traces": st["warm_added_traces"],
         }
 
-    payload = {
-        "version": 1,
+    entry = {
+        "scenario": "pallas_serving",
         "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "tag": git_tag(),
         "pallas_interpret": jax.default_backend() != "tpu",
         "target_mult": target_mult,
         "bucket_count": len(buckets),
@@ -447,9 +455,7 @@ def _write_bench_serving(path: str, pal: dict, buckets, target_mult: float) -> N
         "logit_parity": pal["logit_parity"],
         "exit_depth_parity": pal["exit_parity"],
     }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
+    append_bench_history(path, entry)
 
 
 def main() -> None:

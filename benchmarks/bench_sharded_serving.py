@@ -1,0 +1,237 @@
+"""Multi-device sharded serving: step-throughput scaling 1 -> 4 replicas.
+
+The tentpole claim of the sharded serving stack is that ONE ``LaneScheduler``
+can drive ``replicas x batch_lanes`` concurrent requests by ``shard_map``-ing
+the fused per-bucket step over a ``("data",)`` mesh, with one DVFS clock
+domain (``BatchedDVFSArbiter``) per replica and feasibility-routed admission
+pinning contracts to replicas.  This benchmark measures the claim end to end:
+
+  * the SAME mixed queue (best-effort + explicit contracts admitted at their
+    OWN feasibility quote) drains through a 1-replica server and a 4-replica
+    server, each in its own subprocess with the host platform forced to that
+    many devices;
+  * throughput is retired requests per fused dense step on a WARM server (a
+    cold drain compiles first; the warm drain must add ZERO new traces per
+    (bucket, replica));
+  * gates: warm requests/step must scale >= --min-scaling (default 3.0x)
+    from 1 to 4 replicas, zero accepted-SLO misses, zero warm-added traces,
+    and at most one compile per (bucket, replica) pair.
+
+Each run appends a ``sharded_serving`` entry to the versioned
+``BENCH_serving.json`` history (see ``benchmarks.common.append_bench_history``).
+
+Multi-device-on-CPU recipe: XLA only exposes one CPU device by default; to
+get N host devices (and therefore an N-replica ``("data",)`` mesh) the flag
+must be set BEFORE jax initializes::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python benchmarks/bench_sharded_serving.py --smoke
+
+This driver sets the flag itself by re-exec'ing ``--child --replicas N``
+subprocesses, so the parent process's own device count never matters.
+
+Usage:
+  python benchmarks/bench_sharded_serving.py --smoke    # untrained, CI-fast
+  python benchmarks/bench_sharded_serving.py            # trained toy EdgeBERT
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+# ---------------------------------------------------------------------------
+# Child: one (replicas, forced-device-count) measurement
+# ---------------------------------------------------------------------------
+
+
+def _child(args) -> None:
+    """Drain the queue at ``--replicas`` and print one RESULT json line."""
+    from benchmarks.bench_batched_dvfs import LANES, _mixed_queue, _setup
+    from repro.hwmodel.edgebert_accel import albert_layer_stats
+    from repro.serving.admission import AdmissionController
+    from repro.serving.dvfs import (
+        BatchedDVFSArbiter,
+        LatencyAwareDVFSController,
+        no_early_exit_baseline,
+    )
+    from repro.serving.engine import ClassifierServer, Request
+
+    model, params, cfg, data, _thr = _setup(args.smoke)
+    buckets = (16, 32) if data.seq_len <= 32 else (32, 64, data.seq_len)
+    stats = albert_layer_stats(seq_len=max(buckets))
+    stats.n_layers = cfg.n_layers
+    target = no_early_exit_baseline(stats)["latency_s"] * args.target_mult
+
+    ctrl = LatencyAwareDVFSController(stats, target)
+    srv = ClassifierServer(
+        model, params, batch_lanes=LANES, arbiter=BatchedDVFSArbiter(ctrl),
+        buckets=buckets, replicas=args.replicas,
+    )
+    assert srv.replicas == args.replicas, (srv.replicas, args.replicas)
+    ac = AdmissionController(srv)
+
+    # mixed queue, every other PAIR an explicit contract admitted at its own
+    # feasibility quote (covers both buckets on both sides of the split)
+    reqs = _mixed_queue(data, buckets, args.queue, seed=31)
+    for i, r in enumerate(reqs):
+        if i % 4 in (1, 2):
+            q = ac.quote(Request(uid=r.uid, tokens=r.tokens, deadline_s=1e9))
+            d = ac.submit(Request(
+                uid=r.uid, tokens=r.tokens, deadline_s=q.min_deadline_s
+            ))
+            assert d.admitted, f"own-quote contract {r.uid} rejected"
+        else:
+            srv.submit(Request(uid=r.uid, tokens=r.tokens))
+    srv.run()                                  # cold drain: compiles + SLO gate
+    cold = srv.telemetry()
+
+    # warm drain: identical traffic, throughput measured, ZERO new traces
+    for r in reqs:
+        srv.submit(Request(uid=10_000 + r.uid, tokens=r.tokens))
+    t0 = time.perf_counter()
+    srv.run()
+    wall = time.perf_counter() - t0
+    warm = srv.telemetry()
+
+    steps = warm["dense_steps"] - cold["dense_steps"]
+    traces = warm["step_traces_per_bucket_replica"]
+    res = {
+        "replicas": srv.replicas,
+        "lanes": srv.lanes,
+        "requests": 2 * len(reqs),
+        "warm_requests": len(reqs),
+        "warm_dense_steps": steps,
+        "requests_per_step": len(reqs) / steps,
+        "warm_wall_s": wall,
+        "accepted": warm["accepted"],
+        "accepted_slo_misses": warm["accepted_slo_misses"],
+        "warm_added_step_traces": warm["step_traces"] - cold["step_traces"],
+        "step_traces_per_bucket_replica": traces,
+        "max_traces_per_bucket_replica": max(traces.values()),
+        "bucket_count": len(buckets),
+        "arb_energy_j": warm["arb_energy_j"],
+    }
+    print("RESULT " + json.dumps(res), flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Parent: spawn 1- and 4-replica children, gate the scaling
+# ---------------------------------------------------------------------------
+
+
+def _spawn(replicas: int, args) -> dict:
+    env = dict(os.environ)
+    keep = [t for t in env.get("XLA_FLAGS", "").split()
+            if not t.startswith(_FORCE_FLAG)]
+    env["XLA_FLAGS"] = " ".join(keep + [f"{_FORCE_FLAG}={replicas}"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_ROOT, "src"), _ROOT,
+                    env.get("PYTHONPATH", "")) if p
+    )
+    cmd = [
+        sys.executable, os.path.abspath(__file__), "--child",
+        "--replicas", str(replicas), "--queue", str(args.queue),
+        "--target-mult", str(args.target_mult),
+    ]
+    if args.smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(
+        cmd, env=env, capture_output=True, text=True, timeout=1800
+    )
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError(f"child (replicas={replicas}) failed")
+    lines = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert lines, f"no RESULT line from child (replicas={replicas})"
+    return json.loads(lines[-1][len("RESULT "):])
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--smoke", action="store_true",
+                        help="untrained weights, CI-fast")
+    parser.add_argument("--queue", type=int, default=64,
+                        help="requests per drain (cold and warm each)")
+    parser.add_argument("--target-mult", type=float, default=1.5)
+    parser.add_argument("--min-scaling", type=float, default=3.0,
+                        help="required warm requests/step ratio 4 vs 1 replica")
+    parser.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    parser.add_argument("--replicas", type=int, default=1, help=argparse.SUPPRESS)
+    args, _ = parser.parse_known_args()  # tolerate the suite runner's argv
+
+    if args.child:
+        _child(args)
+        return
+
+    from benchmarks.common import append_bench_history, emit, git_tag
+
+    res = {n: _spawn(n, args) for n in (1, 4)}
+    t1 = res[1]["requests_per_step"]
+    t4 = res[4]["requests_per_step"]
+    scaling = t4 / t1
+    misses = sum(r["accepted_slo_misses"] for r in res.values())
+    warm_added = sum(r["warm_added_step_traces"] for r in res.values())
+    max_traces = max(r["max_traces_per_bucket_replica"] for r in res.values())
+    bucket_count = res[4]["bucket_count"]
+
+    emit(
+        "sharded_serving", 0.0,
+        f"requests_per_step_1={t1:.3f};requests_per_step_4={t4:.3f};"
+        f"scaling={scaling:.2f};accepted_slo_misses={misses};"
+        f"warm_added_traces={warm_added};"
+        f"max_traces_per_bucket_replica={max_traces};"
+        f"bucket_count={bucket_count};lanes_4={res[4]['lanes']};"
+        f"queue={args.queue}",
+    )
+
+    append_bench_history(os.path.join(_ROOT, "BENCH_serving.json"), {
+        "scenario": "sharded_serving",
+        "backend": "cpu-forced-host-devices",
+        "device_count": 4,
+        "tag": git_tag(),
+        "queue": args.queue,
+        "target_mult": args.target_mult,
+        "scaling_requests_per_step": scaling,
+        "replicas_1": res[1],
+        "replicas_4": res[4],
+    })
+    print("appended sharded_serving entry to BENCH_serving.json", flush=True)
+
+    ok = True
+    if scaling < args.min_scaling:
+        print(
+            f"FAIL: warm requests/step scaled only {scaling:.2f}x from 1 to "
+            f"4 replicas ({t1:.3f} -> {t4:.3f}); want >= {args.min_scaling}x"
+        )
+        ok = False
+    if misses:
+        print(f"FAIL: {misses} accepted-SLO misses across sharded drains")
+        ok = False
+    if warm_added:
+        print(f"FAIL: warm drain added {warm_added} fused-step traces")
+        ok = False
+    if max_traces > 1:
+        print(
+            f"FAIL: some (bucket, replica) pair compiled {max_traces}x "
+            "(want exactly one trace per pair)"
+        )
+        ok = False
+    if not ok:
+        sys.exit(1)
+    print("sharded_serving gates passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,12 @@
-"""Shared benchmark utilities: timing, CSV emission, a trained toy EdgeBERT."""
+"""Shared benchmark utilities: timing, CSV emission, a trained toy EdgeBERT,
+and the versioned bounded-history benchmark artifact."""
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import os
+import subprocess
 import time
 from typing import Callable, Dict, List
 
@@ -25,6 +28,62 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def all_rows() -> List[str]:
     return list(_rows)
+
+
+def git_tag() -> str:
+    """``git describe --always --dirty`` of the repo, or "unknown" outside
+    git — stamps benchmark-history entries so regressions bisect to a ref."""
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        tag = out.stdout.strip()
+        return tag if out.returncode == 0 and tag else "unknown"
+    except Exception:
+        return "unknown"
+
+
+BENCH_HISTORY_LIMIT = 20
+
+
+def append_bench_history(path: str, entry: Dict, *, limit: int = BENCH_HISTORY_LIMIT) -> Dict:
+    """Append one run to a versioned benchmark artifact instead of
+    overwriting it.
+
+    The artifact is ``{"version": 2, "history": [entry, ...]}`` with the
+    NEWEST entry last and the list bounded to ``limit`` (oldest dropped), so
+    CI can diff the newest entry against the previous comparable one rather
+    than only shape-checking a single overwritten snapshot.  A legacy flat
+    v1 payload found at ``path`` is migrated in place as the history's first
+    entry (tagged ``pre-history``).  Every entry should carry ``scenario``,
+    ``backend``, ``device_count`` and ``tag`` so diffs compare like with
+    like.  Returns the payload written."""
+    history: List[Dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+        except Exception:
+            old = None
+        if isinstance(old, dict):
+            if isinstance(old.get("history"), list) and old.get("version", 0) >= 2:
+                history = [e for e in old["history"] if isinstance(e, dict)]
+            elif old.get("version") == 1:
+                old = dict(old)
+                old.pop("version", None)
+                old.setdefault("scenario", "pallas_serving")
+                old.setdefault("device_count", 1)
+                old.setdefault("tag", "pre-history")
+                history = [old]
+    history.append(entry)
+    history = history[-max(int(limit), 1):]
+    payload = {"version": 2, "history": history}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload
 
 
 def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -31,10 +31,16 @@
 #     full-depth decode) at 0 accepted-SLO misses on BOTH decode runs;
 #   * pallas serving step: `parity=1` and `exit_parity=1` (use_pallas=True
 #     numerically interchangeable with the ref path over a full drain) at
-#     `pallas_slo_misses=0`, and the run must write a well-formed versioned
-#     BENCH_serving.json (step wall-clock p50/p95, energy/request,
-#     accepted-SLO miss rate, trace counts, ref-vs-pallas speedup).  No
+#     `pallas_slo_misses=0`, and the run must append a well-formed entry to
+#     the versioned BENCH_serving.json HISTORY (step wall-clock p50/p95,
+#     energy/request, accepted-SLO miss rate, trace counts, ref-vs-pallas
+#     speedup).  The newest entry is diffed against the previous comparable
+#     one (same scenario + backend) instead of only shape-checked.  No
 #     speedup gate: on CPU the kernels run in interpret mode.
+#   * sharded serving (bench_sharded_serving, forced host devices): warm
+#     requests retired per fused step must scale >= 3x from 1 to 4 replicas
+#     at `accepted_slo_misses=0`, `warm_added_traces=0`, and at most ONE
+#     compile per (bucket, replica) pair.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -52,6 +58,11 @@ echo "== bench_batched_dvfs --smoke =="
 batched_log=$(mktemp)
 python benchmarks/bench_batched_dvfs.py --smoke | tee "$batched_log"
 batched=$?
+
+echo "== bench_sharded_serving --smoke (1 vs 4 forced host devices) =="
+sharded_log=$(mktemp)
+python benchmarks/bench_sharded_serving.py --smoke | tee "$sharded_log"
+sharded=$?
 
 echo "== grep-gate: step_traces <= bucket_count (all scenarios) =="
 gate=0
@@ -185,6 +196,38 @@ else
         echo "gate ok: 0 accepted-SLO misses under use_pallas=True"
     fi
 fi
+echo "== grep-gate: sharded_serving (scaling >= 3x, 0 misses, warm traces) =="
+shl=$(grep '^sharded_serving,' "$sharded_log" | head -1)
+if [ -z "$shl" ]; then
+    echo "GATE FAIL: no sharded_serving telemetry emitted (multi-device"
+    echo "           scaling scenario missing from bench_sharded_serving)"
+    gate=1
+else
+    scal=$(echo "$shl" | grep -o 'scaling=[0-9.]*'); scal=${scal#*=}
+    if [ -z "$scal" ] || ! awk -v s="$scal" 'BEGIN { exit !(s >= 3.0) }'; then
+        echo "GATE FAIL: warm requests/step scaled only ${scal:-?}x from 1 to"
+        echo "           4 replicas (want >= 3.0x near-linear scaling)"
+        gate=1
+    else
+        echo "gate ok: ${scal}x step-throughput scaling 1 -> 4 replicas"
+    fi
+    smiss=$(echo "$shl" | grep -o 'accepted_slo_misses=[0-9]*'); smiss=${smiss#*=}
+    if [ -z "$smiss" ] || [ "$smiss" -gt 0 ]; then
+        echo "GATE FAIL: ${smiss:-?} accepted SLOs missed across sharded drains"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses under replica-routed admission"
+    fi
+    wtr=$(echo "$shl" | grep -o 'warm_added_traces=[0-9]*'); wtr=${wtr#*=}
+    mtr=$(echo "$shl" | grep -o 'max_traces_per_bucket_replica=[0-9]*'); mtr=${mtr#*=}
+    if [ -z "$wtr" ] || [ "$wtr" -gt 0 ] || [ -z "$mtr" ] || [ "$mtr" -gt 1 ]; then
+        echo "GATE FAIL: sharded fused step recompiled (warm_added=${wtr:-?},"
+        echo "           max per (bucket, replica)=${mtr:-?})"
+        gate=1
+    else
+        echo "gate ok: one compile per (bucket, replica), zero warm traces"
+    fi
+fi
 if python - <<'EOF'
 import json, sys
 try:
@@ -193,23 +236,52 @@ try:
 except Exception as e:
     print(f"GATE FAIL: BENCH_serving.json unreadable: {e}")
     sys.exit(1)
-need = {"version", "backend", "ref", "pallas", "speedup_ref_over_pallas_p50",
-        "logit_parity", "exit_depth_parity"}
-missing = need - b.keys()
-if missing or b["version"] < 1:
-    print(f"GATE FAIL: BENCH_serving.json malformed (missing {sorted(missing)})")
+if b.get("version", 0) < 2 or not isinstance(b.get("history"), list) or not b["history"]:
+    print("GATE FAIL: BENCH_serving.json is not a v2 bounded-history artifact")
+    sys.exit(1)
+hist = b["history"]
+pallas = [e for e in hist if e.get("scenario") == "pallas_serving"]
+if not pallas:
+    print("GATE FAIL: no pallas_serving entry in BENCH_serving.json history")
+    sys.exit(1)
+cur = pallas[-1]
+need = {"scenario", "backend", "device_count", "tag", "ref", "pallas",
+        "speedup_ref_over_pallas_p50", "logit_parity", "exit_depth_parity"}
+missing = need - cur.keys()
+if missing:
+    print(f"GATE FAIL: newest pallas_serving entry missing {sorted(missing)}")
     sys.exit(1)
 sk = {"step_wall_p50_ms", "step_wall_p95_ms", "energy_per_request_j",
       "accepted_slo_miss_rate", "step_traces"}
 for side in ("ref", "pallas"):
-    if sk - b[side].keys():
-        print(f"GATE FAIL: BENCH_serving.json {side} missing {sorted(sk - b[side].keys())}")
+    if sk - cur[side].keys():
+        print(f"GATE FAIL: newest entry {side} missing {sorted(sk - cur[side].keys())}")
         sys.exit(1)
-print(f"gate ok: BENCH_serving.json v{b['version']} ({b['backend']}, "
-      f"speedup {b['speedup_ref_over_pallas_p50']:.2f}x)")
+if not any(e.get("scenario") == "sharded_serving" for e in hist):
+    print("GATE FAIL: no sharded_serving entry in BENCH_serving.json history")
+    sys.exit(1)
+print(f"gate ok: BENCH_serving.json v{b['version']} history "
+      f"({len(hist)} entries, newest pallas_serving tag {cur['tag']}, "
+      f"speedup {cur['speedup_ref_over_pallas_p50']:.2f}x)")
+# diff newest vs previous comparable entry (same scenario + backend): trend
+# telemetry, plus a hard brake on parity regressions slipping through
+prev = [e for e in pallas[:-1] if e.get("backend") == cur["backend"]]
+if not prev:
+    print("diff: no previous comparable pallas_serving entry (first run)")
+    sys.exit(0)
+old = prev[-1]
+for side in ("ref", "pallas"):
+    for k in ("step_wall_p50_ms", "energy_per_request_j"):
+        a, c = old[side][k], cur[side][k]
+        rel = (c - a) / a if a else 0.0
+        print(f"diff {side}.{k}: {a:.4g} -> {c:.4g} ({rel:+.1%})")
+for k in ("logit_parity", "exit_depth_parity"):
+    if old.get(k) and not cur.get(k):
+        print(f"GATE FAIL: {k} regressed from previous comparable run")
+        sys.exit(1)
 EOF
 then :; else gate=1; fi
-rm -f "$batched_log"
+rm -f "$batched_log" "$sharded_log"
 
-echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched gate=$gate =="
-exit $(( tier1 || smoke || batched || gate ))
+echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched sharded=$sharded gate=$gate =="
+exit $(( tier1 || smoke || batched || sharded || gate ))

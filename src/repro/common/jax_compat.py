@@ -9,6 +9,7 @@ feature-detecting at every call site.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Sequence
 
 import jax
@@ -19,6 +20,29 @@ else:  # jax < 0.6: experimental namespace
     from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
 
 HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+# ``shard_map`` validates that every primitive in the body has a replication
+# rule unless told not to; ``pallas_call`` has none, so the serving stack's
+# Pallas-eligible fused steps MUST disable the check.  The kwarg was renamed
+# ``check_rep`` -> ``check_vma`` across jax versions — detect once here.
+_SM_PARAMS = frozenset(inspect.signature(shard_map).parameters)
+_NOREP_KW = (
+    {"check_vma": False} if "check_vma" in _SM_PARAMS
+    else {"check_rep": False} if "check_rep" in _SM_PARAMS
+    else {}
+)
+
+
+def shard_map_norep(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, on any supported jax.
+
+    Required whenever the mapped body may dispatch a ``pallas_call`` (no
+    replication rule exists for it) — i.e. for every serving fused step,
+    since Pallas eligibility is a static engine flag, not a trace property.
+    """
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_NOREP_KW
+    )
 
 
 def make_auto_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> "jax.sharding.Mesh":

@@ -27,6 +27,13 @@ Eligibility notes:
     derives one host-side from concrete (pruned) weights at server build
     time.  All-occupied masks are reported as None (dense weights gain
     nothing from tile skipping).
+  * every dispatcher stays eligible INSIDE `shard_map` (the multi-device
+    serving path): `pallas_call` has no replication rule, so the sharded
+    fused-step wrappers must go through `jax_compat.shard_map_norep`
+    (check_rep/check_vma off).  Nothing here may introduce a cross-shard
+    collective — each kernel sees only its replica's `[lanes_per_replica,
+    ...]` slab, which is what keeps a 1-replica mesh bit-identical to the
+    unsharded step.
 """
 from __future__ import annotations
 

@@ -62,7 +62,7 @@ gate is exactly that asymmetry: ``accepted_slo_misses == 0`` with
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, TYPE_CHECKING
+from typing import Any, List, Optional, Protocol, TYPE_CHECKING
 
 import numpy as np
 
@@ -87,6 +87,43 @@ class Quote:
     min_deadline_s: float   # earliest feasible relative deadline, headroom
                             # included — an SLO >= this is accepted
     feasible: bool          # requested deadline_s >= min_deadline_s
+    replica: Optional[int] = None   # clock domain this quote priced (None =
+                                    # whole fleet / single-replica server)
+
+
+class PlacementPolicy(Protocol):
+    """Chooses which per-replica quote an accepted contract is routed to.
+
+    ``choose`` receives one ``Quote`` per replica (all for the SAME request,
+    priced against that replica's lanes, queue share, and clock domain) and
+    returns the one to route to — the request is then PINNED to
+    ``quote.replica`` so the scheduler only refills that domain's lanes with
+    it.  Called only when at least one quote is feasible."""
+
+    def choose(self, quotes: List[Quote]) -> Quote: ...
+
+
+class LeastLoadedPlacement:
+    """Route to the replica quoting the earliest feasible deadline.
+
+    Greedy latency-optimal: the chosen replica is the one that can serve the
+    request SOONEST, which spreads load and maximizes each arrival's own
+    slack (hence the DVFS arbiter's energy headroom on that replica)."""
+
+    def choose(self, quotes: List[Quote]) -> Quote:
+        return min(quotes, key=lambda q: (q.min_deadline_s, q.wait_s))
+
+
+class DeadlinePackedPlacement:
+    """Route to the BUSIEST replica that still quotes the SLO feasible.
+
+    Best-fit packing: concentrating contracts on already-loaded domains
+    keeps the remaining replicas slack-rich — their arbiters can hold deep
+    low-(V, f) points (or the fleet can later park them entirely), and
+    future tight SLOs still find an empty domain to land on."""
+
+    def choose(self, quotes: List[Quote]) -> Quote:
+        return max(quotes, key=lambda q: (q.min_deadline_s, q.wait_s))
 
 
 @dataclass
@@ -127,6 +164,10 @@ class AdmissionController:
     fallback_steps:
              predicted steps for a request when the engine offers no
              ``predict_remaining_steps`` hook (bare schedulers in tests).
+    placement:
+             ``PlacementPolicy`` routing accepted contracts across a
+             sharded server's replicas (default ``LeastLoadedPlacement``).
+             Ignored on single-replica servers.
     """
 
     def __init__(
@@ -137,6 +178,7 @@ class AdmissionController:
         on_infeasible: str = "reject",
         max_best_effort_queue: Optional[int] = None,
         fallback_steps: float = 1.0,
+        placement: Optional[PlacementPolicy] = None,
     ):
         assert headroom >= 1.0, "headroom < 1 would quote below the estimate"
         assert on_infeasible in ("reject", "requote")
@@ -149,6 +191,32 @@ class AdmissionController:
         self.on_infeasible = on_infeasible
         self.max_best_effort_queue = max_best_effort_queue
         self.fallback_steps = float(fallback_steps)
+        self.placement: PlacementPolicy = (
+            LeastLoadedPlacement() if placement is None else placement
+        )
+
+    # ----------------------------------------------------------- replicas
+    def _replicas(self) -> int:
+        return int(getattr(self.server, "replicas", 1) or 1)
+
+    def _lane_range(self, replica: Optional[int]) -> range:
+        """Lane indices a quote scans: one replica's contiguous slab, or
+        every lane when ``replica`` is None (single-domain pricing)."""
+        if replica is None:
+            return range(self.sched.lanes)
+        lpr = int(
+            getattr(self.server, "lanes_per_replica", self.sched.lanes)
+        )
+        return range(replica * lpr, (replica + 1) * lpr)
+
+    @staticmethod
+    def _pin_ok(req: "Request", replica: Optional[int]) -> bool:
+        """A queued contract competes for a replica's lanes iff unpinned or
+        pinned to that replica (the scheduler enforces the same rule)."""
+        if replica is None:
+            return True
+        pin = getattr(req, "replica", None)
+        return pin is None or pin == replica
 
     # ------------------------------------------------------------- quoting
     def _predict_steps(self, bucket: int, req: "Request", depth: int) -> float:
@@ -172,25 +240,31 @@ class AdmissionController:
             )
         return steps * float(self.sched.step_time_fn(bucket))
 
-    def _outstanding_deadlines(self, bucket: int) -> List[float]:
+    def _outstanding_deadlines(
+        self, bucket: int, replica: Optional[int] = None
+    ) -> List[float]:
         """Absolute deadlines of every outstanding explicit contract in a
-        bucket — in-flight lanes AND queued (already-accepted) requests."""
+        bucket — in-flight lanes AND queued (already-accepted) requests.
+        With ``replica``, only that domain's lanes and the queued contracts
+        that could land on them (unpinned or same-pin)."""
         sched = self.sched
         out = []
         run = sched._open.get(bucket)
         if run is not None:
-            for i in range(sched.lanes):
+            for i in self._lane_range(replica):
                 r = run.lane_req[i]
                 if r is not None and r.deadline_s is not None:
                     out.append(r.arrival_s + r.deadline_s)
         out.extend(
             r.arrival_s + r.deadline_s
             for r in sched.queues.get(bucket, ())
-            if r.deadline_s is not None
+            if r.deadline_s is not None and self._pin_ok(r, replica)
         )
         return out
 
-    def _own_bucket_wait_s(self, bucket: int) -> float:
+    def _own_bucket_wait_s(
+        self, bucket: int, replica: Optional[int] = None
+    ) -> float:
         """Upper bound on the wait for a lane in the request's OWN bucket.
 
         The key subtlety is that accepted contracts do NOT free their lanes
@@ -208,19 +282,27 @@ class AdmissionController:
         lanes.  Per-lane free times: zero for a free lane, the contract's
         own absolute deadline for an in-flight explicit lane, one fused
         step for a preemptible budget-free lane, else that lane's predicted
-        retire."""
+        retire.
+
+        With ``replica``, the same pricing restricted to that clock domain:
+        its lane slab, and only the queued contracts that could land there
+        (unpinned or same-pin) count toward the backlog."""
         sched = self.sched
         dt = float(sched.step_time_fn(bucket))
-        deadlines = self._outstanding_deadlines(bucket)
-        if len(deadlines) >= sched.lanes:
-            d_l = sorted(deadlines, reverse=True)[sched.lanes - 1]
+        lanes_idx = self._lane_range(replica)
+        lanes_n = len(lanes_idx)
+        deadlines = self._outstanding_deadlines(bucket, replica)
+        if len(deadlines) >= lanes_n:
+            d_l = sorted(deadlines, reverse=True)[lanes_n - 1]
             return max(0.0, d_l - sched.now_s)
         k = sum(
-            1 for r in sched.queues.get(bucket, ()) if r.deadline_s is not None
+            1
+            for r in sched.queues.get(bucket, ())
+            if r.deadline_s is not None and self._pin_ok(r, replica)
         )
         run = sched._open.get(bucket)
         free_at = []
-        for i in range(sched.lanes):
+        for i in lanes_idx:
             req = run.lane_req[i] if run is not None else None
             if req is None:
                 free_at.append(0.0)
@@ -233,7 +315,7 @@ class AdmissionController:
             else:
                 rem = self._predict_steps(bucket, req, int(run.lane_depth[i]))
                 free_at.append(rem * dt)
-        return sorted(free_at)[min(k, sched.lanes - 1)]
+        return sorted(free_at)[min(k, lanes_n - 1)]
 
     def _slow_step_time_s(self, bucket: int) -> Optional[float]:
         """One fused step of ``bucket`` at the SLOWEST operating point — the
@@ -300,7 +382,7 @@ class AdmissionController:
             total += steal
         return total
 
-    def _cross_engine_backlog_s(self) -> float:
+    def _cross_engine_backlog_s(self, replica: Optional[int] = None) -> float:
         """Clock time OTHER ENGINES' in-flight lanes steal on the shared
         arbiter.  One LDO/ADPLL pair serves every server on the arbiter, so
         a classifier quote that ignores a co-resident decoder's contracts
@@ -308,20 +390,37 @@ class AdmissionController:
         arbiter exists for — the cross-ENGINE half of the pinned
         counterexample.
 
-        Each foreign lane is priced by its remaining work at the SLOWEST
-        operating point: predicted remaining layers when the lane publishes
-        them (decode), else the conservative full remaining depth, times the
-        lane's own admitted per-layer cycle cost.  Summed per lane — lanes
-        stepping together are charged the max, so the sum over-counts
-        concurrency, which only errs conservative (the quote contract is
-        one-sided).  Foreign queued work is not visible through the arbiter;
-        the headroom multiplier absorbs it."""
-        arb = getattr(self.server, "arbiter", None)
+        Each foreign lane is priced by the SMALLER of two valid upper
+        bounds: its remaining work serialized at the SLOWEST operating point
+        (predicted remaining layers when the lane publishes them, else the
+        conservative full remaining depth, times the lane's admitted
+        per-layer cycle cost — no arbiter schedule runs slower), capped by
+        the lane's own deadline structure — an admitted contract occupies
+        the clock at most until its own absolute deadline, after which only
+        its max-op escalation tail remains (the arbiter pins overdue lanes
+        at the top table entry).  Slow-op-only pricing over-rejected
+        feasible mixes whenever a tight-deadline foreign lane carried deep
+        remaining work: its deadline already bounds the steal far below the
+        slow-op serialization.  Summed per lane — lanes stepping together
+        are charged the max, so the sum over-counts concurrency, which only
+        errs conservative (the quote contract is one-sided).  Foreign queued
+        work is not visible through the arbiter; the headroom multiplier
+        absorbs it.
+
+        With ``replica``, prices that clock domain's OWN arbiter — each
+        replica carries an independent LDO/ADPLL pair, so foreign lanes on
+        other replicas' arbiters steal nothing here."""
+        arbs = getattr(self.server, "arbiters", None)
+        if replica is not None and arbs:
+            arb = arbs[replica]
+        else:
+            arb = getattr(self.server, "arbiter", None)
         if arb is None:
             return 0.0
         sid = getattr(self.server, "_sid", None)
         ctrl = arb.c
         slow_hz = ctrl.table[0].freq_hz
+        max_hz = ctrl.max_op.freq_hz
         n_layers = ctrl.stats.n_layers
         total = 0.0
         for key, clk in arb._lanes.items():
@@ -335,12 +434,25 @@ class AdmissionController:
                 rem = float(clk.pred_layers_remaining)
             else:
                 rem = max(float(n_layers - clk.depth), 0.0)
-            total += rem * clk.cycles_per_layer / slow_hz
+            serial = rem * clk.cycles_per_layer / slow_hz
+            capped = (
+                max(0.0, clk.deadline_s - arb.now_s)
+                + rem * clk.cycles_per_layer / max_hz
+            )
+            total += min(serial, capped)
         return total
 
-    def quote(self, req: "Request") -> Quote:
+    def quote(self, req: "Request", replica: Optional[int] = None) -> Quote:
         """Price an explicit-SLO request against the current system state.
         Pure — does not enqueue anything.
+
+        On a sharded server (``server.replicas > 1``) and with no explicit
+        ``replica``, every clock domain is quoted independently and the
+        placement policy picks among the feasible ones (the request would be
+        pinned there on admission); with no feasible domain the quote with
+        the earliest ``min_deadline_s`` is returned, so a rejected caller
+        resubmitting at the quote lands on the least-bad replica.  A request
+        already pinned (``req.replica``) is only quoted against its domain.
 
         Assumes EDF ties resolve in arrival order (they do: the queue pop
         keeps the first of equal deadlines), i.e. a later arrival with the
@@ -352,13 +464,29 @@ class AdmissionController:
         sched.sync_clock()      # shared-arbiter time may have moved while
                                 # this server was idle: price waits from the
                                 # true now, not a stale clock
+        if replica is None:
+            pin = getattr(req, "replica", None)
+            if pin is not None:
+                replica = int(pin)
+            elif self._replicas() > 1:
+                quotes = [
+                    self.quote(req, replica=r) for r in range(self._replicas())
+                ]
+                feasible = [q for q in quotes if q.feasible]
+                if feasible:
+                    return self.placement.choose(feasible)
+                return min(quotes, key=lambda q: q.min_deadline_s)
         bucket = sched.bucket_for(sched.engine.bucket_key(req))
         steps = self._predict_steps(bucket, req, req.ckpt_depth)
         service = self._service_s(bucket, steps)
         wait = (
-            self._own_bucket_wait_s(bucket)
+            self._own_bucket_wait_s(bucket, replica)
             + self._cross_bucket_backlog_s(bucket)
-            + self._cross_engine_backlog_s()
+            + (
+                self._cross_engine_backlog_s()
+                if replica is None
+                else self._cross_engine_backlog_s(replica)
+            )
         )
         min_deadline = (wait + service) * self.headroom
         feasible = (
@@ -371,6 +499,7 @@ class AdmissionController:
             wait_s=wait,
             min_deadline_s=min_deadline,
             feasible=feasible,
+            replica=replica,
         )
 
     # ----------------------------------------------------------- admission
@@ -412,12 +541,17 @@ class AdmissionController:
             return AdmissionDecision(True, "accepted", bucket, None, shed)
         q = self.quote(req)
         if q.feasible:
+            if q.replica is not None:
+                req.replica = q.replica     # placement pin: the scheduler
+                                            # only refills that domain's lanes
             self._do_submit(req)
             sched.admission_stats["accepted"] += 1
             return AdmissionDecision(True, "accepted", bucket, q)
         if self.on_infeasible == "requote":
             req.quoted_deadline_s = req.deadline_s
             req.deadline_s = q.min_deadline_s
+            if q.replica is not None:
+                req.replica = q.replica
             self._do_submit(req)
             sched.admission_stats["requoted"] += 1
             return AdmissionDecision(True, "requoted", bucket, q)

@@ -480,7 +480,8 @@ class BatchedDVFSArbiter:
         return remaining * st.cycles_per_layer / t_rem
 
     def step(
-        self, active_lanes: Sequence, layers: Optional[Dict] = None
+        self, active_lanes: Sequence, layers: Optional[Dict] = None,
+        *, floor_hz: float = 0.0,
     ) -> ArbiterStepDecision:
         """Arbitrate + account ONE fused step over ``active_lanes``.
 
@@ -497,11 +498,21 @@ class BatchedDVFSArbiter:
         layers the off-ramp let run.  The (V, f) decision itself is made
         from pre-step state (the refreshed per-lane predictions), exactly as
         in the per-layer case.
+
+        ``floor_hz``: barrier-aware pacing for replicated clock domains.  The
+        fused step is SPMD — every replica leaves the collective together, so
+        the FLEET step lasts as long as its slowest domain.  Running a domain
+        slower than the fleet's tightest lane requirement saves no energy
+        (the tight domain sets the wall time either way) and silently spends
+        OTHER domains' deadline slack through the barrier, so the engine
+        passes the fleet-wide max required frequency as a floor on every
+        domain's pick.  Single-domain serving passes nothing: the floor
+        degenerates to this arbiter's own requirement.
         """
         lanes = list(active_lanes)
         assert lanes, "step() needs at least one active lane"
         need = {i: self.required_hz(i) for i in lanes}
-        op = self.c.op_for_freq(max(need.values()))
+        op = self.c.op_for_freq(max(max(need.values()), floor_hz))
 
         switched = self.cur_op is not None and op != self.cur_op
         if switched:
@@ -534,6 +545,17 @@ class BatchedDVFSArbiter:
         self.now_s += dt
         self.steps += 1
         return ArbiterStepDecision(op=op, dt_s=dt, switched=switched, need_hz=need)
+
+    def advance_to(self, t: float) -> None:
+        """Fast-forward the modeled clock to ``t`` (monotone; no-op if behind).
+
+        Replicated serving runs one arbiter per device, but the fused step is
+        SPMD: every replica leaves the collective barrier together, so after
+        arbitrating its own lanes each replica's clock is pulled up to the
+        fleet max.  Waiting at a barrier burns wall time, not operating-point
+        changes — no energy or (V, f) state is touched.
+        """
+        self.now_s = max(self.now_s, float(t))
 
     def checkpoint_lane(self, lane) -> _LaneClock:
         """Preemption support: detach a lane's clock so the lane index can be

@@ -108,6 +108,9 @@ class Request:
                                         # never mixes the two
     finish_time: float = 0.0
     bucket: Optional[int] = None        # length bucket the scheduler assigned
+    replica: Optional[int] = None       # device replica the request is pinned
+                                        # to (admission placement routing);
+                                        # None = any replica may take it
     # ---- admission / preemption lifecycle ----
     checkpoint: Optional[Any] = None    # engine-opaque lane snapshot while
                                         # the request sits preempted in queue
@@ -130,6 +133,52 @@ class Request:
     latency_s: Optional[float] = None   # modeled accelerator latency (DVFS)
     op_vdd: Optional[float] = None      # selected / slowest operating point
     op_freq_hz: Optional[float] = None
+
+
+def _expand_arbiters(arbiter, replicas: int) -> list:
+    """Normalize the ``arbiter=`` ctor argument to one arbiter PER replica.
+
+    Replicated serving models each device as its OWN LDO/ADPLL clock domain:
+    a single arbiter is kept for replica 0 and siblings sharing its
+    controller (cycle model, DVFS table, online calibrator) are built for
+    the rest, so every replica makes independent (V, f) decisions while
+    pricing work identically.  A sequence is taken verbatim (it must have
+    one arbiter per replica)."""
+    if arbiter is None:
+        return []
+    if isinstance(arbiter, (list, tuple)):
+        arbs = list(arbiter)
+        assert len(arbs) == replicas, (
+            f"need one arbiter per replica: got {len(arbs)} for {replicas}"
+        )
+        return arbs
+    if replicas == 1:
+        return [arbiter]
+    from repro.serving.dvfs import BatchedDVFSArbiter
+
+    return [arbiter] + [
+        BatchedDVFSArbiter(arbiter.c) for _ in range(replicas - 1)
+    ]
+
+
+def _resolve_mesh(replicas: int, mesh):
+    """Resolve the (replicas, mesh) ctor pair: ``replicas > 1`` without a
+    mesh builds one over the data axis; a mesh alone sets the replica count;
+    both must agree.  Returns ``(replicas, mesh)`` — mesh None means the
+    engine runs the unsharded single-device path."""
+    assert replicas >= 1
+    if mesh is None and replicas == 1:
+        return 1, None
+    if mesh is None:
+        from repro.common.jax_compat import make_auto_mesh
+
+        mesh = make_auto_mesh((replicas,), ("data",))
+    if replicas == 1:
+        replicas = mesh.size
+    assert mesh.size == replicas, (
+        f"mesh has {mesh.size} devices but replicas={replicas}"
+    )
+    return replicas, mesh
 
 
 # unique per-server prefix for arbiter lane keys: with cross-bucket time
@@ -205,6 +254,8 @@ class ClassifierServer:
         policy: Optional[SchedulingPolicy] = None,
         preempt: bool = False,
         use_pallas: bool = False,
+        replicas: int = 1,
+        mesh=None,
     ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
         assert dvfs is None or arbiter is None, (
@@ -213,11 +264,19 @@ class ClassifierServer:
         )
         self.model = model
         self.params = params
-        self.lanes = batch_lanes
+        # ``replicas > 1`` (or an explicit mesh) shards the fused step over a
+        # device mesh: ``batch_lanes`` lanes PER replica, flat global lane
+        # indices, replica of lane i = i // lanes_per_replica (contiguous
+        # slabs match the leading-axis sharding), one DVFS arbiter (clock
+        # domain) per replica
+        self.replicas, self._mesh = _resolve_mesh(replicas, mesh)
+        self.lanes_per_replica = batch_lanes
+        self.lanes = batch_lanes * self.replicas
         self.cfg = model.cfg
         self.threshold = model.cfg.edgebert.early_exit.entropy_threshold
         self.dvfs = dvfs
-        self.arbiter = arbiter
+        self.arbiters = _expand_arbiters(arbiter, self.replicas)
+        self.arbiter = self.arbiters[0] if self.arbiters else None
         self.use_pallas = use_pallas
         # STATIC block-occupancy masks for the shared encoder MLP, derived
         # host-side from the concrete (post-pruning) weights; None entries /
@@ -228,9 +287,9 @@ class ClassifierServer:
 
             self._block_masks = dispatch.mlp_block_masks(params["layer"]["mlp"])
         self._sid = next(_SERVER_IDS)
-        ctrl = arbiter.c if arbiter is not None else dvfs
+        ctrl = self.arbiter.c if self.arbiter is not None else dvfs
         self.sched = LaneScheduler(
-            batch_lanes, self, buckets=buckets, policy=policy,
+            self.lanes, self, buckets=buckets, policy=policy,
             step_time_fn=self._step_time_s,
             # with a hw model every request carries at least the controller
             # target as an implicit deadline, so EDF slack — not blind round
@@ -241,7 +300,11 @@ class ClassifierServer:
         # per-bucket engine state: {"h": [lanes, S, D], "len": [lanes],
         # "out": last step's host copies} — several buckets open at once
         self._bstate: Dict[int, Dict[str, Any]] = {}
-        self._traces = {"embed": {}, "step": {}, "insert": {}}  # keyed by S
+        # "embed"/"step"/"insert" keyed by S; "step_replica" keyed by
+        # (S, replicas) — the per-(bucket, mesh) recompile telemetry the
+        # sharded CI gates read (identical to (S, 1) on the unsharded path,
+        # so 1-replica sharded and unsharded counters match bit-for-bit)
+        self._traces = {"embed": {}, "step": {}, "insert": {}, "step_replica": {}}
         # arbiter counters attributable to THIS server's drains (the arbiter
         # itself is drain-global and may be shared across task servers)
         self._arb_acc = {
@@ -268,9 +331,19 @@ class ClassifierServer:
         def step_fn(params, h, active, lengths, threshold):
             S = h.shape[1]                       # static at trace time
             self._traces["step"][S] = self._traces["step"].get(S, 0) + 1
-            return step_math.classifier_fused_step(
+            rk = (S, self.replicas)
+            self._traces["step_replica"][rk] = (
+                self._traces["step_replica"].get(rk, 0) + 1
+            )
+            if self._mesh is None:
+                return step_math.classifier_fused_step(
+                    model, params, h, active, lengths, threshold,
+                    use_pallas=self.use_pallas, block_masks=self._block_masks,
+                )
+            return step_math.sharded_classifier_fused_step(
                 model, params, h, active, lengths, threshold,
-                use_pallas=self.use_pallas, block_masks=self._block_masks,
+                mesh=self._mesh, use_pallas=self.use_pallas,
+                block_masks=self._block_masks,
             )
 
         def insert_fn(h, lane, h_new):
@@ -316,11 +389,24 @@ class ClassifierServer:
         """Authoritative shared timeline: the arbiter's clock.  One LDO/ADPLL
         serves every server sharing the arbiter, so arrival stamps and EDF
         slack must fast-forward past time OTHER servers spent on it (the
-        scheduler syncs at every submit() and step())."""
-        return None if self.arbiter is None else self.arbiter.now_s
+        scheduler syncs at every submit() and step()).  With replicated
+        clock domains the fleet clock is the max — ``lanes_step``'s barrier
+        sync keeps the replicas within one fused step of it anyway."""
+        if not self.arbiters:
+            return None
+        return max(a.now_s for a in self.arbiters)
 
     def _arb_key(self, bucket: int, lane: int):
         return (self._sid, bucket, lane)
+
+    def lane_domain(self, lane: int) -> int:
+        """Scheduler routing hook: the replica (clock domain) a lane belongs
+        to.  Lane slabs are contiguous so slab r is exactly the rows device r
+        computes under the leading-axis sharding."""
+        return lane // self.lanes_per_replica
+
+    def _arb_of(self, lane: int) -> "BatchedDVFSArbiter":
+        return self.arbiters[self.lane_domain(lane)]
 
     def _explicit_budget_remaining(self, req: Request) -> Optional[float]:
         """An explicit SLO is submission-anchored (queue wait counts), but
@@ -382,8 +468,8 @@ class ClassifierServer:
             st["h"], jnp.int32(lane), self._embed(self.params, jnp.asarray(toks)[None])
         )
         st["len"][lane] = len(req.tokens)
-        if self.arbiter is not None:
-            self.arbiter.admit(
+        if self.arbiters:
+            self._arb_of(lane).admit(
                 self._arb_key(bucket, lane),
                 deadline_s=self._explicit_budget_remaining(req),
                 cycles_per_layer=self._cycles_for(bucket),
@@ -392,24 +478,50 @@ class ClassifierServer:
     def lanes_step(self, bucket: int, active: np.ndarray):
         st = self._bstate[bucket]
         decision = None
-        if self.arbiter is not None:
-            # ONE (V, f) for this fused step, arbitrated across active lanes.
-            # Telemetry deltas accrue HERE (not in run()) so step()-driven
-            # serving attributes its arbiter work to this server too; the
-            # actual step duration feeds the scheduler clock via step_dt_s.
-            before = self.arbiter.telemetry()
-            decision = self.arbiter.step(
-                [self._arb_key(bucket, i) for i in range(self.lanes) if active[i]]
+        if self.arbiters:
+            # ONE (V, f) PER CLOCK DOMAIN for this fused step: each replica's
+            # arbiter arbitrates its own active lane slab independently, then
+            # every clock fast-forwards to the fleet max — the SPMD barrier
+            # (devices leave the collective step together; waiting burns wall
+            # time, not operating-point state).  Telemetry deltas accrue HERE
+            # (not in run()) so step()-driven serving attributes its arbiter
+            # work to this server too; the actual step duration feeds the
+            # scheduler clock via step_dt_s.  With one replica this is
+            # exactly the single shared-clock arbitration.
+            before = [a.telemetry() for a in self.arbiters]
+            decisions = []
+            L = self.lanes_per_replica
+            slabs = [
+                (arb, [
+                    self._arb_key(bucket, i)
+                    for i in range(r * L, (r + 1) * L) if active[i]
+                ])
+                for r, arb in enumerate(self.arbiters)
+            ]
+            # barrier-aware pacing: the fleet step lasts as long as its
+            # slowest domain, so no domain may pick a point below the
+            # fleet's tightest lane requirement (see BatchedDVFSArbiter.step)
+            floor = max(
+                (arb.required_hz(k) for arb, keys in slabs for k in keys),
+                default=0.0,
             )
-            after = self.arbiter.telemetry()
-            for k in self._arb_acc:
-                self._arb_acc[k] += after[k] - before[k]
+            for arb, keys in slabs:
+                if keys:
+                    decisions.append(arb.step(keys, floor_hz=floor))
+            t = max(a.now_s for a in self.arbiters)
+            for a in self.arbiters:
+                a.advance_to(t)
+            for b4, a in zip(before, self.arbiters):
+                after = a.telemetry()
+                for k in self._arb_acc:
+                    self._arb_acc[k] += after[k] - b4[k]
+            decision = decisions[0] if len(decisions) == 1 else tuple(decisions)
             # advance the scheduler clock TO the shared arbiter clock rather
             # than by an independently summed dt: combined with the
             # clock_s() sync at submit()/step(), every server sharing the
             # arbiter judges EDF slack, queue waits, and admission quotes on
             # the one hardware timeline deadlines are judged by
-            st["dt"] = max(self.arbiter.now_s - self.sched.now_s, 0.0)
+            st["dt"] = max(t - self.sched.now_s, 0.0)
         h, lg, ent, retire = self._step(
             self.params, st["h"], jnp.asarray(active), jnp.asarray(st["len"]),
             jnp.float32(self.threshold),
@@ -423,9 +535,9 @@ class ClassifierServer:
     ) -> bool:
         _, ent, retire, _ = out
         req.entropy_trace.append(float(ent[lane]))
-        if self.arbiter is not None and depth == 1:
+        if self.arbiters and depth == 1:
             # first off-ramp evaluated: Alg. 1 line 2 prediction goes live
-            self.arbiter.observe_entropy(
+            self._arb_of(lane).observe_entropy(
                 self._arb_key(bucket, lane), float(ent[lane])
             )
         return bool(retire[lane]) or depth >= self.cfg.n_layers
@@ -435,8 +547,8 @@ class ClassifierServer:
         req.result = lg[lane]
         req.exit_layer = depth
         req.finish_time = time.time()
-        if self.arbiter is not None:
-            rep = self.arbiter.retire(self._arb_key(bucket, lane), depth)
+        if self.arbiters:
+            rep = self._arb_of(lane).retire(self._arb_key(bucket, lane), depth)
             req.energy_j = rep.energy_j
             req.latency_s = rep.latency_s
             req.op_vdd = rep.slowest_op.vdd
@@ -488,8 +600,10 @@ class ClassifierServer:
             "h": np.asarray(st["h"][lane]),
             "len": int(st["len"][lane]),
         }
-        if self.arbiter is not None:
-            payload["clock"] = self.arbiter.checkpoint_lane(
+        if self.arbiters:
+            # the clock payload is RELATIVE (remaining budget + elapsed run
+            # time), so it restores onto ANY replica's arbiter bit-identically
+            payload["clock"] = self._arb_of(lane).checkpoint_lane(
                 self._arb_key(bucket, lane)
             )
         return payload
@@ -504,8 +618,8 @@ class ClassifierServer:
             st["h"], jnp.int32(lane), jnp.asarray(payload["h"])[None]
         )
         st["len"][lane] = payload["len"]
-        if self.arbiter is not None:
-            self.arbiter.restore_lane(
+        if self.arbiters:
+            self._arb_of(lane).restore_lane(
                 self._arb_key(bucket, lane), payload["clock"]
             )
 
@@ -535,6 +649,13 @@ class ClassifierServer:
             "embed_traces": sum(self._traces["embed"].values()),
             "insert_traces": sum(self._traces["insert"].values()),
             "step_traces_per_bucket": dict(self._traces["step"]),
+            # per-(bucket, mesh) recompile telemetry: JSON-safe "SxR" keys,
+            # identical between unsharded and 1-replica sharded runs
+            "step_traces_per_bucket_replica": {
+                f"{s}x{r}": n
+                for (s, r), n in sorted(self._traces["step_replica"].items())
+            },
+            "replicas": self.replicas,
             "buckets_used": st["buckets_used"],
             "bucket_steps": st["bucket_steps"],
             "lane_occupancy": st["lane_occupancy"],
@@ -621,14 +742,22 @@ class DecoderServer:
         exit_threshold: Optional[float] = None,
         exit_calibrator: Optional[Any] = None,
         use_pallas: bool = False,
+        replicas: int = 1,
+        mesh=None,
     ):
         self.model = model
         self.params = params
-        self.lanes = batch_lanes
+        # replicated decode: ``batch_lanes`` lanes per replica, the KV cache
+        # sharded on its lane axis, one DVFS clock domain per replica (see
+        # ClassifierServer — the lane-slab layout is identical)
+        self.replicas, self._mesh = _resolve_mesh(replicas, mesh)
+        self.lanes_per_replica = batch_lanes
+        self.lanes = batch_lanes * self.replicas
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.n_layers = model.cfg.n_layers
-        self.arbiter = arbiter
+        self.arbiters = _expand_arbiters(arbiter, self.replicas)
+        self.arbiter = self.arbiters[0] if self.arbiters else None
         self.threshold = exit_threshold
         # static routing of the fused step's eligible inner math to the
         # Pallas kernels (decode attention stays ref — it fuses the KV
@@ -641,9 +770,9 @@ class DecoderServer:
             )
         self.calib = exit_calibrator
         self._sid = next(_SERVER_IDS)
-        ctrl = arbiter.c if arbiter is not None else None
+        ctrl = self.arbiter.c if self.arbiter is not None else None
         self.sched = LaneScheduler(
-            batch_lanes, self, buckets=buckets, policy=policy, preempt=preempt,
+            self.lanes, self, buckets=buckets, policy=policy, preempt=preempt,
             step_time_fn=self._step_time_s,
             default_deadline_s=ctrl.target_latency_s if ctrl is not None else None,
         )
@@ -651,7 +780,9 @@ class DecoderServer:
         # per-bucket engine state: {"cache", "pos": [lanes], "cur": [lanes, 1],
         # "reqs": per-lane Request refs, "out"} — several buckets open at once
         self._bstate: Dict[int, Dict[str, Any]] = {}
-        self._traces = {"decode": {}, "prefill": {}}  # keyed by bucket
+        # "decode"/"prefill" keyed by bucket; "decode_replica" keyed by
+        # (bucket, replicas) — per-(bucket, mesh) recompile telemetry
+        self._traces = {"decode": {}, "prefill": {}, "decode_replica": {}}
         self._arb_acc = {
             "op_switches": 0, "switch_time_s": 0.0,
             "switch_energy_j": 0.0, "total_energy_j": 0.0,
@@ -668,17 +799,34 @@ class DecoderServer:
         # math): the closures own ONLY the host-side trace counters — decode
         # advances every lane at its own position, the EE variant adds the
         # per-token off-ramp, prefill is one fixed-shape trace per bucket
-        def decode_fn(params, cache, tokens, pos, bucket):
+        def _bump_decode(bucket):
             self._traces["decode"][bucket] = self._traces["decode"].get(bucket, 0) + 1
-            return step_math.decoder_decode(
-                model, params, cache, tokens, pos, use_pallas=self.use_pallas
+            rk = (bucket, self.replicas)
+            self._traces["decode_replica"][rk] = (
+                self._traces["decode_replica"].get(rk, 0) + 1
+            )
+
+        def decode_fn(params, cache, tokens, pos, bucket):
+            _bump_decode(bucket)
+            if self._mesh is None:
+                return step_math.decoder_decode(
+                    model, params, cache, tokens, pos, use_pallas=self.use_pallas
+                )
+            return step_math.sharded_decoder_decode(
+                model, params, cache, tokens, pos,
+                mesh=self._mesh, use_pallas=self.use_pallas,
             )
 
         def decode_ee_fn(params, cache, tokens, pos, threshold, bucket):
-            self._traces["decode"][bucket] = self._traces["decode"].get(bucket, 0) + 1
-            return step_math.decoder_decode_ee(
+            _bump_decode(bucket)
+            if self._mesh is None:
+                return step_math.decoder_decode_ee(
+                    model, params, cache, tokens, pos, threshold,
+                    use_pallas=self.use_pallas,
+                )
+            return step_math.sharded_decoder_decode_ee(
                 model, params, cache, tokens, pos, threshold,
-                use_pallas=self.use_pallas,
+                mesh=self._mesh, use_pallas=self.use_pallas,
             )
 
         def prefill_fn(params, cache, tokens, lane, length):
@@ -735,11 +883,21 @@ class DecoderServer:
 
     def clock_s(self) -> Optional[float]:
         """Authoritative shared timeline: the arbiter's clock (classifier and
-        decoder servers sharing one arbiter arbitrate on ONE timeline)."""
-        return None if self.arbiter is None else self.arbiter.now_s
+        decoder servers sharing one arbiter arbitrate on ONE timeline).
+        Replicated domains report the fleet max (barrier-synced anyway)."""
+        if not self.arbiters:
+            return None
+        return max(a.now_s for a in self.arbiters)
 
     def _arb_key(self, bucket: int, lane: int):
         return (self._sid, bucket, lane)
+
+    def lane_domain(self, lane: int) -> int:
+        """Scheduler routing hook: the replica (clock domain) of a lane."""
+        return lane // self.lanes_per_replica
+
+    def _arb_of(self, lane: int) -> "BatchedDVFSArbiter":
+        return self.arbiters[self.lane_domain(lane)]
 
     def _explicit_budget_remaining(self, req: Request) -> Optional[float]:
         """Submission-anchored SLO minus time already spent in queue (the
@@ -820,26 +978,27 @@ class DecoderServer:
         st["pos"][lane] = len(req.tokens) - 1
         st["cur"][lane, 0] = req.tokens[-1]
         st["reqs"][lane] = req
-        if self.arbiter is not None:
+        if self.arbiters:
             key = self._arb_key(bucket, lane)
-            self.arbiter.admit(
+            arb = self._arb_of(lane)
+            arb.admit(
                 key,
                 deadline_s=self._explicit_budget_remaining(req),
                 cycles_per_layer=self._cycles_token_layer(bucket),
             )
-            self.arbiter.set_remaining_layers(
+            arb.set_remaining_layers(
                 key, self._predicted_layers_remaining(req)
             )
 
     def lanes_step(self, bucket: int, active: np.ndarray):
         st = self._bstate[bucket]
-        if self.arbiter is not None:
+        if self.arbiters:
             # refresh every active lane's predicted remaining layers BEFORE
             # the shared-clock decision: the (V, f) pick budgets the
             # position-binned token predictions against each lane's deadline
             for i in range(self.lanes):
                 if active[i] and st["reqs"][i] is not None:
-                    self.arbiter.set_remaining_layers(
+                    self._arb_of(i).set_remaining_layers(
                         self._arb_key(bucket, i),
                         self._predicted_layers_remaining(st["reqs"][i]),
                     )
@@ -864,24 +1023,47 @@ class DecoderServer:
             )
             exit_layers = np.full(self.lanes, self.n_layers, np.int32)
             first_ent = None
-        if self.arbiter is not None:
-            # one (V, f) across the stepped lanes, each token charged at its
-            # REALIZED exit depth (the decision was made from pre-step
-            # predictions above); deltas accrue per server like the
-            # classifier, and the actual dt feeds the scheduler clock
-            before = self.arbiter.telemetry()
-            decision = self.arbiter.step(
-                [self._arb_key(bucket, i) for i in range(self.lanes) if active[i]],
-                layers={
-                    self._arb_key(bucket, i): int(exit_layers[i])
-                    for i in range(self.lanes)
-                    if active[i]
-                },
+        if self.arbiters:
+            # one (V, f) PER CLOCK DOMAIN across the stepped lanes, each
+            # token charged at its REALIZED exit depth (the decision was made
+            # from pre-step predictions above); after arbitration every
+            # replica clock barrier-syncs to the fleet max (SPMD lockstep —
+            # see ClassifierServer.lanes_step).  Deltas accrue per server
+            # like the classifier, and the actual dt feeds the scheduler
+            # clock.
+            before = [a.telemetry() for a in self.arbiters]
+            L = self.lanes_per_replica
+            slabs = [
+                (arb, [
+                    self._arb_key(bucket, i)
+                    for i in range(r * L, (r + 1) * L) if active[i]
+                ])
+                for r, arb in enumerate(self.arbiters)
+            ]
+            # barrier-aware pacing floor, as in ClassifierServer.lanes_step
+            floor = max(
+                (arb.required_hz(k) for arb, keys in slabs for k in keys),
+                default=0.0,
             )
-            after = self.arbiter.telemetry()
-            for k in self._arb_acc:
-                self._arb_acc[k] += after[k] - before[k]
-            st["dt"] = max(self.arbiter.now_s - self.sched.now_s, 0.0)
+            for r, (arb, keys) in enumerate(slabs):
+                if keys:
+                    arb.step(
+                        keys,
+                        layers={
+                            self._arb_key(bucket, i): int(exit_layers[i])
+                            for i in range(r * L, (r + 1) * L)
+                            if active[i]
+                        },
+                        floor_hz=floor,
+                    )
+            t = max(a.now_s for a in self.arbiters)
+            for a in self.arbiters:
+                a.advance_to(t)
+            for b4, a in zip(before, self.arbiters):
+                after = a.telemetry()
+                for k in self._arb_acc:
+                    self._arb_acc[k] += after[k] - b4[k]
+            st["dt"] = max(t - self.sched.now_s, 0.0)
         st["out"] = (
             np.asarray(jnp.argmax(logits[:, -1], axis=-1)),
             exit_layers,
@@ -928,10 +1110,10 @@ class DecoderServer:
         acc["retired"] += 1
         acc["tokens"] += len(req.token_exit_layers)
         acc["token_layers"] += float(sum(req.token_exit_layers))
-        if self.arbiter is not None:
+        if self.arbiters:
             # the lane's total arbiter depth is the summed realized exit
             # depth of every token it generated (across preemption stints)
-            rep = self.arbiter.retire(
+            rep = self._arb_of(lane).retire(
                 self._arb_key(bucket, lane), int(sum(req.token_exit_layers))
             )
             req.energy_j = rep.energy_j
@@ -959,8 +1141,9 @@ class DecoderServer:
             "cur": int(st["cur"][lane, 0]),
         }
         st["reqs"][lane] = None
-        if self.arbiter is not None:
-            payload["clock"] = self.arbiter.checkpoint_lane(
+        if self.arbiters:
+            # relative clock payload: restores onto ANY replica's arbiter
+            payload["clock"] = self._arb_of(lane).checkpoint_lane(
                 self._arb_key(bucket, lane)
             )
         return payload
@@ -980,8 +1163,8 @@ class DecoderServer:
         st["pos"][lane] = payload["pos"]
         st["cur"][lane, 0] = payload["cur"]
         st["reqs"][lane] = req
-        if self.arbiter is not None:
-            self.arbiter.restore_lane(
+        if self.arbiters:
+            self._arb_of(lane).restore_lane(
                 self._arb_key(bucket, lane), payload["clock"]
             )
 
@@ -1021,6 +1204,11 @@ class DecoderServer:
             "decode_traces_per_bucket": dict(self._traces["decode"]),
             "step_traces": sum(self._traces["decode"].values()),
             "step_traces_per_bucket": dict(self._traces["decode"]),
+            "step_traces_per_bucket_replica": {
+                f"{b}x{r}": n
+                for (b, r), n in sorted(self._traces["decode_replica"].items())
+            },
+            "replicas": self.replicas,
             "buckets_used": st["buckets_used"],
             "bucket_steps": st["bucket_steps"],
             "lane_occupancy": st["lane_occupancy"],

@@ -562,20 +562,31 @@ class LaneScheduler:
         else:
             self._qmin_deadline.pop(bucket, None)
 
-    def _pop_next(self, bucket: int) -> "Request":
+    def _pop_next(self, bucket: int, domain: Optional[int] = None) -> Optional["Request"]:
         """Next request to admit from a bucket's queue: the earliest-deadline
         EXPLICIT-SLO request if any (so a contract jumps the queue inside its
         own bucket, not just across buckets), else plain FIFO.  The O(queue)
-        scan runs once per lane admission, not per step."""
+        scan runs once per lane admission, not per step.
+
+        ``domain`` restricts the pop to requests compatible with the lane's
+        replica (admission placement pins ``req.replica``; unpinned requests
+        run anywhere).  Returns ``None`` when nothing queued may take this
+        lane — the refill leaves it free for a compatible arrival."""
         q = self.queues[bucket]
         best, best_d = None, float("inf")
+        first_ok = None
         for idx, r in enumerate(q):
+            pin = getattr(r, "replica", None)
+            if domain is not None and pin is not None and pin != domain:
+                continue
+            if first_ok is None:
+                first_ok = idx
             if r.deadline_s is not None:
                 d = r.arrival_s + r.deadline_s
                 if d < best_d:
                     best, best_d = idx, d
         if best is None:
-            return q.popleft()
+            return _pop_at(q, first_ok) if first_ok is not None else None
         req = _pop_at(q, best)
         self._recompute_qmin(bucket)       # the minimum just left the queue
         return req
@@ -669,30 +680,55 @@ class LaneScheduler:
         q = self.queues.get(bucket)
         if not q:
             return
-        n_explicit = sum(1 for r in q if r.deadline_s is not None)
-        if not n_explicit:
+        explicit = [r for r in q if r.deadline_s is not None]
+        if not explicit:
             return
-        free = sum(1 for r in run.lane_req if r is None)
-        need = n_explicit - free
-        if need <= 0:
+
+        def _victims(lane_idxs) -> List:
+            out = []
+            for i in lane_idxs:
+                req = run.lane_req[i]
+                if req is None or req.deadline_s is not None:
+                    continue
+                rem = self._predict_remaining(bucket, req, int(run.lane_depth[i]))
+                out.append((-(rem if rem is not None else float(np.inf)), i))
+            out.sort()
+            return out
+
+        def _evict(victims, need: int) -> None:
+            for _, i in victims[: max(need, 0)]:
+                req = run.lane_req[i]
+                req.checkpoint = self.engine.lane_checkpoint(bucket, i, req)
+                req.ckpt_depth = int(run.lane_depth[i])
+                req.preempted += 1
+                q.appendleft(req)
+                run.lane_req[i] = None
+                run.active[i] = False
+                self._preemptions += 1
+
+        dom_hook = getattr(self.engine, "lane_domain", None)
+        pinned = [r for r in explicit if getattr(r, "replica", None) is not None]
+        if dom_hook is None or not pinned:
+            # single-domain (or wholly unpinned) case: evict globally
+            free = sum(1 for r in run.lane_req if r is None)
+            _evict(_victims(range(self.lanes)), len(explicit) - free)
             return
-        victims = []
+        # replica-pinned contracts can only take lanes of THEIR domain, so
+        # eviction runs per domain for them; unpinned contracts then evict
+        # globally for whatever free capacity remains
+        domains: Dict[int, List[int]] = {}
         for i in range(self.lanes):
-            req = run.lane_req[i]
-            if req is None or req.deadline_s is not None:
+            domains.setdefault(dom_hook(i), []).append(i)
+        for d, lane_idxs in domains.items():
+            n_d = sum(1 for r in pinned if r.replica == d)
+            if not n_d:
                 continue
-            rem = self._predict_remaining(bucket, req, int(run.lane_depth[i]))
-            victims.append((-(rem if rem is not None else float(np.inf)), i))
-        victims.sort()
-        for _, i in victims[:need]:
-            req = run.lane_req[i]
-            req.checkpoint = self.engine.lane_checkpoint(bucket, i, req)
-            req.ckpt_depth = int(run.lane_depth[i])
-            req.preempted += 1
-            q.appendleft(req)
-            run.lane_req[i] = None
-            run.active[i] = False
-            self._preemptions += 1
+            free_d = sum(1 for i in lane_idxs if run.lane_req[i] is None)
+            _evict(_victims(lane_idxs), n_d - free_d)
+        n_wild = len(explicit) - len(pinned)
+        if n_wild:
+            free = sum(1 for r in run.lane_req if r is None)
+            _evict(_victims(range(self.lanes)), n_wild - free)
 
     # ----------------------------------------------------------- stepping
     def step(self) -> Optional[StepReport]:
@@ -727,9 +763,18 @@ class LaneScheduler:
         # batching: retired lanes never idle while work is queued)
         q = self.queues.get(bucket)
         step_idx = self._dense_steps
+        # replica-aware refill: a lane only takes work compatible with its
+        # clock domain (engines without replicas report domain 0 for every
+        # lane, and unpinned requests run anywhere — the common path is
+        # unchanged)
+        dom_hook = getattr(eng, "lane_domain", None)
         for i in range(self.lanes):
             if run.lane_req[i] is None and q:
-                req = self._pop_next(bucket)
+                req = self._pop_next(
+                    bucket, dom_hook(i) if dom_hook is not None else None
+                )
+                if req is None:
+                    continue    # everything queued is pinned elsewhere
                 if req.checkpoint is not None:
                     # preempted earlier: restore the checkpointed state and
                     # resume at its saved depth — completed layers are NOT

@@ -20,6 +20,16 @@ Lane structure: both engines vmap a one-lane body over the lane axis.  The
 per-lane kv_len / position scalars become traced per-lane operands, which
 the Pallas span kernel accepts through scalar prefetch — verified to
 compose with vmap+jit in interpret mode (CPU CI) and on TPU.
+
+Multi-device sharding: the ``sharded_*`` variants wrap the same fused-step
+math in ``shard_map`` over a 1-D device mesh, splitting the lane axis into
+``replicas`` contiguous slabs (lane ``i`` lives on replica
+``i // lanes_per_replica``).  Params and scalars replicate; the classifier's
+``[lanes, S, D]`` state shards on axis 0 and the decoder KV cache on its
+lane axis 1.  Because the body may dispatch ``pallas_call`` (which has no
+replication rule), the wrappers go through ``jax_compat.shard_map_norep``.
+Lanes are independent, so a 1-replica sharded step is bit-identical to the
+unsharded step — the parity guarantee the serving tests gate.
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.common.jax_compat import shard_map_norep
 from repro.core.early_exit import offramp_logits
 from repro.core.entropy import entropy_from_logits
 from repro.models.model import Model
@@ -80,6 +91,38 @@ def classifier_fused_step(
         ent = entropy_from_logits(lg)
     retire = jnp.logical_and(active, ent < threshold)
     return h, lg, ent, retire
+
+
+def sharded_classifier_fused_step(
+    model: Model,
+    params: Any,
+    h: jnp.ndarray,          # [replicas * lanes_per_replica, S_bucket, D]
+    active: jnp.ndarray,
+    lengths: jnp.ndarray,
+    threshold: jnp.ndarray,
+    *,
+    mesh: Any,
+    axis: str = "data",
+    use_pallas: bool = False,
+    block_masks: Optional[Dict[str, Any]] = None,
+):
+    """``classifier_fused_step`` shard_map'd over the lane axis.
+
+    Each device computes its own contiguous ``[lanes_per_replica, S, D]``
+    slab under replicated params — no collectives cross replicas, so the
+    step scales linearly in device count and a 1-replica mesh reproduces
+    the unsharded step bit-for-bit."""
+    P = jax.sharding.PartitionSpec
+    fn = shard_map_norep(
+        lambda p, hh, aa, ll, th: classifier_fused_step(
+            model, p, hh, aa, ll, th,
+            use_pallas=use_pallas, block_masks=block_masks,
+        ),
+        mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+    )
+    return fn(params, h, active, lengths, threshold)
 
 
 def lane_insert(h: jnp.ndarray, lane: jnp.ndarray, h_new: jnp.ndarray) -> jnp.ndarray:
@@ -150,6 +193,59 @@ def decoder_decode_ee(
     return jax.vmap(
         one_lane, in_axes=(lane_axes, 0, 0), out_axes=(0, lane_axes, 0, 0)
     )(cache, tokens[:, 0], pos)
+
+
+def sharded_decoder_decode(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    mesh: Any,
+    axis: str = "data",
+    use_pallas: bool = False,
+):
+    """``decoder_decode`` shard_map'd over the KV cache's lane axis (axis 1
+    of every cache leaf); tokens and positions shard with their lanes."""
+    P = jax.sharding.PartitionSpec
+    cache_specs = jax.tree_util.tree_map(lambda _: P(None, axis), cache)
+    fn = shard_map_norep(
+        lambda p, c, t, po: decoder_decode(
+            model, p, c, t, po, use_pallas=use_pallas
+        ),
+        mesh,
+        in_specs=(P(), cache_specs, P(axis), P(axis)),
+        out_specs=(P(axis), cache_specs),
+    )
+    return fn(params, cache, tokens, pos)
+
+
+def sharded_decoder_decode_ee(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,
+    pos: jnp.ndarray,
+    threshold,
+    *,
+    mesh: Any,
+    axis: str = "data",
+    use_pallas: bool = False,
+):
+    """``decoder_decode_ee`` shard_map'd like ``sharded_decoder_decode``;
+    the per-token exit depths and first entropies shard with their lanes."""
+    P = jax.sharding.PartitionSpec
+    cache_specs = jax.tree_util.tree_map(lambda _: P(None, axis), cache)
+    fn = shard_map_norep(
+        lambda p, c, t, po, th: decoder_decode_ee(
+            model, p, c, t, po, th, use_pallas=use_pallas
+        ),
+        mesh,
+        in_specs=(P(), cache_specs, P(axis), P(axis), P()),
+        out_specs=(P(axis), cache_specs, P(axis), P(axis)),
+    )
+    return fn(params, cache, tokens, pos, threshold)
 
 
 def decoder_prefill(

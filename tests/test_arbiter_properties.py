@@ -457,3 +457,69 @@ class TestCrossEngineAdmissionRegression:
             dec.step()
             cls.step()
         assert cls.telemetry()["accepted_slo_misses"] >= 1
+
+
+class TestCrossEngineDeadlineCapRegression:
+    """The OTHER failure mode of cross-engine pricing: slow-op-only
+    serialization OVER-rejects.  A foreign decode lane with a TIGHT deadline
+    cannot crawl — Alg. 1 pins it at (or near) the max operating point and
+    its lane clears by its own absolute deadline — yet the uncapped term
+    still priced its deep remaining work at the table's SLOWEST point,
+    rejecting classifier SLOs the mix trivially meets.  Each foreign lane is
+    now priced ``min(slow-op serialization, deadline + max-op tail)``; both
+    are one-sided upper bounds (the tail covers post-deadline escalation),
+    so the accepted=>met contract is preserved while the spurious
+    rejections disappear."""
+
+    def test_tight_foreign_deadlines_no_longer_over_reject(self):
+        from repro.serving.admission import AdmissionController
+        from repro.serving.engine import Request
+
+        # reuse the PR 6 scenario builder, but admit the decoder contracts
+        # TIGHT instead of slack-rich
+        arb, ctrl, dec, cls, batch = (
+            TestCrossEngineAdmissionRegression()._servers()
+        )
+        prompt = np.arange(1, 6, dtype=np.int32)
+        fast = dec._cycles_for(16) * 12 / ctrl.max_op.freq_hz
+        for i in range(2):
+            dec.submit(Request(uid=100 + i, tokens=prompt, max_new_tokens=10,
+                               deadline_s=fast * 2.0))
+        dec.step()                     # foreign lanes in flight, zero slack
+
+        ac = AdmissionController(cls)
+        x_new = ac._cross_engine_backlog_s()
+        # the retired slow-op-only pricing, recomputed from the same state
+        slow_hz = ctrl.table[0].freq_hz
+        x_old = 0.0
+        for key, clk in arb._lanes.items():
+            if isinstance(key, tuple) and len(key) == 3 and key[0] == cls._sid:
+                continue
+            rem = (float(clk.pred_layers_remaining)
+                   if clk.pred_layers_remaining is not None
+                   else max(float(ctrl.stats.n_layers - clk.depth), 0.0))
+            x_old += rem * clk.cycles_per_layer / slow_hz
+        # tight deadlines make the cap bind: the new term must be strictly
+        # cheaper, or this scenario no longer distinguishes the pricings
+        assert x_new < x_old * 0.9, (x_new, x_old)
+
+        q = ac.quote(Request(uid=0, tokens=batch["tokens"][0][:12],
+                             deadline_s=1e9))
+        old_min_deadline = (q.wait_s - x_new + x_old + q.service_s) * ac.headroom
+        # an SLO between the two quotes: over-rejected before, admitted now
+        slo = (q.min_deadline_s + old_min_deadline) / 2.0
+        assert q.min_deadline_s <= slo < old_min_deadline
+        d = ac.submit(Request(uid=0, tokens=batch["tokens"][0][:12],
+                              deadline_s=slo))
+        assert d.admitted, "deadline-capped pricing must admit this contract"
+        # and the admission was SOUND: the accepted CLASSIFIER SLO is met.
+        # (The decoder contracts were submitted directly — never quoted — and
+        # may miss their own aggressive deadlines; the cap stays a valid
+        # bound regardless, because a deadline-missing foreign lane runs its
+        # leftover work at MAX op, which is exactly the tail term.)
+        while not (cls.sched.idle and dec.sched.idle):
+            dec.step()
+            cls.step()
+        assert cls.telemetry()["accepted_slo_misses"] == 0
+        r = cls.done[0]
+        assert r.retire_s - r.arrival_s <= r.deadline_s * (1 + 1e-9)

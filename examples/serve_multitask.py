@@ -12,6 +12,20 @@ entropy->exit-layer LUT ONLINE as sentences retire (no offline profiling
 pass).  Each task reports modeled accelerator energy at the prescribed
 target latency alongside the power-on cost advantage from the hardware model.
 
+This is a true many-task, many-tenant scenario (``serving/residency.py``):
+SIX tasks contend for an SRAM working set sized to hold well under half of
+them.  Each task ships a ``TaskDeployment`` — its adaptive-span budget,
+movement-pruning occupancy, and AdaptivFloat format — and the engine prices
+that task's cycles, per-lane energy, and admission quotes off the COMPRESSED
+network (a sparser task is quoted cheaper than a dense one).  Non-resident
+tasks live in eNVM: a ``TaskResidencyManager`` LRU-evicts until the task's
+bitmask-encoded footprint fits and charges the modeled ReRAM read as a
+STALL on the shared clock — so a non-resident task's admission quote is
+strictly dearer by its pending swap stall, and the ``ResidencyRouter``'s
+``TaskAffinityPolicy`` decides WHICH task steps by trading EDF urgency
+against that swap cost (batch through the warm working set; preempt
+residency only when a cold task's discounted slack demands it).
+
 Also demonstrates the step()-clocked serving API: one task is driven by hand
 (``step()``/``poll()``), and an URGENT request with a per-request ``deadline_s``
 is submitted MID-DRAIN — the EDF policy preempts the ongoing work, the
@@ -56,7 +70,13 @@ from repro.serving.dvfs import (
     LatencyAwareDVFSController,
     no_early_exit_baseline,
 )
-from repro.serving.engine import MultiTaskRouter, Request
+from repro.serving.engine import Request
+from repro.serving.residency import (
+    ResidencyRouter,
+    TaskAffinityPolicy,
+    TaskDeployment,
+    TaskResidencyManager,
+)
 
 cfg = dataclasses.replace(
     get_smoke_config("albert_edgebert"), dtype="float32", remat_policy="none"
@@ -79,9 +99,39 @@ cfg = cfg.with_edgebert(
     )
 )
 model = build_model(cfg)
+TASKS = ("mnli", "qqp", "sst2", "qnli", "rte", "cola")
 tasks = {}
-for i, task in enumerate(("mnli", "qqp", "sst2", "qnli")):
+for i, task in enumerate(TASKS):
     tasks[task] = model.init_params(jax.random.PRNGKey(i))
+
+# per-task compressed deployments: span budget + pruning occupancy (+ the
+# default 8-bit AdaptivFloat format).  rte ships DENSE so the pricing gap
+# against its compressed neighbours is visible in the quotes below.
+_n_task_params = sum(
+    int(np.prod(np.shape(a)))
+    for k in tasks["mnli"] if k != "embed"           # embeddings are shared
+    for a in jax.tree_util.tree_leaves(tasks["mnli"][k])
+)
+deployments = {
+    "mnli": TaskDeployment("mnli", _n_task_params, pruning_occupancy=0.4,
+                           spans=(8, 8, 16, 32), n_heads=cfg.n_heads,
+                           span_seq_len=32),
+    "qqp":  TaskDeployment("qqp", _n_task_params, pruning_occupancy=0.5),
+    "sst2": TaskDeployment("sst2", _n_task_params, pruning_occupancy=0.3,
+                           spans=(8, 8, 8, 16), n_heads=cfg.n_heads,
+                           span_seq_len=32),
+    "qnli": TaskDeployment("qnli", _n_task_params, pruning_occupancy=0.6),
+    "rte":  TaskDeployment("rte", _n_task_params, pruning_occupancy=1.0),
+    "cola": TaskDeployment("cola", _n_task_params, pruning_occupancy=0.4),
+}
+# SRAM holds well under half the fleet: everything else pays the modeled
+# eNVM read (a stall on the shared clock) to swap in
+residency = TaskResidencyManager(
+    deployments,
+    sram_bytes=int(0.45 * sum(
+        d.storage()["total_bytes"] for d in deployments.values()
+    )),
+)
 
 # shared-clock latency-aware DVFS: one LDO/ADPLL for the whole chip, so ONE
 # arbiter serves every task server.  The target gets deployment headroom
@@ -96,15 +146,16 @@ dvfs = LatencyAwareDVFSController(
     online_calibrator=OnlineExitCalibrator(cfg.n_layers, hi=float(np.log(3)) + 0.1),
 )
 arbiter = BatchedDVFSArbiter(dvfs)
-router = MultiTaskRouter(
-    model, shared_embed=base["embed"], task_params=tasks, arbiter=arbiter,
-    buckets=(16, 32), preempt=True,
+router = ResidencyRouter(
+    model, base["embed"], tasks, residency=residency,
+    deployments=deployments, task_policy=TaskAffinityPolicy(),
+    arbiter=arbiter, buckets=(16, 32), preempt=True,
 )
 
 data = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3)
 b = data.batch(0)
 _rng = np.random.default_rng(0)
-for i, task in enumerate(("mnli", "qqp", "sst2", "qnli")):
+for i, task in enumerate(TASKS):
     for j in range(4):
         k = i * 4 + j
         L = int(_rng.integers(10, 33))      # mixed lengths -> both buckets
@@ -153,6 +204,23 @@ print(f"admission: {st_mnli['accepted']} accepted, {st_mnli['rejected']} "
       f"rejected, {st_mnli['shed']} shed; {st_mnli['preemptions']} lane "
       f"preemption(s) saved {st_mnli['restored_steps_saved']} re-run layers")
 
+# residency pricing: mnli's refills made it SRAM-resident, so its quotes
+# carry no swap term — a cold task's quote for the IDENTICAL request is
+# dearer by its pending eNVM swap stall (x admission headroom)
+assert residency.is_resident("mnli")
+probe = Request(uid=1500, tokens=b["tokens"][3][:12], deadline_s=1.0)
+cold = next(t for t in TASKS if not residency.is_resident(t))
+q_cold = AdmissionController(router.tasks[cold]).quote(probe)
+stall = residency.pending_swap_stall_s(cold)
+print(f"residency pricing: {cold} is eNVM-only, so its quote's wait "
+      f"({q_cold.wait_s*1e6:.1f}us) includes the {stall*1e6:.2f}us swap "
+      f"stall; resident {sorted(residency.resident_set)} quote without it")
+# compressed deployment pricing: mnli (occ 0.4 + span budget) is quoted
+# fewer cycles per fused step than dense rte on the same bucket
+print(f"deployment pricing: bucket-16 cycles mnli(compressed) "
+      f"{router.tasks['mnli']._cycles_for(16)} vs rte(dense) "
+      f"{router.tasks['rte']._cycles_for(16)}")
+
 stats = router.run_all()
 e_noee_each = dvfs.no_early_exit_baseline()["energy_j"]
 stats["mnli"] = mnli.telemetry()        # include the hand-stepped drain
@@ -166,6 +234,14 @@ for task, st in stats.items():
 print(f"task switches: {router.switches}, embedding reloads: {router.embed_reloads} "
       "(embeddings are eNVM-resident); fused step traces/server: "
       f"{[st['step_traces'] for st in stats.values()]}")
+rt = router.telemetry()
+print(f"residency: {rt['task_swaps']} task swaps over {rt['task_steps']} "
+      f"affinity-arbitrated steps ({rt['task_switches']} task switches), "
+      f"{rt['swap_stall_s']*1e6:.1f}us stall + {rt['swap_energy_j']*1e6:.2f}uJ "
+      f"paid to eNVM, {rt['residency_hits']} warm refills, "
+      f"{rt['evictions']} evictions; resident at drain end: "
+      f"{sorted(rt['resident_set'])} "
+      f"({rt['resident_bytes']}/{rt['sram_bytes']} SRAM bytes)")
 arb = arbiter.telemetry()
 print(f"shared clock: {arb['op_switches']} (V,f) switches, "
       f"{arb['switch_energy_j']*1e6:.2f}uJ switching energy, "

@@ -40,7 +40,17 @@
 #   * sharded serving (bench_sharded_serving, forced host devices): warm
 #     requests retired per fused step must scale >= 3x from 1 to 4 replicas
 #     at `accepted_slo_misses=0`, `warm_added_traces=0`, and at most ONE
-#     compile per (bucket, replica) pair.
+#     compile per (bucket, replica) pair;
+#   * multitask residency: under N compressed task deployments that do not
+#     co-fit in the SRAM working set, `affinity_beats_blind=1` (task-affinity
+#     scheduling at lower energy/request than residency-blind EDF, swap
+#     energy included) at zero accepted-SLO misses on both runs, with
+#     `swaps_bounded=1` (affinity swaps each task in once) and the
+#     step_traces<=bucket_count pair still holding;
+#   * nvm power-on (bench_nvm_poweron): the Fig. 11 eNVM-vs-DRAM read
+#     advantage must reproduce (latency advantage >= 10x), the task-swap
+#     cost line must emit, and the run must append an `nvm_poweron` entry to
+#     the BENCH_serving.json history.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,6 +73,11 @@ echo "== bench_sharded_serving --smoke (1 vs 4 forced host devices) =="
 sharded_log=$(mktemp)
 python benchmarks/bench_sharded_serving.py --smoke | tee "$sharded_log"
 sharded=$?
+
+echo "== bench_nvm_poweron --smoke =="
+nvm_log=$(mktemp)
+python benchmarks/bench_nvm_poweron.py --smoke | tee "$nvm_log"
+nvm=$?
 
 echo "== grep-gate: step_traces <= bucket_count (all scenarios) =="
 gate=0
@@ -196,6 +211,61 @@ else
         echo "gate ok: 0 accepted-SLO misses under use_pallas=True"
     fi
 fi
+echo "== grep-gate: multitask_residency (affinity beats blind EDF at 0 misses) =="
+mtr=$(grep '^multitask_residency,' "$batched_log" | head -1)
+if [ -z "$mtr" ]; then
+    echo "GATE FAIL: no multitask_residency telemetry emitted (residency"
+    echo "           scenario missing from bench_batched_dvfs)"
+    gate=1
+else
+    beats=$(echo "$mtr" | grep -o 'affinity_beats_blind=[0-9]*'); beats=${beats#*=}
+    if [ "$beats" != "1" ]; then
+        echo "GATE FAIL: task-affinity scheduling did not beat residency-blind"
+        echo "           EDF on energy/request under the multi-task storm"
+        gate=1
+    else
+        echo "gate ok: affinity below blind-EDF energy/request"
+    fi
+    # anchored on the leading ';' so it cannot match a prefixed key
+    rmiss=$(echo "$mtr" | grep -o ';accepted_slo_misses=[0-9]*' | head -1)
+    rmiss=${rmiss#*=}
+    if [ -z "$rmiss" ] || [ "$rmiss" -gt 0 ]; then
+        echo "GATE FAIL: multitask residency storm missed ${rmiss:-?} accepted"
+        echo "           SLOs — the energy win must hold at zero misses"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses under both residency policies"
+    fi
+    sb=$(echo "$mtr" | grep -o 'swaps_bounded=[0-9]*'); sb=${sb#*=}
+    if [ "$sb" != "1" ]; then
+        echo "GATE FAIL: affinity-aware stepping swapped more than once per"
+        echo "           task — residency batching is broken"
+        gate=1
+    else
+        echo "gate ok: affinity task_swaps bounded by the task count"
+    fi
+fi
+echo "== grep-gate: nvm_poweron (Fig. 11 advantage, task-swap cost) =="
+nvl=$(grep '^fig11_paper_size,' "$nvm_log" | head -1)
+if [ -z "$nvl" ]; then
+    echo "GATE FAIL: no fig11_paper_size telemetry emitted by bench_nvm_poweron"
+    gate=1
+else
+    ladv=$(echo "$nvl" | grep -o 'latency_advantage=[0-9]*' | head -1); ladv=${ladv#*=}
+    if [ -z "$ladv" ] || [ "$ladv" -lt 10 ]; then
+        echo "GATE FAIL: eNVM power-on latency advantage ${ladv:-?}x < 10x"
+        echo "           (paper Fig. 11 reports ~50x)"
+        gate=1
+    else
+        echo "gate ok: ${ladv}x eNVM power-on latency advantage"
+    fi
+fi
+if ! grep -q '^nvm_task_swap,' "$nvm_log"; then
+    echo "GATE FAIL: no nvm_task_swap telemetry (per-task swap cost missing)"
+    gate=1
+else
+    echo "gate ok: per-task eNVM swap cost emitted"
+fi
 echo "== grep-gate: sharded_serving (scaling >= 3x, 0 misses, warm traces) =="
 shl=$(grep '^sharded_serving,' "$sharded_log" | head -1)
 if [ -z "$shl" ]; then
@@ -260,6 +330,9 @@ for side in ("ref", "pallas"):
 if not any(e.get("scenario") == "sharded_serving" for e in hist):
     print("GATE FAIL: no sharded_serving entry in BENCH_serving.json history")
     sys.exit(1)
+if not any(e.get("scenario") == "nvm_poweron" for e in hist):
+    print("GATE FAIL: no nvm_poweron entry in BENCH_serving.json history")
+    sys.exit(1)
 print(f"gate ok: BENCH_serving.json v{b['version']} history "
       f"({len(hist)} entries, newest pallas_serving tag {cur['tag']}, "
       f"speedup {cur['speedup_ref_over_pallas_p50']:.2f}x)")
@@ -281,7 +354,7 @@ for k in ("logit_parity", "exit_depth_parity"):
         sys.exit(1)
 EOF
 then :; else gate=1; fi
-rm -f "$batched_log" "$sharded_log"
+rm -f "$batched_log" "$sharded_log" "$nvm_log"
 
-echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched sharded=$sharded gate=$gate =="
-exit $(( tier1 || smoke || batched || sharded || gate ))
+echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched sharded=$sharded nvm=$nvm gate=$gate =="
+exit $(( tier1 || smoke || batched || sharded || nvm || gate ))

@@ -318,6 +318,26 @@ def poweron_embedding_cost(embedding_bytes: float, bitmask_bytes: float) -> Dict
     }
 
 
+def task_swap_cost(weight_bytes: float, bitmask_bytes: float) -> Dict[str, float]:
+    """Switch-in cost of one non-resident task's weight set (§III-D applied
+    to TASK weights instead of embeddings).
+
+    The multi-task deployment keeps every task's bitmask-compressed
+    encoder/classifier weights in eNVM; a bounded SRAM working set holds the
+    resident tasks.  Serving a non-resident task streams its sparse-encoded
+    footprint (values + bitmask) out of ReRAM into SRAM — a dense parallel
+    read plus an SRAM write, charged on the shared modeled clock as a swap
+    stall.  Evictions are free: task weights are read-only, so there is no
+    write-back.
+    """
+    total = weight_bytes + bitmask_bytes
+    return {
+        "latency_s": total / 1e6 * RERAM_LATENCY_S_PER_MB,
+        "energy_j": total * (E_RERAM_READ_PJ_B + E_SRAM_PJ_B) * 1e-12,
+        "bytes": total,
+    }
+
+
 def albert_layer_stats(seq_len: int = 128, d: int = 768, ff: int = 3072, heads: int = 12) -> WorkloadStats:
     """Analytic ALBERT-base encoder layer workload (paper Fig. 8: ~1.9 GFLOP
     for the 12-layer pass at S=128 => ~158 MFLOP/layer)."""

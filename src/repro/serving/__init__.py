@@ -23,3 +23,15 @@ from repro.serving.dvfs import (
     default_albert_controller,
     no_early_exit_baseline,
 )
+from repro.serving.residency import (
+    BlindEDFTaskPolicy,
+    ResidencyRouter,
+    TaskAffinityPolicy,
+    TaskDeployment,
+    TaskResidencyManager,
+    TaskView,
+    deployment_controller,
+    deployment_energy_scale,
+    deployment_stats,
+    measured_footprint,
+)

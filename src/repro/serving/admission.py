@@ -488,6 +488,13 @@ class AdmissionController:
                 else self._cross_engine_backlog_s(replica)
             )
         )
+        # eNVM task residency: a non-resident task's first refill stalls the
+        # shared clock for its swap-in, so the quote must carry it — the
+        # identical request is quoted strictly cheaper when its task is
+        # already SRAM-resident
+        res = getattr(self.server, "residency", None)
+        if res is not None:
+            wait += res.pending_swap_stall_s(getattr(self.server, "task", None))
         min_deadline = (wait + service) * self.headroom
         feasible = (
             req.deadline_s is not None

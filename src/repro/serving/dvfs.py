@@ -323,6 +323,9 @@ class _LaneClock:
     predicted_exit: Optional[float] = None  # set after the first off-ramp
     first_entropy: Optional[float] = None
     energy_j: float = 0.0
+    # per-lane power ratio vs the controller anchor (compressed deployments:
+    # sparsity/span power gating the cycles ratio alone cannot express)
+    energy_scale: float = 1.0
     slowest_op: Optional[OperatingPoint] = None
     # decode lanes: predicted layers still to run across ALL remaining tokens
     # (position-binned per-token exit predictions, conservative full depth
@@ -407,6 +410,7 @@ class BatchedDVFSArbiter:
         *,
         deadline_s: Optional[float] = None,
         cycles_per_layer: Optional[float] = None,
+        energy_scale: float = 1.0,
     ) -> None:
         """A request entered a lane: its deadline clock starts now.
 
@@ -414,10 +418,16 @@ class BatchedDVFSArbiter:
         ``None`` falls back to the controller-global target.
         ``cycles_per_layer``: the lane's bucket-specific layer cost; ``None``
         uses the controller's (largest-bucket) stats.
+        ``energy_scale``: this lane's per-layer POWER ratio against the
+        controller anchor.  Compressed deployments (pruning/span) gate power
+        beyond what the cycles ratio captures — the engine passes
+        P(task stats)/P(anchor stats) so lane energy prices the task's actual
+        sparse network.
         """
         assert lane not in self._lanes, f"lane {lane} already in flight"
         target = self.c.target_latency_s if deadline_s is None else float(deadline_s)
         assert target > 0
+        assert energy_scale > 0
         self._lanes[lane] = _LaneClock(
             admit_s=self.now_s,
             deadline_s=self.now_s + target,
@@ -426,6 +436,7 @@ class BatchedDVFSArbiter:
                 self.c.cycles_per_layer if cycles_per_layer is None
                 else float(cycles_per_layer)
             ),
+            energy_scale=float(energy_scale),
         )
 
     def observe_entropy(self, lane, entropy: float) -> None:
@@ -534,8 +545,12 @@ class BatchedDVFSArbiter:
             assert nl >= 1, f"lane {i}: a fused step runs at least one layer"
             st.depth += nl
             # energy ~ P(V) * cycles / f: scale the controller's per-layer
-            # energy by this lane's bucket cycle ratio
-            e_lane = nl * e_layer * (st.cycles_per_layer / self.c.cycles_per_layer)
+            # energy by this lane's bucket cycle ratio and its deployment's
+            # power ratio (sparsity/span gating vs the anchor stats)
+            e_lane = (
+                nl * e_layer * st.energy_scale
+                * (st.cycles_per_layer / self.c.cycles_per_layer)
+            )
             st.energy_j += e_lane
             self.compute_energy_j += e_lane
             step_cycles = max(step_cycles, nl * st.cycles_per_layer)

@@ -256,6 +256,9 @@ class ClassifierServer:
         use_pallas: bool = False,
         replicas: int = 1,
         mesh=None,
+        task: Optional[str] = None,
+        residency: Optional["TaskResidencyManager"] = None,
+        deployment: Optional["TaskDeployment"] = None,
     ):
         assert model.cfg.family == "albert", "classifier server drives the albert family"
         assert dvfs is None or arbiter is None, (
@@ -288,6 +291,24 @@ class ClassifierServer:
             self._block_masks = dispatch.mlp_block_masks(params["layer"]["mlp"])
         self._sid = next(_SERVER_IDS)
         ctrl = self.arbiter.c if self.arbiter is not None else dvfs
+        # multi-task residency: which task this server serves, the shared
+        # SRAM-over-eNVM working set, and this task's compression deployment.
+        # A deployment reprices the hw model: cycles/quotes route through a
+        # controller over the COMPRESSED stats, and lane energy is scaled by
+        # the deployment's power ratio vs the anchor stats at admit.
+        self.task = task
+        self.residency = residency
+        self.deployment = deployment
+        self._dep_ctrl = None
+        self._energy_scale = 1.0
+        if deployment is not None and ctrl is not None:
+            from repro.serving.residency import (      # lazy: engine <-> residency
+                deployment_controller,
+                deployment_energy_scale,
+            )
+
+            self._dep_ctrl = deployment_controller(ctrl, deployment)
+            self._energy_scale = deployment_energy_scale(ctrl, deployment)
         self.sched = LaneScheduler(
             self.lanes, self, buckets=buckets, policy=policy,
             step_time_fn=self._step_time_s,
@@ -362,8 +383,11 @@ class ClassifierServer:
 
     def _cycles_for(self, bucket: int) -> Optional[float]:
         """Per-bucket layer cycles from the controller's hw stats rescaled to
-        the bucket's sequence length (the controller memoizes per length)."""
-        ctrl = self._ctrl
+        the bucket's sequence length (the controller memoizes per length).
+        With a compressed ``TaskDeployment`` attached, the deployment's
+        controller prices the bucket instead — span/pruning savings flow
+        into step times, arbiter budgets, and admission quotes."""
+        ctrl = self._dep_ctrl if self._dep_ctrl is not None else self._ctrl
         return None if ctrl is None else ctrl.cycles_for_seq_len(bucket)
 
     def _step_time_s(self, bucket: int) -> float:
@@ -468,11 +492,22 @@ class ClassifierServer:
             st["h"], jnp.int32(lane), self._embed(self.params, jnp.asarray(toks)[None])
         )
         st["len"][lane] = len(req.tokens)
+        if self.residency is not None:
+            # task residency: refilling a lane touches this task's weights —
+            # a miss swaps them in from eNVM and the stall burns wall time on
+            # the shared clock BEFORE the lane's budget is computed (the
+            # stall spends the request's submission-anchored SLO budget)
+            stall = self.residency.acquire(self.task)
+            if stall > 0.0 and self.arbiters:
+                arb = self._arb_of(lane)
+                arb.advance_to(arb.now_s + stall)
+                self.sched.sync_clock()
         if self.arbiters:
             self._arb_of(lane).admit(
                 self._arb_key(bucket, lane),
                 deadline_s=self._explicit_budget_remaining(req),
                 cycles_per_layer=self._cycles_for(bucket),
+                energy_scale=self._energy_scale,
             )
 
     def lanes_step(self, bucket: int, active: np.ndarray):
@@ -744,9 +779,16 @@ class DecoderServer:
         use_pallas: bool = False,
         replicas: int = 1,
         mesh=None,
+        task: Optional[str] = None,
+        residency: Optional["TaskResidencyManager"] = None,
     ):
         self.model = model
         self.params = params
+        # multi-task residency (see ClassifierServer): decoder lanes touch
+        # the task's weights at refill too, paying the eNVM swap stall on
+        # the shared clock when the task is not SRAM-resident
+        self.task = task
+        self.residency = residency
         # replicated decode: ``batch_lanes`` lanes per replica, the KV cache
         # sharded on its lane axis, one DVFS clock domain per replica (see
         # ClassifierServer — the lane-slab layout is identical)
@@ -978,6 +1020,14 @@ class DecoderServer:
         st["pos"][lane] = len(req.tokens) - 1
         st["cur"][lane, 0] = req.tokens[-1]
         st["reqs"][lane] = req
+        if self.residency is not None:
+            # eNVM task residency: a miss stalls the shared clock for the
+            # swap-in before this lane's budget is computed
+            stall = self.residency.acquire(self.task)
+            if stall > 0.0 and self.arbiters:
+                a = self._arb_of(lane)
+                a.advance_to(a.now_s + stall)
+                self.sched.sync_clock()
         if self.arbiters:
             key = self._arb_key(bucket, lane)
             arb = self._arb_of(lane)
@@ -1290,6 +1340,9 @@ class MultiTaskRouter:
         buckets=None,
         policy_factory: Optional[Any] = None,
         preempt: bool = False,
+        residency: Optional["TaskResidencyManager"] = None,
+        deployments: Optional[Dict[str, "TaskDeployment"]] = None,
+        batch_lanes: int = 8,
     ):
         self.model = model
         self.shared_embed = shared_embed
@@ -1302,9 +1355,12 @@ class MultiTaskRouter:
             # mutable state (WRR credits, quantum position) that must not
             # leak between the task servers' independent schedulers
             self.tasks[name] = ClassifierServer(
-                model, params, dvfs=dvfs, arbiter=arbiter, buckets=buckets,
+                model, params, batch_lanes=batch_lanes,
+                dvfs=dvfs, arbiter=arbiter, buckets=buckets,
                 policy=policy_factory() if policy_factory is not None else None,
                 preempt=preempt,
+                task=name, residency=residency,
+                deployment=(deployments or {}).get(name),
             )
 
     def submit(self, task: str, req: Request):

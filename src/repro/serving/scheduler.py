@@ -666,6 +666,15 @@ class LaneScheduler:
             out.append(self._view(b))
         return out
 
+    def candidate_views(self) -> List[BucketView]:
+        """Public snapshot of this scheduler's candidate buckets, with the
+        clock synced to the engine's shared timeline first.  Cross-server
+        arbitration (e.g. task-affinity routing across per-task servers)
+        ranks these the same way ``step()``'s own policy does, without
+        stepping anything."""
+        self.sync_clock()
+        return self._candidates()
+
     # --------------------------------------------------------- preemption
     def _maybe_preempt(self, bucket: int, run: _BucketRun) -> None:
         """Evict budget-free lanes for queued EXPLICIT-SLO requests.

@@ -1,0 +1,379 @@
+"""Multi-task residency: compression-aware deployment pricing, eNVM swap
+costs on the shared clock, fault-injected readback detection, and
+task-affinity-aware scheduling (serving/residency.py)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core import bitmask as bm
+from repro.core.adaptivfloat import AFFormat
+from repro.data.synthetic import SyntheticCLS
+from repro.hwmodel.edgebert_accel import (
+    albert_layer_stats,
+    layer_cycles,
+    layer_energy_j,
+    scale_stats_to_seq_len,
+    task_swap_cost,
+)
+from repro.models.model import build_model
+from repro.serving.admission import AdmissionController
+from repro.serving.dvfs import (
+    BatchedDVFSArbiter,
+    LatencyAwareDVFSController,
+    no_early_exit_baseline,
+)
+from repro.serving.engine import ClassifierServer, Request
+from repro.serving.residency import (
+    BlindEDFTaskPolicy,
+    ResidencyRouter,
+    TaskAffinityPolicy,
+    TaskDeployment,
+    TaskResidencyManager,
+    deployment_controller,
+    deployment_energy_scale,
+    deployment_stats,
+    measured_footprint,
+)
+
+N_LAYERS = 12
+
+
+def _stats(seq_len=64):
+    s = albert_layer_stats(seq_len=seq_len)
+    s.n_layers = N_LAYERS
+    return s
+
+
+def _controller(target_mult=2.0):
+    target = no_early_exit_baseline(_stats())["latency_s"] * target_mult
+    return LatencyAwareDVFSController(_stats(), target)
+
+
+def _dep(task="mnli", occupancy=0.4, spans=(0,) * 6 + (64,) * 6):
+    return TaskDeployment(
+        task, n_params=11e6, pruning_occupancy=occupancy,
+        spans=spans, n_heads=12, span_seq_len=128,
+    )
+
+
+# ===========================================================================
+# Deployment pricing: the hwmodel sees the COMPRESSED network
+# ===========================================================================
+
+
+class TestDeploymentPricing:
+    def test_compressed_deployment_lowers_cycles_and_power(self):
+        ctrl = _controller()
+        dep = _dep()
+        dc = deployment_controller(ctrl, dep)
+        for S in (16, 32, 64, 128):
+            assert dc.cycles_for_seq_len(S) < ctrl.cycles_for_seq_len(S)
+        # sparsity/span gate power too — the arbiter's energy_scale < 1
+        assert deployment_energy_scale(ctrl, dep) < 1.0
+
+    def test_dense_deployment_prices_identically(self):
+        ctrl = _controller()
+        dense = TaskDeployment("t", n_params=11e6)  # occupancy 1, no spans
+        dc = deployment_controller(ctrl, dense)
+        assert dc.cycles_for_seq_len(64) == ctrl.cycles_for_seq_len(64)
+        assert deployment_energy_scale(ctrl, dense) == pytest.approx(1.0)
+
+    def test_cycles_energy_monotone_in_pruning_occupancy(self):
+        """A deployment that keeps FEWER weights can never price more cycles
+        or more energy — a misconfigured deployment can't quote cheaper than
+        it runs (checked across seq-len rescaling too)."""
+        base = _stats()
+        for S in (32, 64, 128):
+            prev_c, prev_e = None, None
+            for occ in (1.0, 0.8, 0.6, 0.4, 0.2):
+                st = scale_stats_to_seq_len(
+                    deployment_stats(base, _dep(occupancy=occ, spans=None)), S
+                )
+                c = layer_cycles(st, use_span=True)
+                e = layer_energy_j(st, vdd=0.80)
+                if prev_c is not None:
+                    assert c <= prev_c + 1e-9
+                    assert e < prev_e          # power gating strictly helps
+                prev_c, prev_e = c, e
+
+    def test_cycles_energy_monotone_in_span_budget(self):
+        """Tighter attention spans (and fewer active heads) are monotone
+        nonincreasing in cycles AND energy."""
+        base = _stats()
+        budgets = [
+            (64,) * 12,                  # full spans, all heads
+            (32,) * 12,
+            (0,) * 4 + (32,) * 8,        # 4 heads gated off
+            (0,) * 8 + (16,) * 4,
+        ]
+        for S in (32, 64):
+            prev_c, prev_e = None, None
+            for spans in budgets:
+                st = scale_stats_to_seq_len(
+                    deployment_stats(
+                        base, _dep(occupancy=1.0, spans=spans)
+                    ),
+                    S,
+                )
+                c = layer_cycles(st, use_span=True)
+                e = layer_energy_j(st, vdd=0.80)
+                if prev_c is not None:
+                    assert c <= prev_c + 1e-9
+                    assert e <= prev_e + 1e-15
+                prev_c, prev_e = c, e
+
+    def test_analytic_storage_matches_bitmask_accounting(self):
+        """TaskDeployment.storage() is the analytic mirror of
+        bitmask.storage_bytes over the actual pruned arrays."""
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((256, 128)).astype(np.float32)
+        w[rng.random(w.shape) < 0.6] = 0.0          # ~60% pruned
+        occ = float((w != 0).mean())
+        dep = TaskDeployment("t", n_params=w.size, pruning_occupancy=occ)
+        measured = measured_footprint({"w": w}, dep.fmt)
+        analytic = dep.storage()
+        assert measured["mask_bytes"] == analytic["mask_bytes"]
+        assert measured["value_bytes"] == pytest.approx(
+            analytic["value_bytes"], rel=1e-6
+        )
+
+
+# ===========================================================================
+# Residency manager: bounded SRAM working set over eNVM
+# ===========================================================================
+
+
+class TestResidencyManager:
+    def _three_tasks(self):
+        deps = [_dep(t, occupancy=0.4, spans=None) for t in ("a", "b", "c")]
+        foot = deps[0].storage()["total_bytes"]
+        # SRAM fits exactly two of the three tasks
+        return TaskResidencyManager(deps, sram_bytes=2 * foot), foot
+
+    def test_lru_eviction_and_swap_telemetry(self):
+        m, foot = self._three_tasks()
+        assert m.pending_swap_stall_s("a") > 0.0      # nothing resident yet
+        s1 = m.acquire("a")
+        assert s1 == pytest.approx(m.swap_cost("a")["latency_s"])
+        assert m.acquire("a") == 0.0                  # hit, LRU-touched
+        assert m.pending_swap_stall_s("a") == 0.0
+        m.acquire("b")
+        assert m.resident_set == ("a", "b")
+        m.acquire("c")                                # evicts LRU = a
+        assert m.resident_set == ("b", "c")
+        m.acquire("a")                                # evicts b
+        assert m.resident_set == ("c", "a")
+        t = m.telemetry()
+        assert t["task_swaps"] == 4
+        assert t["evictions"] == 2
+        assert t["residency_hits"] == 1
+        assert t["swap_stall_s"] == pytest.approx(4 * s1)
+        assert t["swap_energy_j"] == pytest.approx(
+            4 * m.swap_cost("a")["energy_j"]
+        )
+        assert t["resident_bytes"] <= t["sram_bytes"]
+
+    def test_sparser_deployment_swaps_cheaper(self):
+        """The swap prices the SPARSE-ENCODED footprint: heavier pruning /
+        narrower AdaptivFloat moves fewer bytes off the eNVM."""
+        lo = _dep("lo", occupancy=0.2, spans=None).swap_cost()
+        hi = _dep("hi", occupancy=0.8, spans=None).swap_cost()
+        assert lo["bytes"] < hi["bytes"]
+        assert lo["latency_s"] < hi["latency_s"]
+        assert lo["energy_j"] < hi["energy_j"]
+        # and it is exactly the hwmodel's task_swap_cost of that footprint
+        s = _dep("lo", occupancy=0.2, spans=None).storage()
+        assert lo == task_swap_cost(s["value_bytes"], s["mask_bytes"])
+
+    def test_unmanaged_task_is_free(self):
+        m, _ = self._three_tasks()
+        assert m.acquire(None) == 0.0
+        assert m.acquire("unknown") == 0.0
+        assert m.pending_swap_stall_s("unknown") == 0.0
+        assert m.task_swaps == 0
+
+
+# ===========================================================================
+# eNVM fault injection against the serving path (never silent)
+# ===========================================================================
+
+
+class TestEnvmReadback:
+    def _manager(self):
+        return TaskResidencyManager(
+            [_dep("t", occupancy=0.5, spans=None)], sram_bytes=1e9
+        )
+
+    def test_paper_cell_config_roundtrips_clean(self):
+        """SLC mask + MLC2 data (the paper's deployment): the readback of a
+        realistic weight array injects no faults at these BERs and the task
+        is NOT flagged degraded — zeros exact, values AF-quantized."""
+        m = self._manager()
+        rng = np.random.default_rng(1)
+        w = rng.standard_normal((96, 64)).astype(np.float32)
+        w[rng.random(w.shape) < 0.5] = 0.0
+        out, stats = m.load_from_envm(
+            "t", {"w": w}, data_cell="MLC2", mask_cell="SLC", seed=0
+        )
+        assert stats["n_mask_bit_flips"] == 0
+        assert stats["n_code_faults"] == 0
+        assert "t" not in m.degraded_tasks
+        # pruned zeros survive exactly (the bitmask IS the pruning mask);
+        # tiny nonzeros may flush to AdaptivFloat's smallest level
+        assert np.all(out["w"][w == 0] == 0)
+        nz = w != 0
+        rel = np.abs(out["w"][nz] - w[nz]) / np.abs(w[nz])
+        assert np.median(rel) < 0.05          # 8-bit AdaptivFloat quantization
+
+    def test_mlc3_degrades_detectably_not_silently(self):
+        """MLC3's BER injects real faults: the readback is corrupted AND the
+        degraded_tasks telemetry flag raises — never silent corruption."""
+        m = self._manager()
+        rng = np.random.default_rng(2)
+        w = rng.standard_normal((128, 128)).astype(np.float32)
+        _, stats = m.load_from_envm("t", {"w": w}, data_cell="MLC3", seed=0)
+        assert stats["n_code_faults"] > 0
+        assert "t" in m.degraded_tasks
+        assert "t" in m.telemetry()["degraded_tasks"]
+
+
+# ===========================================================================
+# Serving integration: quotes, the shared clock, and affinity stepping
+# ===========================================================================
+
+
+def _albert_model(threshold=0.6):
+    cfg = get_smoke_config("albert_edgebert")
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="none")
+    cfg = cfg.with_edgebert(
+        early_exit=dataclasses.replace(
+            cfg.edgebert.early_exit, entropy_threshold=threshold
+        )
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _smoke_controller(cfg, target_mult=4.0):
+    s = albert_layer_stats(seq_len=32)
+    s.n_layers = cfg.n_layers
+    target = no_early_exit_baseline(s)["latency_s"] * target_mult
+    return LatencyAwareDVFSController(s, target)
+
+
+class TestServingIntegration:
+    def test_resident_task_quotes_strictly_cheaper(self):
+        """Acceptance criterion: the identical explicit-SLO request is quoted
+        strictly cheaper once its task is SRAM-resident — the non-resident
+        quote carries exactly the modeled swap stall (x headroom)."""
+        model, params, cfg = _albert_model()
+        dep = _dep("mnli", occupancy=0.4, spans=None)
+        res = TaskResidencyManager([dep], sram_bytes=1e9)
+        server = ClassifierServer(
+            model, params, batch_lanes=2, buckets=(32,),
+            arbiter=BatchedDVFSArbiter(_smoke_controller(cfg)),
+            task="mnli", residency=res, deployment=dep,
+        )
+        adm = AdmissionController(server, headroom=1.25)
+        req = Request(uid=0, tokens=np.arange(8), deadline_s=10.0)
+        q_miss = adm.quote(req)
+        res.acquire("mnli")                    # swap the task in
+        q_hit = adm.quote(req)
+        assert q_hit.min_deadline_s < q_miss.min_deadline_s
+        stall = dep.swap_cost()["latency_s"]
+        assert q_miss.min_deadline_s - q_hit.min_deadline_s == pytest.approx(
+            stall * adm.headroom
+        )
+
+    def test_compressed_deployment_lowers_quoted_service(self):
+        """Acceptance criterion: a compressed TaskDeployment measurably
+        lowers the quoted cycles/service time vs pricing dense work."""
+        model, params, cfg = _albert_model()
+        dep = _dep("mnli")                     # pruned + span-budgeted
+        mk = lambda d: ClassifierServer(
+            model, params, batch_lanes=2, buckets=(32,),
+            arbiter=BatchedDVFSArbiter(_smoke_controller(cfg)),
+            task="mnli", deployment=d,
+        )
+        dense, compressed = mk(None), mk(dep)
+        assert compressed._cycles_for(32) < dense._cycles_for(32)
+        req = Request(uid=0, tokens=np.arange(8), deadline_s=10.0)
+        q_dense = AdmissionController(dense).quote(req)
+        q_comp = AdmissionController(compressed).quote(req)
+        assert q_comp.service_s < q_dense.service_s
+        assert q_comp.min_deadline_s < q_dense.min_deadline_s
+
+    def test_swap_stall_burns_shared_clock(self):
+        """A non-resident refill fast-forwards the shared arbiter clock by
+        the swap stall (wall time, not compute), and the scheduler clock
+        follows."""
+        model, params, cfg = _albert_model()
+        dep = _dep("mnli", occupancy=0.4, spans=None)
+        res = TaskResidencyManager([dep], sram_bytes=1e9)
+        arb = BatchedDVFSArbiter(_smoke_controller(cfg))
+        server = ClassifierServer(
+            model, params, batch_lanes=2, buckets=(32,),
+            arbiter=arb, task="mnli", residency=res, deployment=dep,
+        )
+        server.submit(Request(uid=0, tokens=np.arange(8)))
+        server.step()
+        stall = dep.swap_cost()["latency_s"]
+        assert res.task_swaps == 1
+        assert arb.now_s >= stall
+        assert server.sched.now_s >= stall
+
+    def test_affinity_batches_tasks_and_bounds_swaps(self):
+        """Acceptance criteria: under a working set smaller than the task
+        count, affinity-aware stepping swaps each task in ONCE (batching
+        same-task work while slack permits) while residency-blind EDF
+        thrashes; no accepted-SLO misses; no extra jit traces."""
+        model, params, cfg = _albert_model()
+        n_req = 4
+
+        def run(policy):
+            deps = {
+                t: _dep(t, occupancy=0.4, spans=None)
+                for t in ("mnli", "qqp", "sst2")
+            }
+            foot = deps["mnli"].storage()["total_bytes"]
+            res = TaskResidencyManager(deps, sram_bytes=2 * foot)
+            router = ResidencyRouter(
+                model, params["embed"],
+                {t: params for t in deps},
+                residency=res, deployments=deps, task_policy=policy,
+                arbiter=BatchedDVFSArbiter(_smoke_controller(cfg)),
+                buckets=(32,), batch_lanes=2,    # two refill waves per task
+            )
+            data = SyntheticCLS(cfg.vocab_size, 32, 16, num_classes=3, seed=0)
+            b = data.batch(0)
+            # round-robin storm with rotating deadline order: the globally
+            # most-urgent request alternates tasks, so blind EDF thrashes
+            for i in range(3 * n_req):
+                t = ("mnli", "qqp", "sst2")[i % 3]
+                router.submit(t, Request(
+                    uid=i, tokens=b["tokens"][i][:8],
+                    deadline_s=5.0 + i * 1e-4,
+                ))
+            out = router.run_all()
+            assert set(out) == {"mnli", "qqp", "sst2"}
+            for tel in out.values():
+                assert tel["accepted_slo_misses"] == 0
+                assert tel["step_traces"] <= 1        # one bucket, one trace
+            assert all(
+                len(router.tasks[t].done) == n_req for t in out
+            )
+            return router
+
+        # affinity: each task swapped in exactly once, then batched through
+        aff = run(TaskAffinityPolicy())
+        assert aff.residency.task_swaps == 3
+        # blind EDF chases the rotating deadlines across non-co-resident
+        # tasks: strictly more swaps and strictly more swap stall
+        blind = run(BlindEDFTaskPolicy())
+        assert blind.residency.task_swaps > aff.residency.task_swaps
+        assert blind.residency.swap_stall_s > aff.residency.swap_stall_s
+        assert blind.task_switches > aff.task_switches

@@ -94,6 +94,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import append_bench_history, emit, git_tag, trained_albert
+from benchmarks.harness.traffic import mixed_queue
 from repro.configs.base import get_smoke_config
 from repro.core.early_exit import OnlineExitCalibrator
 from repro.data.synthetic import SyntheticCLS
@@ -137,17 +138,9 @@ def _setup(smoke: bool):
     return model, params, cfg, data, thr
 
 
-def _mixed_queue(data, buckets, n_queue: int, seed: int = 0):
-    """Requests with lengths spread across (and inside) the buckets."""
-    rng = np.random.default_rng(seed)
-    reqs = []
-    for i in range(n_queue):
-        b = data.batch(200 + i // data.global_batch)
-        toks = b["tokens"][i % data.global_batch]
-        bucket = buckets[i % len(buckets)]
-        length = int(rng.integers(max(4, bucket // 2 + 1), bucket + 1))
-        reqs.append(Request(uid=i, tokens=np.asarray(toks[:length], np.int32)))
-    return reqs
+# queue shaping now lives in the shared harness package (every benchmark
+# shapes storm traffic identically); the alias keeps call sites unchanged
+_mixed_queue = mixed_queue
 
 
 def _drain(model, params, buckets, reqs, arbiter) -> dict:
@@ -650,6 +643,7 @@ def main() -> None:
         "batched_queue_delay", 0.0,
         f"p50_steps={st['queue_delay_steps_p50']:.1f};"
         f"p95_steps={st['queue_delay_steps_p95']:.1f};"
+        f"p99_steps={st['queue_delay_steps_p99']:.1f};"
         f"max_steps={st['queue_delay_steps_max']:.0f};queue={n_queue};lanes={LANES}",
     )
 

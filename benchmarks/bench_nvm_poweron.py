@@ -57,6 +57,8 @@ def main() -> None:
 
     entry = {
         "scenario": "nvm_poweron",
+        "backend": "analytical",   # modeled eNVM costs, no accelerator in the loop
+        "device_count": 1,
         "tag": git_tag(),
         "smoke": bool(args.smoke),
         "paper_size": {

@@ -47,6 +47,55 @@ def git_tag() -> str:
 
 BENCH_HISTORY_LIMIT = 20
 
+# every history entry must carry these so CI can diff like with like;
+# missing keys fail the append LOUDLY instead of silently polluting history
+BENCH_ENTRY_REQUIRED_KEYS = ("scenario", "backend", "device_count", "tag")
+
+
+def validate_bench_entry(entry: Dict) -> Dict:
+    """Schema-check one benchmark-history entry; raises ``ValueError`` on a
+    malformed entry (wrong type, missing identity keys, or non-JSON-safe
+    payload) so a bad run fails the append instead of corrupting the
+    trajectory."""
+    if not isinstance(entry, dict):
+        raise ValueError(f"bench entry must be a dict, got {type(entry).__name__}")
+    missing = [k for k in BENCH_ENTRY_REQUIRED_KEYS if k not in entry]
+    if missing:
+        raise ValueError(f"bench entry missing required keys: {missing}")
+    if not isinstance(entry["scenario"], str) or not entry["scenario"]:
+        raise ValueError("bench entry 'scenario' must be a non-empty string")
+    if not isinstance(entry["tag"], str) or not entry["tag"]:
+        raise ValueError("bench entry 'tag' must be a non-empty string")
+    if not isinstance(entry["device_count"], int) or entry["device_count"] < 1:
+        raise ValueError("bench entry 'device_count' must be a positive int")
+    try:
+        json.dumps(entry, sort_keys=True)
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"bench entry is not JSON-serializable: {e}") from e
+    return entry
+
+
+def diff_bench_entries(prev: Dict, new: Dict) -> List[str]:
+    """Human-readable newest-vs-previous diff lines over shared numeric
+    scalar keys (identity keys skipped); booleans are compared as flips."""
+    lines: List[str] = []
+    skip = set(BENCH_ENTRY_REQUIRED_KEYS)
+    for k in sorted(set(prev) & set(new)):
+        if k in skip:
+            continue
+        a, b = prev[k], new[k]
+        if isinstance(a, bool) or isinstance(b, bool):
+            if a != b:
+                lines.append(f"  {k}: {a} -> {b}")
+            continue
+        if not (isinstance(a, (int, float)) and isinstance(b, (int, float))):
+            continue
+        if a == b:
+            continue
+        rel = f" ({(b - a) / a:+.1%})" if a else ""
+        lines.append(f"  {k}: {a:g} -> {b:g}{rel}")
+    return lines
+
 
 def append_bench_history(path: str, entry: Dict, *, limit: int = BENCH_HISTORY_LIMIT) -> Dict:
     """Append one run to a versioned benchmark artifact instead of
@@ -57,9 +106,14 @@ def append_bench_history(path: str, entry: Dict, *, limit: int = BENCH_HISTORY_L
     CI can diff the newest entry against the previous comparable one rather
     than only shape-checking a single overwritten snapshot.  A legacy flat
     v1 payload found at ``path`` is migrated in place as the history's first
-    entry (tagged ``pre-history``).  Every entry should carry ``scenario``,
-    ``backend``, ``device_count`` and ``tag`` so diffs compare like with
-    like.  Returns the payload written."""
+    entry (tagged ``pre-history``).  Every entry must pass
+    ``validate_bench_entry`` (carry ``scenario``, ``backend``,
+    ``device_count``, ``tag``) so diffs compare like with like — a malformed
+    entry raises instead of silently dropping into history.  After the
+    append, the newest entry is diffed against the previous entry of the
+    SAME scenario (if any) and the numeric deltas are printed.  Returns the
+    payload written."""
+    validate_bench_entry(entry)
     history: List[Dict] = []
     if os.path.exists(path):
         try:
@@ -77,12 +131,33 @@ def append_bench_history(path: str, entry: Dict, *, limit: int = BENCH_HISTORY_L
                 old.setdefault("device_count", 1)
                 old.setdefault("tag", "pre-history")
                 history = [old]
+    prev = next(
+        (e for e in reversed(history) if e.get("scenario") == entry.get("scenario")),
+        None,
+    )
     history.append(entry)
     history = history[-max(int(limit), 1):]
     payload = {"version": 2, "history": history}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
+    name = os.path.basename(path)
+    if prev is not None:
+        lines = diff_bench_entries(prev, entry)
+        print(
+            f"[bench-history] {name}: {entry['scenario']} "
+            f"{prev.get('tag', '?')} -> {entry['tag']} "
+            f"({len(lines)} metric(s) changed)",
+            flush=True,
+        )
+        for ln in lines:
+            print(ln, flush=True)
+    else:
+        print(
+            f"[bench-history] {name}: first '{entry['scenario']}' entry "
+            f"@ {entry['tag']} ({len(history)} total)",
+            flush=True,
+        )
     return payload
 
 

@@ -1,0 +1,12 @@
+"""Config-driven serving workload harness.
+
+``scenarios``  — named, JSON-able workload recipes (arrival process x tier
+                 mix x task popularity x length buckets) and the converter
+                 that turns one into a live ``WorkloadConfig`` calibrated
+                 against the hardware model's capacity.
+``traffic``    — shared request-queue builders (the storm boilerplate the
+                 per-scenario benchmarks used to duplicate).
+``run_harness``— the CLI: generate a seeded trace, replay it through the
+                 full admission -> residency -> schedule -> DVFS path, emit
+                 a structured summary and append it to BENCH_serving.json.
+"""

@@ -1,0 +1,258 @@
+"""Trace-driven serving harness CLI: generate (or load) a seeded request
+trace and replay it through the FULL admission -> residency -> schedule ->
+DVFS path on the modeled clock, in bounded memory, then emit a structured
+summary and append it as a tagged entry to the versioned BENCH_serving.json
+history (newest-vs-previous diff printed by the history writer).
+
+Usage:
+  python benchmarks/harness/run_harness.py                         # default
+  python benchmarks/harness/run_harness.py --scenario mmpp_multitask \
+      --requests 100000 --verify-determinism
+  python benchmarks/harness/run_harness.py --smoke                 # CI gate
+  python benchmarks/harness/run_harness.py --save-trace /tmp/t.jsonl
+  python benchmarks/harness/run_harness.py --trace /tmp/t.jsonl    # replay
+
+``--smoke`` is the CI configuration: 10^4 requests of the (bursty MMPP x
+skewed multi-task) scenario plus a second same-seed replay to prove the
+summary is bit-identical.  The emitted ``workload_replay`` row carries the
+keys ``scratch/run_ci.sh`` grep-gates on: ``accepted_slo_misses`` (the
+admission contract), ``shed_bounded``, ``max_traces_per_bucket_replica``
+(the zero-new-traces invariant), and ``deterministic``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+from benchmarks.common import append_bench_history, emit, git_tag
+from benchmarks.harness.scenarios import (
+    SCENARIOS,
+    build_workload,
+    full_depth_service_s,
+)
+from repro.hwmodel.edgebert_accel import albert_layer_stats
+from repro.serving.admission import AdmissionController
+from repro.serving.dvfs import (
+    BatchedDVFSArbiter,
+    LatencyAwareDVFSController,
+    calibrate_predictor,
+    no_early_exit_baseline,
+)
+from repro.serving.engine import ClassifierServer
+from repro.serving.workload import (
+    AdmissionServerTarget,
+    ResidencyRouterTarget,
+    TraceReplayer,
+    generate_trace,
+    load_trace,
+    save_trace,
+    summaries_identical,
+)
+
+LANES = 4
+TARGET_MULT = 1.5                      # deployment-style latency headroom
+BEST_EFFORT_QUEUE = 8 * LANES          # bounded; overflow sheds oldest
+
+
+def _model_and_controller(spec, *, trained: bool, target_mult: float):
+    """The serving stack's model + calibrated DVFS controller factory, built
+    once per process (jit caches are per-server, so fresh targets recompile
+    but share the model/params)."""
+    from benchmarks.bench_batched_dvfs import _setup
+
+    model, params, cfg, data, _thr = _setup(smoke=not trained)
+    buckets = tuple(int(b) for b in spec["buckets"])
+    stats = albert_layer_stats(seq_len=max(buckets))
+    stats.n_layers = cfg.n_layers
+    target = no_early_exit_baseline(stats)["latency_s"] * target_mult
+    predictor = calibrate_predictor(
+        model, params, [data.batch(100 + i) for i in range(2)], quantile=1.0
+    )
+
+    def ctrl_factory():
+        return LatencyAwareDVFSController(stats, target, predictor=predictor)
+
+    return model, params, cfg, buckets, ctrl_factory
+
+
+def build_target(spec, model, params, cfg, buckets, ctrl_factory):
+    """One fresh replay target for this scenario: a single admitted server,
+    or the full multi-task residency router with per-task admission.
+
+    Two contract-safety knobs the multi-task path needs under SUSTAINED
+    bursty load (the storm benches never hit these because their deadlines
+    are hand-picked): ``admission_headroom`` prices quotes extra-
+    conservatively (the per-task quote cannot see how long the affinity
+    policy will legally defer a non-resident task), and
+    ``affinity_margin_services`` gives ``TaskAffinityPolicy`` a positive
+    preemption margin — at the default 0 it swaps an urgent non-resident
+    task in only once its discounted slack is ALREADY negative, too late to
+    cover the task's remaining compute."""
+    tasks = [t for t, _ in spec.get("tasks", [])]
+    headroom = float(spec.get("admission_headroom", 1.25))
+    adm_kwargs = {"max_best_effort_queue": BEST_EFFORT_QUEUE,
+                  "headroom": headroom}
+    if not tasks:
+        server = ClassifierServer(
+            model, params, batch_lanes=LANES,
+            arbiter=BatchedDVFSArbiter(ctrl_factory()), buckets=buckets,
+        )
+        return AdmissionServerTarget(
+            server, AdmissionController(server, **adm_kwargs)
+        )
+    from repro.serving.residency import (
+        ResidencyRouter,
+        TaskAffinityPolicy,
+        TaskDeployment,
+        TaskResidencyManager,
+    )
+
+    ctrl = ctrl_factory()
+    svc = full_depth_service_s(ctrl, cfg.n_layers, buckets)
+    margin = float(spec.get("affinity_margin_services", 4.0)) * svc(max(buckets))
+    deps = {
+        t: TaskDeployment(
+            t, n_params=11e6, pruning_occupancy=0.4, spans=(0,) * 6 + (64,) * 6
+        )
+        for t in tasks
+    }
+    sram_tasks = float(spec.get("sram_tasks", 2))
+    res = TaskResidencyManager(
+        deps, sram_bytes=sram_tasks * deps[tasks[0]].storage()["total_bytes"]
+    )
+    router = ResidencyRouter(
+        model, params["embed"], {t: params for t in tasks},
+        residency=res, deployments=deps,
+        task_policy=TaskAffinityPolicy(preempt_slack_s=margin),
+        arbiter=BatchedDVFSArbiter(ctrl_factory()), buckets=buckets,
+        batch_lanes=LANES,
+    )
+    return ResidencyRouterTarget(router, admission_kwargs=adm_kwargs)
+
+
+def run_once(spec, n, seed, model, params, cfg, buckets, ctrl_factory,
+             *, trace_path=None):
+    ctrl = ctrl_factory()
+    svc = full_depth_service_s(ctrl, cfg.n_layers, buckets)
+    target = build_target(spec, model, params, cfg, buckets, ctrl_factory)
+    replayer = TraceReplayer(target, vocab_size=cfg.vocab_size, token_seed=seed)
+    if trace_path is not None:
+        events = load_trace(trace_path)
+    else:
+        wl = build_workload(spec, ctrl=ctrl, n_layers=cfg.n_layers,
+                            lanes=LANES, seed=seed)
+        events = generate_trace(wl, n, service_s=svc)
+    return replayer.replay(events)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--scenario", default="mmpp_multitask",
+                        choices=sorted(SCENARIOS))
+    parser.add_argument("--requests", type=int, default=None,
+                        help="override the scenario's trace length")
+    parser.add_argument("--seed", type=int, default=None)
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI config: 10^4 requests + determinism check")
+    parser.add_argument("--verify-determinism", action="store_true",
+                        help="replay the same seed twice on a fresh stack "
+                             "and require a bit-identical summary")
+    parser.add_argument("--trained", action="store_true",
+                        help="use the phase-1+2 trained toy model")
+    parser.add_argument("--target-mult", type=float, default=TARGET_MULT)
+    parser.add_argument("--trace", default=None,
+                        help="replay a saved JSONL trace instead of generating")
+    parser.add_argument("--save-trace", default=None,
+                        help="generate the trace, save it as JSONL, and exit")
+    parser.add_argument("--no-bench-append", action="store_true",
+                        help="skip the BENCH_serving.json history append")
+    args = parser.parse_args()
+
+    spec = SCENARIOS[args.scenario]
+    n = args.requests if args.requests is not None else int(spec["requests"])
+    if args.smoke:
+        n = min(n, 10_000)
+    seed = args.seed if args.seed is not None else int(spec.get("seed", 0))
+    verify = args.verify_determinism or args.smoke
+
+    model, params, cfg, buckets, ctrl_factory = _model_and_controller(
+        spec, trained=args.trained, target_mult=args.target_mult
+    )
+
+    if args.save_trace is not None:
+        ctrl = ctrl_factory()
+        wl = build_workload(spec, ctrl=ctrl, n_layers=cfg.n_layers,
+                            lanes=LANES, seed=seed)
+        svc = full_depth_service_s(ctrl, cfg.n_layers, buckets)
+        wrote = save_trace(args.save_trace, generate_trace(wl, n, service_s=svc))
+        print(f"saved {wrote} events to {args.save_trace}", flush=True)
+        return
+
+    summary = run_once(spec, n, seed, model, params, cfg, buckets,
+                       ctrl_factory, trace_path=args.trace)
+    deterministic = None
+    if verify:
+        again = run_once(spec, n, seed, model, params, cfg, buckets,
+                         ctrl_factory, trace_path=args.trace)
+        deterministic = summaries_identical(summary, again)
+
+    shed_bounded = int(summary["shed"] <= summary["submitted"]
+                       and summary["completed"] + summary["rejected"]
+                       + summary["shed"] == summary["submitted"])
+    emit(
+        "workload_replay", 0.0,
+        f"scenario={args.scenario};requests={summary['requests']};"
+        f"completed={summary['completed']};accepted={summary['accepted']};"
+        f"rejected={summary['rejected']};requoted={summary['requoted']};"
+        f"shed={summary['shed']};shed_bounded={shed_bounded};"
+        f"accepted_slo_misses={summary['accepted_slo_misses']};"
+        f"throughput_rps={summary['throughput_rps']:.1f};"
+        f"energy_per_request_j={summary['energy_per_request_j']:.3e};"
+        f"queue_delay_steps_p99={summary['queue_delay_steps_p99']:.1f};"
+        f"max_traces_per_bucket_replica={summary['max_traces_per_bucket_replica']};"
+        f"peak_outstanding={summary['peak_outstanding']};"
+        f"task_swaps={summary.get('task_swaps', 0)};"
+        + (f"deterministic={int(deterministic)};" if deterministic is not None
+           else "")
+        + f"seed={seed}",
+    )
+    print(json.dumps(summary, indent=2, sort_keys=True), flush=True)
+
+    if not args.no_bench_append:
+        entry = {
+            "scenario": "workload_replay",
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "tag": git_tag(),
+            "workload": args.scenario,
+            "seed": seed,
+            "smoke": bool(args.smoke),
+            "trained": bool(args.trained),
+            "target_mult": float(args.target_mult),
+            "lanes": LANES,
+            "bucket_count": len(buckets),
+        }
+        if deterministic is not None:
+            entry["deterministic"] = bool(deterministic)
+        for k, v in summary.items():
+            if isinstance(v, (int, float, bool)) or k in ("per_tier", "per_task"):
+                entry[k] = v
+        append_bench_history(os.path.join(_ROOT, "BENCH_serving.json"), entry)
+
+    if deterministic is False:
+        print("FAIL: same-seed replays diverged", flush=True)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

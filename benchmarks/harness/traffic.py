@@ -1,0 +1,25 @@
+"""Shared request-queue builders for the serving benchmarks.
+
+This is the storm boilerplate the per-scenario benchmarks each hand-rolled;
+``bench_batched_dvfs`` (and anything new) imports it from here so every
+benchmark shapes its queues identically."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+
+def mixed_queue(data, buckets, n_queue: int, seed: int = 0):
+    """Requests with lengths spread across (and inside) the buckets —
+    round-robin over buckets, uniform length inside each, tokens drawn from
+    the dataset so the content distribution matches training."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_queue):
+        b = data.batch(200 + i // data.global_batch)
+        toks = b["tokens"][i % data.global_batch]
+        bucket = buckets[i % len(buckets)]
+        length = int(rng.integers(max(4, bucket // 2 + 1), bucket + 1))
+        reqs.append(Request(uid=i, tokens=np.asarray(toks[:length], np.int32)))
+    return reqs

@@ -1,0 +1,120 @@
+"""Trace-driven load replay, end to end: generate a seeded workload, save
+it, load it back, and replay it through the full serving path.
+
+The workload subsystem (``serving/workload.py``) separates WHAT traffic
+arrives from WHO serves it:
+
+* A ``WorkloadConfig`` composes a seeded arrival process (here: a bursty
+  two-state MMPP — calm stretches punctuated by arrival storms) with SLO
+  tiers (explicit contracts priced as a multiple of each request's OWN
+  full-depth service time, next to best-effort traffic), a Zipf-skewed
+  multi-task popularity mix, and per-bucket length sampling.  The trace is
+  a pure function of (config, seed) on the MODELED clock — no wall time —
+  so the same config replays bit-identically anywhere.
+
+* ``save_trace``/``load_trace`` round-trip the stream through JSONL.
+  Token payloads are NOT stored: the replayer derives each request's
+  tokens from ``(token_seed, uid)``, so a million-request trace stays a
+  few tens of MB and a loaded trace reproduces the generated one exactly.
+
+* ``TraceReplayer`` drives the trace through a live target in arrival
+  order: it steps the stack until the modeled clock reaches each arrival
+  (idle gaps fast-forward through the arbiter — idle time passes, it is
+  not compressed), submits through per-task admission control, and polls
+  every step so retained state stays O(outstanding) no matter how long
+  the trace is.
+
+The target here is the full multi-task path — per-task
+``AdmissionController``s over a ``ResidencyRouter`` whose four task
+servers share one ``BatchedDVFSArbiter`` clock and an SRAM working set
+that only fits two tasks — so the replay exercises admission quotes,
+eNVM swap stalls, task-affinity arbitration, EDF lane scheduling, and
+shared-clock DVFS together.  The summary printed at the end is the same
+structured dict the benchmark harness appends to ``BENCH_serving.json``
+(run ``benchmarks/harness/run_harness.py`` for the CI-gated version).
+
+Run:  PYTHONPATH=src python examples/replay_trace.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+REQUESTS = 2_000
+SEED = 11
+
+
+def main() -> None:
+    from benchmarks.harness.run_harness import (
+        _model_and_controller,
+        build_target,
+    )
+    from benchmarks.harness.scenarios import (
+        SCENARIOS,
+        build_workload,
+        full_depth_service_s,
+    )
+    from repro.serving.workload import (
+        TraceReplayer,
+        generate_trace,
+        load_trace,
+        save_trace,
+        summaries_identical,
+    )
+
+    spec = SCENARIOS["mmpp_multitask"]
+    model, params, cfg, buckets, ctrl_factory = _model_and_controller(
+        spec, trained=False, target_mult=1.5
+    )
+    ctrl = ctrl_factory()
+    svc = full_depth_service_s(ctrl, cfg.n_layers, buckets)
+    wl = build_workload(spec, ctrl=ctrl, n_layers=cfg.n_layers, lanes=4,
+                        seed=SEED)
+
+    # -- generate -> save -> load: the JSONL round-trip is exact ----------
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "trace.jsonl")
+        n = save_trace(path, generate_trace(wl, REQUESTS, service_s=svc))
+        print(f"saved {n} events ({os.path.getsize(path) / 1024:.0f} KiB) "
+              f"-> {os.path.basename(path)}")
+
+        replayer = TraceReplayer(
+            build_target(spec, model, params, cfg, buckets, ctrl_factory),
+            vocab_size=cfg.vocab_size, token_seed=SEED,
+        )
+        summary = replayer.replay(load_trace(path))
+
+    print(f"\n== replayed {summary['requests']} requests over "
+          f"{summary['modeled_span_s']:.1f} modeled seconds ==")
+    print(f"completed {summary['completed']} "
+          f"({summary['completed_explicit']} explicit-SLO / "
+          f"{summary['completed_best_effort']} best-effort), "
+          f"rejected {summary['rejected']} at admission, "
+          f"shed {summary['shed']} best-effort")
+    print(f"accepted-SLO misses: {summary['accepted_slo_misses']} "
+          f"(an admitted contract is a promise)")
+    print(f"queue delay p50/p95/p99: {summary['queue_delay_s_p50'] * 1e3:.1f} / "
+          f"{summary['queue_delay_s_p95'] * 1e3:.1f} / "
+          f"{summary['queue_delay_s_p99'] * 1e3:.1f} ms")
+    print(f"throughput {summary['throughput_rps']:.0f} req/s, "
+          f"energy {summary['energy_per_request_j'] * 1e3:.3f} mJ/request, "
+          f"{summary.get('task_swaps', 0)} task swaps")
+    print(f"jit traces: {summary['step_traces']} total, max "
+          f"{summary['max_traces_per_bucket_replica']} per (bucket, replica) "
+          f"across {summary['requests']} requests")
+    print(f"peak outstanding {summary['peak_outstanding']} requests "
+          f"(retention is O(outstanding), not O(trace))")
+
+    # -- same seed, fresh stack: the summary is bit-identical -------------
+    again = TraceReplayer(
+        build_target(spec, model, params, cfg, buckets, ctrl_factory),
+        vocab_size=cfg.vocab_size, token_seed=SEED,
+    ).replay(generate_trace(wl, REQUESTS, service_s=svc))
+    assert summaries_identical(summary, again), "same-seed replays diverged"
+    print("\nsame-seed regenerated replay: bit-identical summary")
+
+
+if __name__ == "__main__":
+    main()

@@ -230,7 +230,8 @@ for task, st in stats.items():
           f"{st['avg_exit_layer']:.1f}/{cfg.n_layers}, savings {st['runtime_savings']:.0%}, "
           f"energy {st['energy_j']*1e3:.2f}mJ ({e_noee / st['energy_j']:.1f}x vs no-early-exit, "
           f"{st['deadline_misses']} deadline misses, queue delay "
-          f"p50/p95 {st['queue_delay_steps_p50']:.0f}/{st['queue_delay_steps_p95']:.0f} steps)")
+          f"p50/p95/p99 {st['queue_delay_steps_p50']:.0f}/{st['queue_delay_steps_p95']:.0f}"
+          f"/{st['queue_delay_steps_p99']:.0f} steps)")
 print(f"task switches: {router.switches}, embedding reloads: {router.embed_reloads} "
       "(embeddings are eNVM-resident); fused step traces/server: "
       f"{[st['step_traces'] for st in stats.values()]}")

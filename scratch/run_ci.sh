@@ -51,6 +51,17 @@
 #     advantage must reproduce (latency advantage >= 10x), the task-swap
 #     cost line must emit, and the run must append an `nvm_poweron` entry to
 #     the BENCH_serving.json history.
+#   * workload replay harness (benchmarks/harness, --smoke): 10^4 requests
+#     of the bursty-MMPP x skewed-multi-task scenario driven through the
+#     FULL admission -> residency -> schedule -> DVFS path on the modeled
+#     clock, twice with the same seed.  Gates: `accepted_slo_misses=0` (the
+#     admission contract holds under statistically-shaped open-loop load,
+#     not just hand-tuned storms), `shed_bounded=1` (request conservation:
+#     completed + rejected + shed == submitted), `requests>=10000`,
+#     `max_traces_per_bucket_replica<=1` (zero new jit traces beyond one
+#     compile per (bucket, replica)), `deterministic=1` (bit-identical
+#     summary across same-seed replays), and a schema-valid
+#     `workload_replay` entry appended to the BENCH_serving.json history.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -78,6 +89,11 @@ echo "== bench_nvm_poweron --smoke =="
 nvm_log=$(mktemp)
 python benchmarks/bench_nvm_poweron.py --smoke | tee "$nvm_log"
 nvm=$?
+
+echo "== workload replay harness --smoke (10^4 MMPP x multi-task, full path) =="
+harness_log=$(mktemp)
+python benchmarks/harness/run_harness.py --smoke | tee "$harness_log"
+harness=$?
 
 echo "== grep-gate: step_traces <= bucket_count (all scenarios) =="
 gate=0
@@ -298,6 +314,56 @@ else
         echo "gate ok: one compile per (bucket, replica), zero warm traces"
     fi
 fi
+echo "== grep-gate: workload_replay (contract, conservation, traces, determinism) =="
+wrl=$(grep '^workload_replay,' "$harness_log" | head -1)
+if [ -z "$wrl" ]; then
+    echo "GATE FAIL: no workload_replay telemetry emitted (harness smoke run"
+    echo "           produced no summary row)"
+    gate=1
+else
+    wreq=$(echo "$wrl" | grep -o 'requests=[0-9]*' | head -1); wreq=${wreq#*=}
+    if [ -z "$wreq" ] || [ "$wreq" -lt 10000 ]; then
+        echo "GATE FAIL: harness smoke replayed only ${wreq:-?} requests"
+        echo "           (the CI configuration is >= 10^4)"
+        gate=1
+    else
+        echo "gate ok: ${wreq} requests replayed through the full path"
+    fi
+    wmiss=$(echo "$wrl" | grep -o ';accepted_slo_misses=[0-9]*' | head -1)
+    wmiss=${wmiss#*=}
+    if [ -z "$wmiss" ] || [ "$wmiss" -gt 0 ]; then
+        echo "GATE FAIL: ${wmiss:-?} ADMITTED SLOs missed under shaped MMPP"
+        echo "           multi-task load — the admission contract must hold"
+        echo "           under open-loop traffic, not just hand-tuned storms"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses under shaped open-loop load"
+    fi
+    wshed=$(echo "$wrl" | grep -o 'shed_bounded=[0-9]*'); wshed=${wshed#*=}
+    if [ "$wshed" != "1" ]; then
+        echo "GATE FAIL: request conservation broken (completed + rejected +"
+        echo "           shed != submitted, or shed exploded)"
+        gate=1
+    else
+        echo "gate ok: request conservation holds (shed bounded)"
+    fi
+    wtrc=$(echo "$wrl" | grep -o 'max_traces_per_bucket_replica=[0-9]*')
+    wtrc=${wtrc#*=}
+    if [ -z "$wtrc" ] || [ "$wtrc" -gt 1 ]; then
+        echo "GATE FAIL: replay recompiled inside a bucket (max traces per"
+        echo "           (bucket, replica) = ${wtrc:-?}, want <= 1)"
+        gate=1
+    else
+        echo "gate ok: one compile per (bucket, replica) across the replay"
+    fi
+    wdet=$(echo "$wrl" | grep -o 'deterministic=[0-9]*'); wdet=${wdet#*=}
+    if [ "$wdet" != "1" ]; then
+        echo "GATE FAIL: same-seed replays diverged (deterministic=${wdet:-?})"
+        gate=1
+    else
+        echo "gate ok: bit-identical summary across same-seed replays"
+    fi
+fi
 if python - <<'EOF'
 import json, sys
 try:
@@ -333,6 +399,25 @@ if not any(e.get("scenario") == "sharded_serving" for e in hist):
 if not any(e.get("scenario") == "nvm_poweron" for e in hist):
     print("GATE FAIL: no nvm_poweron entry in BENCH_serving.json history")
     sys.exit(1)
+replay = [e for e in hist if e.get("scenario") == "workload_replay"]
+if not replay:
+    print("GATE FAIL: no workload_replay entry in BENCH_serving.json history"
+          " (harness smoke run did not append)")
+    sys.exit(1)
+wr = replay[-1]
+wneed = {"scenario", "backend", "device_count", "tag", "workload", "seed",
+         "requests", "completed", "accepted_slo_misses",
+         "accepted_slo_miss_rate", "throughput_rps", "energy_per_request_j",
+         "queue_delay_steps_p50", "queue_delay_steps_p95",
+         "queue_delay_steps_p99", "max_traces_per_bucket_replica",
+         "peak_outstanding", "deterministic", "per_tier", "per_task"}
+wmissing = wneed - wr.keys()
+if wmissing:
+    print(f"GATE FAIL: newest workload_replay entry missing {sorted(wmissing)}")
+    sys.exit(1)
+print(f"gate ok: workload_replay entry ({wr['workload']}, "
+      f"{wr['requests']} requests, tag {wr['tag']}, "
+      f"deterministic={wr['deterministic']})")
 print(f"gate ok: BENCH_serving.json v{b['version']} history "
       f"({len(hist)} entries, newest pallas_serving tag {cur['tag']}, "
       f"speedup {cur['speedup_ref_over_pallas_p50']:.2f}x)")
@@ -354,7 +439,7 @@ for k in ("logit_parity", "exit_depth_parity"):
         sys.exit(1)
 EOF
 then :; else gate=1; fi
-rm -f "$batched_log" "$sharded_log" "$nvm_log"
+rm -f "$batched_log" "$sharded_log" "$nvm_log" "$harness_log"
 
-echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched sharded=$sharded nvm=$nvm gate=$gate =="
-exit $(( tier1 || smoke || batched || sharded || nvm || gate ))
+echo "== summary: tier1=$tier1 smoke=$smoke batched=$batched sharded=$sharded nvm=$nvm harness=$harness gate=$gate =="
+exit $(( tier1 || smoke || batched || sharded || nvm || harness || gate ))

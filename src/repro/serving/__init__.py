@@ -23,6 +23,21 @@ from repro.serving.dvfs import (
     default_albert_controller,
     no_early_exit_baseline,
 )
+from repro.serving.workload import (
+    AdmissionServerTarget,
+    DiurnalArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    ResidencyRouterTarget,
+    TierSpec,
+    TraceEvent,
+    TraceReplayer,
+    WorkloadConfig,
+    generate_trace,
+    load_trace,
+    save_trace,
+    summaries_identical,
+)
 from repro.serving.residency import (
     BlindEDFTaskPolicy,
     ResidencyRouter,

@@ -62,7 +62,7 @@ gate is exactly that asymmetry: ``accepted_slo_misses == 0`` with
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Protocol, TYPE_CHECKING
+from typing import Any, Callable, List, Optional, Protocol, TYPE_CHECKING
 
 import numpy as np
 
@@ -168,6 +168,16 @@ class AdmissionController:
              ``PlacementPolicy`` routing accepted contracts across a
              sharded server's replicas (default ``LeastLoadedPlacement``).
              Ignored on single-replica servers.
+    extra_wait_s:
+             optional zero-arg callable priced into every quote's wait term.
+             This is the cross-SERVER demand hook: sibling engines' QUEUED
+             work is invisible through the shared arbiter (only their
+             in-flight lanes are), so a multi-server router that can see its
+             siblings' queues prices them here — without it, sustained
+             bursty multi-task load admits contracts whose wait the sibling
+             backlog then overruns (found by the trace-replay harness).
+             Must return an upper bound in modeled seconds; conservative
+             over-pricing only costs rejections, never a broken contract.
     """
 
     def __init__(
@@ -179,6 +189,7 @@ class AdmissionController:
         max_best_effort_queue: Optional[int] = None,
         fallback_steps: float = 1.0,
         placement: Optional[PlacementPolicy] = None,
+        extra_wait_s: Optional[Callable[[], float]] = None,
     ):
         assert headroom >= 1.0, "headroom < 1 would quote below the estimate"
         assert on_infeasible in ("reject", "requote")
@@ -194,6 +205,7 @@ class AdmissionController:
         self.placement: PlacementPolicy = (
             LeastLoadedPlacement() if placement is None else placement
         )
+        self.extra_wait_s = extra_wait_s
 
     # ----------------------------------------------------------- replicas
     def _replicas(self) -> int:
@@ -495,6 +507,9 @@ class AdmissionController:
         res = getattr(self.server, "residency", None)
         if res is not None:
             wait += res.pending_swap_stall_s(getattr(self.server, "task", None))
+        # cross-server queued demand the arbiter cannot surface (see ctor)
+        if self.extra_wait_s is not None:
+            wait += max(0.0, float(self.extra_wait_s()))
         min_deadline = (wait + service) * self.headroom
         feasible = (
             req.deadline_s is not None

@@ -696,6 +696,7 @@ class ClassifierServer:
             "lane_occupancy": st["lane_occupancy"],
             "queue_delay_steps_p50": st["queue_delay_steps_p50"],
             "queue_delay_steps_p95": st["queue_delay_steps_p95"],
+            "queue_delay_steps_p99": st["queue_delay_steps_p99"],
             "queue_delay_steps_max": st["queue_delay_steps_max"],
             **{k: st[k] for k in _LIFECYCLE_KEYS},
         }
@@ -1264,6 +1265,7 @@ class DecoderServer:
             "lane_occupancy": st["lane_occupancy"],
             "queue_delay_steps_p50": st["queue_delay_steps_p50"],
             "queue_delay_steps_p95": st["queue_delay_steps_p95"],
+            "queue_delay_steps_p99": st["queue_delay_steps_p99"],
             "queue_delay_steps_max": st["queue_delay_steps_max"],
             **{k: st[k] for k in _LIFECYCLE_KEYS},
         }

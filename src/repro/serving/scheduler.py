@@ -905,6 +905,7 @@ class LaneScheduler:
             "modeled_now_s": self.now_s,
             "queue_delay_steps_p50": self._delays.percentile(50),
             "queue_delay_steps_p95": self._delays.percentile(95),
+            "queue_delay_steps_p99": self._delays.percentile(99),
             "queue_delay_steps_max": self._delays.max if self._delays.n else 0.0,
             # ---- admission / preemption lifecycle counters ----
             "accepted": self.admission_stats["accepted"],

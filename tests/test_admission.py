@@ -532,6 +532,7 @@ class TestTelemetryGuards:
         st = srv.telemetry()
         for key in (
             "queue_delay_steps_p50", "queue_delay_steps_p95",
+            "queue_delay_steps_p99",
             "queue_delay_steps_max", "deadline_misses", "accepted_slo_misses",
             "energy_j", "modeled_latency_s", "rejected", "requoted", "shed",
             "preemptions", "restored_steps_saved",

@@ -230,8 +230,14 @@ class TestSteppedAPI:
             assert r.retire_step >= r.first_compute_step
         delays = [r.first_compute_step - r.arrival_step for r in srv.done.values()]
         assert max(delays) > 0                 # someone actually queued
-        assert st["queue_delay_steps_p95"] >= st["queue_delay_steps_p50"] >= 0.0
+        assert (
+            st["queue_delay_steps_p99"]
+            >= st["queue_delay_steps_p95"]
+            >= st["queue_delay_steps_p50"]
+            >= 0.0
+        )
         assert st["queue_delay_steps_max"] == max(delays)
+        assert st["queue_delay_steps_p99"] <= st["queue_delay_steps_max"]
 
 
 class TestCrossBucketPolicies:
@@ -475,7 +481,12 @@ class TestRetiredRequestRetention:
         st = sched.telemetry()
         assert st["sentences"] == total      # accounting survived every drop
         assert len(sched._delays.buf) <= sched._delays.cap
-        assert st["queue_delay_steps_p95"] >= st["queue_delay_steps_p50"] >= 0.0
+        assert (
+            st["queue_delay_steps_p99"]
+            >= st["queue_delay_steps_p95"]
+            >= st["queue_delay_steps_p50"]
+            >= 0.0
+        )
 
     def test_incremental_delay_stats_match_rescan_semantics(self):
         """Below the reservoir cap the incremental percentiles are EXACT —
@@ -492,6 +503,7 @@ class TestRetiredRequestRetention:
         st = sched.telemetry()
         assert st["queue_delay_steps_p50"] == float(np.percentile(delays, 50))
         assert st["queue_delay_steps_p95"] == float(np.percentile(delays, 95))
+        assert st["queue_delay_steps_p99"] == float(np.percentile(delays, 99))
         assert st["queue_delay_steps_max"] == float(max(delays))
 
     def test_slo_miss_counter_survives_poll_drop(self):

@@ -1,0 +1,339 @@
+"""Trace-driven workload harness: seeded arrival-process statistics,
+generator determinism and mix proportions, JSONL round-trips, bounded-memory
+replay at 10^5 requests, full-path replay determinism with zero extra jit
+traces, and the benchmark-history schema/diff machinery."""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models.model import build_model
+from repro.serving.admission import AdmissionController
+from repro.serving.engine import ClassifierServer, Request
+from repro.serving.scheduler import LaneScheduler
+from repro.serving.workload import (
+    AdmissionServerTarget,
+    DiurnalArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+    TierSpec,
+    TraceReplayer,
+    WorkloadConfig,
+    generate_trace,
+    load_trace,
+    save_trace,
+    summaries_identical,
+)
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+
+def _take(proc, n, seed):
+    it = proc.times(np.random.default_rng(seed))
+    return np.array([t for _, t in zip(range(n), it)])
+
+
+class TestArrivalProcesses:
+    def test_poisson_determinism_and_rate(self):
+        a = _take(PoissonArrivals(100.0), 20_000, seed=1)
+        b = _take(PoissonArrivals(100.0), 20_000, seed=1)
+        assert np.array_equal(a, b)                      # seeded => identical
+        assert not np.array_equal(a, _take(PoissonArrivals(100.0), 20_000, 2))
+        assert np.all(np.diff(a) > 0)                    # strictly increasing
+        rate = len(a) / a[-1]
+        assert abs(rate - 100.0) / 100.0 < 0.05          # empirical ~ configured
+
+    def test_mmpp_determinism_rate_and_burstiness(self):
+        proc = MMPPArrivals((50.0, 500.0), (2.0, 0.5))
+        a = _take(proc, 30_000, seed=2)
+        assert np.array_equal(a, _take(proc, 30_000, seed=2))
+        assert np.all(np.diff(a) > 0)
+        rate = len(a) / a[-1]
+        expect = proc.long_run_rate_hz                   # 140 Hz here
+        assert abs(rate - expect) / expect < 0.15
+        # the point of MMPP: burstier than Poisson.  Squared coefficient of
+        # variation of inter-arrival gaps is 1 for Poisson, >> 1 here.
+        gaps = np.diff(a)
+        cv2 = float(np.var(gaps) / np.mean(gaps) ** 2)
+        assert cv2 > 1.5
+
+    def test_diurnal_determinism_rate_and_modulation(self):
+        proc = DiurnalArrivals(100.0, period_s=10.0, depth=0.6)
+        a = _take(proc, 40_000, seed=3)
+        assert np.array_equal(a, _take(proc, 40_000, seed=3))
+        assert np.all(np.diff(a) > 0)
+        # over whole periods the mean rate is the base rate
+        whole = a[a < 10.0 * int(a[-1] / 10.0)]
+        rate = len(whole) / whole[-1]
+        assert abs(rate - 100.0) / 100.0 < 0.05
+        # and the envelope actually modulates: with phase 0 the first half of
+        # each period (sin > 0) must be visibly denser than the second half
+        phase = np.mod(whole, 10.0)
+        first, second = np.sum(phase < 5.0), np.sum(phase >= 5.0)
+        assert first / second > 1.3
+
+
+def _mixed_config(seed=7):
+    return WorkloadConfig(
+        arrivals=PoissonArrivals(200.0),
+        lengths=((16, 0.7), (32, 0.3)),
+        tiers=(TierSpec("explicit", 0.35, 80.0), TierSpec("best_effort", 0.65)),
+        tasks=(("mnli", 0.48), ("qqp", 0.24), ("sst2", 0.16), ("qnli", 0.12)),
+        seed=seed,
+    )
+
+
+class TestTraceGeneration:
+    def test_seeded_determinism_and_seed_sensitivity(self):
+        svc = lambda L: 0.001 * L
+        a = list(generate_trace(_mixed_config(7), 2000, service_s=svc))
+        b = list(generate_trace(_mixed_config(7), 2000, service_s=svc))
+        assert all(vars(x) == vars(y) for x, y in zip(a, b))
+        c = list(generate_trace(_mixed_config(8), 2000, service_s=svc))
+        assert any(vars(x) != vars(y) for x, y in zip(a, c))
+
+    def test_mix_proportions_and_deadline_pricing(self):
+        svc = lambda L: 0.001 * L
+        evs = list(generate_trace(_mixed_config(), 20_000, service_s=svc))
+        n = len(evs)
+        tiers = {t: sum(1 for e in evs if e.tier == t) / n
+                 for t in ("explicit", "best_effort")}
+        assert abs(tiers["explicit"] - 0.35) < 0.02
+        assert abs(tiers["best_effort"] - 0.65) < 0.02
+        tasks = {t: sum(1 for e in evs if e.task == t) / n
+                 for t, _ in _mixed_config().tasks}
+        for (t, w) in _mixed_config().tasks:
+            assert abs(tasks[t] - w) < 0.02, (t, tasks[t], w)
+        for e in evs[:500]:
+            bucket = 16 if e.length <= 16 else 32
+            assert max(4, bucket // 2 + 1) <= e.length <= bucket
+            if e.tier == "explicit":                 # slo_mult x own service
+                assert e.deadline_s == pytest.approx(80.0 * 0.001 * e.length)
+            else:
+                assert e.deadline_s is None
+
+    def test_jsonl_roundtrip(self, tmp_path):
+        svc = lambda L: 0.001 * L
+        evs = list(generate_trace(_mixed_config(), 500, service_s=svc))
+        path = str(tmp_path / "trace.jsonl")
+        assert save_trace(path, evs) == 500
+        back = list(load_trace(path))
+        assert len(back) == 500
+        assert all(vars(a) == vars(b) for a, b in zip(evs, back))
+
+
+class _NullEngine:
+    """Host-only engine: every request retires after one fused step, so the
+    replayer can churn 10^5 requests in seconds (clock: 1.0 s per step)."""
+
+    def bucket_key(self, req):
+        return len(req.tokens)
+
+    def bucket_begin(self, bucket):
+        pass
+
+    def lane_load(self, bucket, lane, req):
+        pass
+
+    def lanes_step(self, bucket, active):
+        return None
+
+    def lane_advance(self, bucket, lane, req, out, depth):
+        return True
+
+    def lane_finish(self, bucket, lane, req, depth):
+        pass
+
+    def bucket_end(self, bucket):
+        pass
+
+
+class TestBoundedMemoryReplay:
+    def test_hundred_thousand_requests_stay_bounded(self):
+        """10^5 requests through the replay loop: retained state must be
+        O(outstanding) — the done map high-water mark is ~zero (poll every
+        step), outstanding is bounded by the queueing regime, and the delay
+        reservoirs never exceed their cap."""
+        total = 100_000
+        lanes = 4
+        # lanes/step capacity at 1 s/step vs 3 req/s offered: stable queue
+        cfg = WorkloadConfig(
+            arrivals=PoissonArrivals(3.0),
+            lengths=((8, 1.0),),
+            tiers=(TierSpec("explicit", 0.3, 40.0), TierSpec("best_effort", 0.7)),
+            seed=11,
+        )
+        sched = LaneScheduler(lanes, _NullEngine(), buckets=(8,))
+        target = AdmissionServerTarget(sched)
+        rep = TraceReplayer(target, vocab_size=64, token_seed=0)
+        s = rep.replay(generate_trace(cfg, total, service_s=lambda L: 1.0))
+        assert s["requests"] == total
+        assert s["submitted"] == total
+        assert s["completed"] == total                   # no admission: all run
+        assert s["completed"] + s["rejected"] + s["shed"] == total
+        # boundedness: nothing retained scales with the trace length
+        assert s["peak_done"] <= lanes                   # polled every step
+        assert s["peak_outstanding"] < total // 100
+        assert len(sched.done) == 0
+        assert len(sched._delays.buf) <= sched._delays.cap
+        # the summary's reservoirs are bounded too (internal to the replayer,
+        # asserted via the percentiles being finite and ordered)
+        assert (
+            s["queue_delay_steps_p99"]
+            >= s["queue_delay_steps_p95"]
+            >= s["queue_delay_steps_p50"]
+            >= 0.0
+        )
+        assert s["modeled_span_s"] > 0.0
+        assert s["per_tier"]["explicit"]["completed"] > 0
+        assert s["per_tier"]["best_effort"]["completed"] > 0
+
+    def test_replay_is_deterministic_on_stub(self):
+        cfg = WorkloadConfig(
+            arrivals=MMPPArrivals((1.0, 10.0), (30.0, 6.0)),
+            lengths=((8, 1.0),),
+            tiers=(TierSpec("best_effort", 1.0),),
+            seed=5,
+        )
+
+        def run():
+            sched = LaneScheduler(4, _NullEngine(), buckets=(8,))
+            rep = TraceReplayer(AdmissionServerTarget(sched), vocab_size=64)
+            return rep.replay(generate_trace(cfg, 20_000))
+
+        assert summaries_identical(run(), run())
+
+
+class TestFullPathReplay:
+    """Real jitted model through admission + scheduler + DVFS arbiter."""
+
+    @pytest.fixture(scope="class")
+    def stack(self):
+        from repro.hwmodel.edgebert_accel import albert_layer_stats
+        from repro.serving.dvfs import (
+            LatencyAwareDVFSController,
+            no_early_exit_baseline,
+        )
+
+        cfg = dataclasses.replace(
+            get_smoke_config("albert_edgebert"), dtype="float32",
+            remat_policy="none",
+        )
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        buckets = (16, 32)
+        stats = albert_layer_stats(seq_len=max(buckets))
+        stats.n_layers = cfg.n_layers
+        target = no_early_exit_baseline(stats)["latency_s"] * 1.5
+
+        def ctrl_factory():
+            return LatencyAwareDVFSController(stats, target)
+
+        return model, params, cfg, buckets, ctrl_factory
+
+    def _run(self, stack, n=300, seed=0):
+        from repro.serving.dvfs import BatchedDVFSArbiter
+
+        model, params, cfg, buckets, ctrl_factory = stack
+        ctrl = ctrl_factory()
+        svc = lambda L: cfg.n_layers * ctrl.cycles_for_seq_len(
+            16 if L <= 16 else 32
+        ) / ctrl.max_op.freq_hz
+        wl = WorkloadConfig(
+            arrivals=MMPPArrivals(
+                (0.35 * 4 / svc(32), 1.5 * 4 / svc(32)), (0.08, 0.02)
+            ),
+            lengths=((16, 0.6), (32, 0.4)),
+            tiers=(TierSpec("explicit", 0.4, 80.0), TierSpec("best_effort", 0.6)),
+            seed=seed,
+        )
+        server = ClassifierServer(
+            model, params, batch_lanes=4,
+            arbiter=BatchedDVFSArbiter(ctrl_factory()), buckets=buckets,
+        )
+        target = AdmissionServerTarget(
+            server, AdmissionController(server, max_best_effort_queue=16)
+        )
+        rep = TraceReplayer(target, vocab_size=cfg.vocab_size, token_seed=seed)
+        return rep.replay(generate_trace(wl, n, service_s=svc))
+
+    def test_zero_extra_traces_bit_identical_and_conserved(self, stack):
+        s1 = self._run(stack)
+        # zero new traces beyond one compile per (bucket, replica) — the
+        # fixed-shape invariant must survive trace-driven traffic
+        assert s1["max_traces_per_bucket_replica"] == 1
+        assert s1["step_traces"] == len(stack[3])
+        # request conservation: every submission is completed, rejected at
+        # admission, or shed from the bounded best-effort queue
+        assert s1["completed"] + s1["rejected"] + s1["shed"] == s1["submitted"]
+        assert s1["submitted"] == s1["requests"]
+        # the admission contract holds under bursty trace-driven load
+        assert s1["accepted_slo_misses"] == 0
+        assert s1["completed_best_effort"] > 0
+        assert s1["energy_j"] > 0.0
+        # same seed, fresh stack => bit-identical structured summary
+        s2 = self._run(stack)
+        assert summaries_identical(s1, s2)
+        # different seed => different trace => different summary
+        s3 = self._run(stack, seed=1)
+        assert not summaries_identical(s1, s3)
+
+
+class TestBenchHistoryValidation:
+    def test_malformed_entry_fails_loudly(self, tmp_path):
+        from benchmarks.common import append_bench_history, validate_bench_entry
+
+        path = str(tmp_path / "BENCH.json")
+        with pytest.raises(ValueError, match="missing required keys"):
+            append_bench_history(path, {"scenario": "x", "tag": "t"})
+        assert not os.path.exists(path)              # nothing written
+        with pytest.raises(ValueError):
+            validate_bench_entry({"scenario": "", "backend": "cpu",
+                                  "device_count": 1, "tag": "t"})
+        with pytest.raises(ValueError, match="not JSON-serializable"):
+            validate_bench_entry({"scenario": "x", "backend": "cpu",
+                                  "device_count": 1, "tag": "t",
+                                  "bad": object()})
+
+    def test_appends_diff_against_previous_same_scenario(self, tmp_path, capsys):
+        from benchmarks.common import append_bench_history
+
+        path = str(tmp_path / "BENCH.json")
+        base = {"scenario": "workload_replay", "backend": "cpu",
+                "device_count": 1, "tag": "aaa", "throughput_rps": 100.0,
+                "accepted_slo_misses": 0}
+        append_bench_history(path, dict(base))
+        append_bench_history(path, {"scenario": "other", "backend": "cpu",
+                                    "device_count": 1, "tag": "aab"})
+        newer = dict(base, tag="bbb", throughput_rps=110.0)
+        append_bench_history(path, newer)
+        out = capsys.readouterr().out
+        # the diff is against the previous entry of the SAME scenario,
+        # skipping the unrelated one in between
+        assert "aaa -> bbb" in out
+        assert "throughput_rps: 100 -> 110" in out
+        payload = json.loads(open(path).read())
+        assert payload["version"] == 2
+        assert [e["tag"] for e in payload["history"]] == ["aaa", "aab", "bbb"]
+
+    def test_history_stays_bounded(self, tmp_path):
+        from benchmarks.common import append_bench_history
+
+        path = str(tmp_path / "BENCH.json")
+        for i in range(30):
+            append_bench_history(
+                path,
+                {"scenario": "s", "backend": "cpu", "device_count": 1,
+                 "tag": f"t{i}"},
+                limit=10,
+            )
+        payload = json.loads(open(path).read())
+        assert len(payload["history"]) == 10
+        assert payload["history"][-1]["tag"] == "t29"

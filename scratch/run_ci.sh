@@ -29,6 +29,12 @@
 #   * decode early exit: under the mixed classifier+decoder storm,
 #     `exit_beats_full` must be 1 (per-token exit strictly cheaper than
 #     full-depth decode) at 0 accepted-SLO misses on BOTH decode runs;
+#   * speculative decode: under the same mixed storm, `spec_parity=1`
+#     (self-speculative block decode emits tokens bit-identical to the
+#     per-token EE baseline), `tps_ratio` >= 1.5 (accepted tokens per fused
+#     step vs the per-token baseline's 1.0) at 0 accepted-SLO misses on
+#     both runs, plus a schema-valid `speculative_decode` entry in the
+#     BENCH_serving.json history;
 #   * pallas serving step: `parity=1` and `exit_parity=1` (use_pallas=True
 #     numerically interchangeable with the ref path over a full drain) at
 #     `pallas_slo_misses=0`, and the run must append a well-formed entry to
@@ -114,10 +120,11 @@ else
             echo "gate ok: ${traces} traces / ${count} buckets"
         fi
     done <<< "$pairs"
-    if [ "$npairs" -lt 4 ]; then
+    if [ "$npairs" -lt 5 ]; then
         echo "GATE FAIL: expected trace telemetry from the sequential, the"
-        echo "           interleaved, the admission-storm AND the"
-        echo "           decode-early-exit scenario, got ${npairs} pair(s)"
+        echo "           interleaved, the admission-storm, the"
+        echo "           decode-early-exit AND the speculative-decode"
+        echo "           scenario, got ${npairs} pair(s)"
         gate=1
     fi
 fi
@@ -200,6 +207,40 @@ else
         gate=1
     else
         echo "gate ok: 0 accepted-SLO misses on both decode runs"
+    fi
+fi
+echo "== grep-gate: speculative_decode (parity, >=1.5x tokens/step, 0 misses) =="
+sdl=$(grep '^speculative_decode,' "$batched_log" | head -1)
+if [ -z "$sdl" ]; then
+    echo "GATE FAIL: no speculative_decode telemetry emitted (self-speculative"
+    echo "           decode scenario missing from bench_batched_dvfs)"
+    gate=1
+else
+    spar=$(echo "$sdl" | grep -o 'spec_parity=[0-9]*'); spar=${spar#*=}
+    if [ "$spar" != "1" ]; then
+        echo "GATE FAIL: speculative decode tokens diverged from the per-token"
+        echo "           EE baseline — accepted tokens must be bit-identical"
+        gate=1
+    else
+        echo "gate ok: speculative decode bit-identical to per-token baseline"
+    fi
+    tpsr=$(echo "$sdl" | grep -o 'tps_ratio=[0-9.]*'); tpsr=${tpsr#*=}
+    if [ -z "$tpsr" ] || ! awk -v r="$tpsr" 'BEGIN { exit !(r >= 1.5) }'; then
+        echo "GATE FAIL: speculative decode reached only ${tpsr:-?}x the"
+        echo "           per-token baseline's tokens/fused-step (want >= 1.5x)"
+        gate=1
+    else
+        echo "gate ok: ${tpsr}x tokens/fused-step over the per-token baseline"
+    fi
+    # anchored on the leading ';' so it cannot match a prefixed key
+    smiss=$(echo "$sdl" | grep -o ';accepted_slo_misses=[0-9]*' | head -1)
+    smiss=${smiss#*=}
+    if [ -z "$smiss" ] || [ "$smiss" -gt 0 ]; then
+        echo "GATE FAIL: speculative storm missed ${smiss:-?} accepted SLOs —"
+        echo "           the throughput win must hold at zero misses"
+        gate=1
+    else
+        echo "gate ok: 0 accepted-SLO misses on both speculative-storm runs"
     fi
 fi
 echo "== grep-gate: pallas_serving_step (parity, 0 accepted misses) + BENCH_serving.json =="
@@ -393,6 +434,27 @@ for side in ("ref", "pallas"):
     if sk - cur[side].keys():
         print(f"GATE FAIL: newest entry {side} missing {sorted(sk - cur[side].keys())}")
         sys.exit(1)
+spec = [e for e in hist if e.get("scenario") == "speculative_decode"]
+if not spec:
+    print("GATE FAIL: no speculative_decode entry in BENCH_serving.json history")
+    sys.exit(1)
+sd = spec[-1]
+sdneed = {"scenario", "backend", "device_count", "tag", "spec_window",
+          "tokens_per_fused_step", "baseline_tokens_per_step",
+          "tokens_per_step_ratio", "avg_accepted_block", "spec_parity",
+          "accepted_slo_misses", "energy_per_token_j",
+          "baseline_energy_per_token_j", "step_traces", "bucket_count"}
+sdmissing = sdneed - sd.keys()
+if sdmissing:
+    print(f"GATE FAIL: newest speculative_decode entry missing {sorted(sdmissing)}")
+    sys.exit(1)
+if not sd["spec_parity"] or sd["accepted_slo_misses"]:
+    print(f"GATE FAIL: speculative_decode entry regressed (parity="
+          f"{sd['spec_parity']}, misses={sd['accepted_slo_misses']})")
+    sys.exit(1)
+print(f"gate ok: speculative_decode entry "
+      f"({sd['tokens_per_fused_step']:.2f} tokens/step, "
+      f"{sd['tokens_per_step_ratio']:.2f}x baseline, W={sd['spec_window']})")
 if not any(e.get("scenario") == "sharded_serving" for e in hist):
     print("GATE FAIL: no sharded_serving entry in BENCH_serving.json history")
     sys.exit(1)

@@ -1006,6 +1006,104 @@ class Model:
         cache = dict(cache, k=ks, v=vs)
         return logits, cache, exit_layer, first_ent
 
+    def decode_step_spec(
+        self,
+        p: Params,
+        cache: Params,
+        tokens: jnp.ndarray,          # [1, 1] — one lane (see contract below)
+        pos,                           # scalar cache position
+        thresholds,                    # scalar, [W], or [1, W] entropy thresholds
+        spec_window: int,
+        eos_id: int = -1,
+        use_pallas: bool = False,
+    ):
+        """Self-speculative fused decode step via the entropy off-ramps
+        (the ROADMAP's "exit-at-k is a free draft model" item).
+
+        Per fused step the lane runs up to ``spec_window`` slots.  Each slot
+        is EXACTLY one ``decode_step_ee`` evaluation: the off-ramp at layer k
+        emits the DRAFT (the frozen hidden state), the remaining layers
+        k+1..L are the verifier pass (hidden-state propagation pushes the
+        frozen draft through them, so the returned logits ARE the verified
+        full-pipeline output), and the batched accept rule is evaluated on
+        the slot outputs: a lane keeps speculating while its tokens take an
+        off-ramp (``exit_layer < n_layers``) and don't emit EOS; the first
+        token the verifier forces to full depth is still emitted (it is
+        verified output) but TERMINATES the block.  ``accepted[j]`` marks
+        the slots forming the accepted prefix; suffix slots idempotently
+        recompute the lane's frozen (token, position) — the KV rows they
+        write are bit-identical to what the next fused step would write, so
+        KV "rollback" is simply not advancing the host position past the
+        accepted prefix.  Everything is fixed-shape and masked (the batched
+        accept/reject loop idiom): one compile per (bucket, spec_window).
+
+        Because every slot is the unmodified ``decode_step_ee`` body,
+        accepted tokens are bit-identical to the non-speculative path by
+        construction, and ``spec_window=1`` degenerates to exactly one
+        ``decode_step_ee`` call.
+
+        Contract: one lane per call (``B == 1``) — lanes diverge in position
+        as soon as acceptance diverges, and the KV write index must stay
+        scalar; the serving layer vmaps this over lanes (see
+        ``step_math.decoder_decode_spec``), same as the per-token EE path.
+
+        ``thresholds`` may be a scalar (the degenerate schedule), or a
+        per-slot row from an ``ExitThresholdSchedule`` (slot j gates the
+        token at position ``pos + j``).
+
+        Returns ``(tokens [1,W], logits [1,W,V], cache, exit_layers [1,W],
+        first_ent [1,W], accepted [1,W])`` with ``exit_layers`` 1-based.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe", "albert"), (
+            "speculative exit decode: KV-cache decoder families only"
+        )
+        W = int(spec_window)
+        assert W >= 1, "spec_window must be >= 1"
+        B = tokens.shape[0]
+        assert B == 1, (
+            "decode_step_spec is one-lane (B == 1); vmap over lanes via "
+            "step_math.decoder_decode_spec"
+        )
+        thr = jnp.asarray(thresholds, jnp.float32)
+        if thr.ndim == 0:
+            thr = jnp.broadcast_to(thr, (B, W))
+        elif thr.ndim == 1:
+            thr = jnp.broadcast_to(thr[None, :], (B, W))
+        assert thr.shape == (B, W), f"thresholds shape {thr.shape} != {(B, W)}"
+        n_layers = cfg.n_layers
+
+        def slot(carry, thr_j):
+            cache_c, cur, posn, alive = carry
+            accept = alive                         # accepted iff entered alive
+            lg, cache_c, xl, fe = self.decode_step_ee(
+                p, cache_c, cur, posn, thr_j[:, None], use_pallas=use_pallas
+            )
+            tok = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+            alive = jnp.logical_and(accept, xl < n_layers)
+            alive = jnp.logical_and(alive, tok != eos_id)
+            cur = jnp.where(accept[:, None], tok[:, None], cur)
+            posn = posn + accept[0].astype(jnp.int32)
+            return (cache_c, cur, posn, alive), (tok, lg[:, -1, :], xl, fe, accept)
+
+        init = (
+            cache,
+            tokens.astype(jnp.int32),
+            jnp.asarray(pos, jnp.int32),
+            jnp.ones((B,), bool),
+        )
+        (cache, _, _, _), (toks, lgs, xls, fes, accs) = jax.lax.scan(
+            slot, init, jnp.moveaxis(thr, 1, 0)
+        )
+        return (
+            jnp.moveaxis(toks, 0, 1),              # [B, W]
+            jnp.moveaxis(lgs, 0, 1),               # [B, W, V]
+            cache,
+            jnp.moveaxis(xls, 0, 1),               # [B, W]
+            jnp.moveaxis(fes, 0, 1),               # [B, W]
+            jnp.moveaxis(accs, 0, 1),              # [B, W]
+        )
+
     def _cross_decode(self, lp, h, ik, iv):
         """Cross-attention of decode queries against cached image K/V."""
         cfg = self.cfg

@@ -24,6 +24,16 @@ closes that gap with three mechanisms:
   steps from the position-binned exit LUT and ``_cycles_for`` the
   full-depth fused-step cycles, so a warm calibrator tightens decode quotes
   while a cold one quotes every remaining token at full depth.
+  Self-speculative decode (``DecoderServer(spec_window=...)``) needs no
+  quote-side special case, by construction: quotes price predicted LAYERS,
+  and a speculative fused step runs the same accepted-token exit depths in
+  fewer, proportionally longer steps — the modeled compute time is
+  identical and the saved per-step switch-stall opportunities only shorten
+  realized latency.  The quote therefore stays one-sided under
+  speculation (never under-prices realized latency), which
+  tests/test_spec_properties.py pins for random cls+dec mixes on a shared
+  clock; the calibrator those quotes read is fed EVERY accepted token's
+  realized depth (one observation per token, not per block).
   Lane availability is priced by the deadline structure, not by max-op
   completion times: Alg. 1 deliberately stretches every slack-rich lane to
   finish JUST IN TIME, so an outstanding contract occupies its lane up to
@@ -243,7 +253,12 @@ class AdmissionController:
         point.  With a shared-clock arbiter this is the arbiter's quote (per
         -bucket cycles at max V/f plus one worst-case switching stall);
         otherwise the scheduler's nominal per-bucket step time, which engines
-        with a hw model already define as the max-op layer time."""
+        with a hw model already define as the max-op layer time.
+
+        ``steps`` is fractional full-depth fused steps, i.e. LAYERS over
+        n_layers — deliberately invariant under speculative blocking: a
+        spec-enabled server repacks the same layers into fewer, longer
+        steps, so this floor remains one-sided (see module docstring)."""
         arb = getattr(self.server, "arbiter", None)
         cycles_for = getattr(self.server, "_cycles_for", None)
         if arb is not None and cycles_for is not None:

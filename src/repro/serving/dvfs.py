@@ -320,6 +320,13 @@ class _LaneClock:
     cycles_per_layer: float               # this lane's BUCKET layer cost
     depth: int = 0                        # layers completed (decode lanes:
                                           # summed over the tokens generated)
+    tokens: int = 0                       # decode lanes: tokens ACCEPTED so
+                                          # far (speculative fused steps may
+                                          # accept several per step; depth
+                                          # stays the layer-true energy/clock
+                                          # integral while tokens carries the
+                                          # throughput the DVFS re-budget and
+                                          # the bench gates reason about)
     predicted_exit: Optional[float] = None  # set after the first off-ramp
     first_entropy: Optional[float] = None
     energy_j: float = 0.0
@@ -402,6 +409,9 @@ class BatchedDVFSArbiter:
         self.switch_energy_j = 0.0
         self.compute_energy_j = 0.0
         self.steps = 0
+        self.lane_steps = 0          # lane participations summed over steps
+        self.tokens_accepted = 0     # decode tokens accepted (spec blocks
+                                     # count every accepted token)
 
     # ------------------------------------------------------------ lifecycle
     def admit(
@@ -492,7 +502,7 @@ class BatchedDVFSArbiter:
 
     def step(
         self, active_lanes: Sequence, layers: Optional[Dict] = None,
-        *, floor_hz: float = 0.0,
+        *, floor_hz: float = 0.0, tokens: Optional[Dict] = None,
     ) -> ArbiterStepDecision:
         """Arbitrate + account ONE fused step over ``active_lanes``.
 
@@ -519,6 +529,13 @@ class BatchedDVFSArbiter:
         passes the fleet-wide max required frequency as a floor on every
         domain's pick.  Single-domain serving passes nothing: the floor
         degenerates to this arbiter's own requirement.
+
+        ``tokens`` (optional): tokens each lane ACCEPTED this fused step.
+        A speculative decode step accepts a block, so its lane runs
+        ``sum(block exit depths)`` layers but advances several tokens — the
+        engine passes ``{lane: accepted}`` alongside ``layers`` so the
+        arbiter's throughput telemetry (tokens per lane-step) prices the
+        clock's work in tokens while energy/time stay layer-true.
         """
         lanes = list(active_lanes)
         assert lanes, "step() needs at least one active lane"
@@ -544,6 +561,11 @@ class BatchedDVFSArbiter:
             nl = 1 if layers is None else int(layers[i])
             assert nl >= 1, f"lane {i}: a fused step runs at least one layer"
             st.depth += nl
+            nt = 0 if tokens is None else int(tokens.get(i, 0))
+            assert nt <= nl, f"lane {i}: cannot accept more tokens than layers"
+            st.tokens += nt
+            self.tokens_accepted += nt
+            self.lane_steps += 1
             # energy ~ P(V) * cycles / f: scale the controller's per-layer
             # energy by this lane's bucket cycle ratio and its deployment's
             # power ratio (sparsity/span gating vs the anchor stats)
@@ -664,6 +686,11 @@ class BatchedDVFSArbiter:
             "compute_energy_j": self.compute_energy_j,
             "total_energy_j": self.total_energy_j,
             "modeled_time_s": self.now_s,
+            "lane_steps": self.lane_steps,
+            "tokens_accepted": self.tokens_accepted,
+            "tokens_per_lane_step": (
+                self.tokens_accepted / self.lane_steps if self.lane_steps else 0.0
+            ),
         }
 
     # ------------------------------------------------------------- batch API

@@ -782,6 +782,8 @@ class DecoderServer:
         mesh=None,
         task: Optional[str] = None,
         residency: Optional["TaskResidencyManager"] = None,
+        spec_window: int = 1,
+        threshold_schedule: Optional[Any] = None,
     ):
         self.model = model
         self.params = params
@@ -807,6 +809,31 @@ class DecoderServer:
         # update/codec — but norms, LM-head entropy, and act quant route);
         # closed over by the jit'd closures, so zero extra traces
         self.use_pallas = use_pallas
+        # ---- self-speculative decode (exit-at-k draft / remaining-layer
+        # verify): ``spec_window`` tokens per fused step per lane, gated by a
+        # per-slot threshold row; an ``ExitThresholdSchedule`` generalizes
+        # the scalar threshold per position / entropy band.  ``spec_window=1``
+        # with no schedule keeps the existing per-token EE trace untouched.
+        self.spec_window = int(spec_window)
+        assert self.spec_window >= 1, "spec_window must be >= 1"
+        self.schedule = threshold_schedule
+        if threshold_schedule is not None and exit_threshold is None:
+            exit_threshold = threshold_schedule.base
+        self.threshold = exit_threshold
+        assert self.spec_window == 1 or exit_threshold is not None, (
+            "speculative decode drafts via the entropy off-ramp: spec_window"
+            " > 1 needs exit_threshold (or a threshold_schedule)"
+        )
+        self._spec = exit_threshold is not None and (
+            self.spec_window > 1 or threshold_schedule is not None
+        )
+        if (
+            exit_calibrator is None
+            and threshold_schedule is not None
+            and threshold_schedule.calibrator is not None
+        ):
+            # the schedule's backing calibrator IS the prediction chain
+            exit_calibrator = threshold_schedule.calibrator
         if exit_threshold is not None and exit_calibrator is None:
             exit_calibrator = PositionBinnedExitCalibrator(
                 self.n_layers, max_pos=max_seq
@@ -836,6 +863,11 @@ class DecoderServer:
             "retired": 0, "tokens": 0, "token_layers": 0.0,
             "energy_j": 0.0, "lat_max": 0.0,
             "deadline_misses": 0, "accepted_slo_misses": 0,
+            # throughput numerator/denominator for tokens-per-fused-step:
+            # one lane_step per lane per fused step (so the per-token EE
+            # baseline is exactly 1.0), adv_tokens = tokens actually
+            # appended (speculation appends the accepted block)
+            "lane_steps": 0, "adv_tokens": 0, "accepted_blocks": 0,
         }
 
         # thin wrappers around serving.step_math (pure per-lane vmapped step
@@ -872,6 +904,24 @@ class DecoderServer:
                 mesh=self._mesh, use_pallas=self.use_pallas,
             )
 
+        def decode_spec_fn(params, cache, tokens, pos, thresholds, bucket):
+            # speculative fused step: spec_window and eos_id are server
+            # constants closed over, thresholds is a fixed-shape [lanes, W]
+            # array operand — one trace per (bucket, replica), threshold
+            # VALUES never retrace
+            _bump_decode(bucket)
+            if self._mesh is None:
+                return step_math.decoder_decode_spec(
+                    model, params, cache, tokens, pos, thresholds,
+                    self.spec_window, eos_id=self.eos_id,
+                    use_pallas=self.use_pallas,
+                )
+            return step_math.sharded_decoder_decode_spec(
+                model, params, cache, tokens, pos, thresholds,
+                self.spec_window, eos_id=self.eos_id,
+                mesh=self._mesh, use_pallas=self.use_pallas,
+            )
+
         def prefill_fn(params, cache, tokens, lane, length):
             bucket = tokens.shape[0]             # static at trace time
             self._traces["prefill"][bucket] = self._traces["prefill"].get(bucket, 0) + 1
@@ -882,6 +932,7 @@ class DecoderServer:
 
         self._decode = jax.jit(decode_fn, static_argnums=(4,))
         self._decode_ee = jax.jit(decode_ee_fn, static_argnums=(5,))
+        self._decode_spec = jax.jit(decode_spec_fn, static_argnums=(5,))
         self._prefill = jax.jit(prefill_fn)
 
     # ---------------------------------------------------------- DVFS helpers
@@ -968,6 +1019,28 @@ class DecoderServer:
             self.calib.predict, start, end, self.n_layers
         )
 
+    def _lane_thresholds(self, bucket: int) -> np.ndarray:
+        """Per-lane, per-slot threshold rows for one speculative fused step:
+        slot j gates the token at generation index ``len(generated) + j``.
+        The scalar threshold broadcasts (degenerate schedule); an
+        ``ExitThresholdSchedule`` prices each speculated position and the
+        lane's last first-off-ramp entropy reading individually."""
+        st = self._bstate[bucket]
+        W = self.spec_window
+        thr = np.full((self.lanes, W), self.threshold, np.float32)
+        if self.schedule is not None:
+            for i in range(self.lanes):
+                req = st["reqs"][i]
+                if req is None:
+                    continue
+                last_ent = (
+                    req.entropy_trace[-1] if req.entropy_trace else None
+                )
+                thr[i] = self.schedule.thresholds(
+                    len(req.generated), W, last_ent
+                )
+        return thr
+
     # ---------------------------------------------------------------- public
     def submit(self, req: Request):
         req.bucket = self.sched.submit(req)
@@ -1053,7 +1126,36 @@ class DecoderServer:
                         self._arb_key(bucket, i),
                         self._predicted_layers_remaining(st["reqs"][i]),
                     )
-        if self.threshold is not None:
+        if self._spec:
+            # self-speculative fused step: every lane drafts/verifies up to
+            # spec_window tokens; the host truncates each lane's accepted
+            # prefix to what the request and cache have room for BEFORE the
+            # arbiter charges the block (lane_advance replays exactly this
+            # truncation, keeping arbiter depth == sum(token_exit_layers))
+            thr = self._lane_thresholds(bucket)
+            toks_d, logits, st["cache"], xl, fe, acc_m = self._decode_spec(
+                self.params,
+                st["cache"],
+                jnp.asarray(st["cur"]),
+                jnp.asarray(st["pos"]),
+                jnp.asarray(thr),
+                bucket,
+            )
+            spec_toks = np.asarray(toks_d)          # [lanes, W]
+            exit_layers = np.asarray(xl)            # [lanes, W]
+            first_ent = np.asarray(fe)              # [lanes, W]
+            accepted = np.asarray(acc_m)            # [lanes, W]
+            keep = np.zeros(self.lanes, np.int32)
+            for i in range(self.lanes):
+                req = st["reqs"][i]
+                if not active[i] or req is None:
+                    continue
+                a = int(accepted[i].sum())          # >= 1: slot 0 is alive
+                room_req = req.max_new_tokens - len(req.generated)
+                room_cache = (bucket - 1) - int(st["pos"][i])
+                keep[i] = max(1, min(a, room_req, room_cache))
+            st["keep"] = keep
+        elif self.threshold is not None:
             logits, st["cache"], xl, fe = self._decode_ee(
                 self.params,
                 st["cache"],
@@ -1097,7 +1199,29 @@ class DecoderServer:
                 default=0.0,
             )
             for r, (arb, keys) in enumerate(slabs):
-                if keys:
+                if not keys:
+                    continue
+                if self._spec:
+                    # an accepted BLOCK per lane: charge the summed realized
+                    # exit depth of the kept slots (layer-true energy/clock)
+                    # and report the accepted token count (throughput)
+                    arb.step(
+                        keys,
+                        layers={
+                            self._arb_key(bucket, i): int(
+                                exit_layers[i, : st["keep"][i]].sum()
+                            )
+                            for i in range(r * L, (r + 1) * L)
+                            if active[i]
+                        },
+                        floor_hz=floor,
+                        tokens={
+                            self._arb_key(bucket, i): int(st["keep"][i])
+                            for i in range(r * L, (r + 1) * L)
+                            if active[i]
+                        },
+                    )
+                else:
                     arb.step(
                         keys,
                         layers={
@@ -1106,6 +1230,11 @@ class DecoderServer:
                             if active[i]
                         },
                         floor_hz=floor,
+                        tokens={
+                            self._arb_key(bucket, i): 1
+                            for i in range(r * L, (r + 1) * L)
+                            if active[i]
+                        },
                     )
             t = max(a.now_s for a in self.arbiters)
             for a in self.arbiters:
@@ -1115,16 +1244,22 @@ class DecoderServer:
                 for k in self._arb_acc:
                     self._arb_acc[k] += after[k] - b4[k]
             st["dt"] = max(t - self.sched.now_s, 0.0)
-        st["out"] = (
-            np.asarray(jnp.argmax(logits[:, -1], axis=-1)),
-            exit_layers,
-            first_ent,
-            # EE path: keep final-token logits ON DEVICE — only a retiring
-            # lane's row is materialized (in lane_finish), so the hot loop
-            # never pays a [lanes, vocab] host transfer; plain decode keeps
-            # the old argmax-only transfer
-            logits[:, -1] if self.threshold is not None else None,
-        )
+        if self._spec:
+            # block-shaped outputs: tokens/depths/entropies [lanes, W] on
+            # host (needed to advance), full block logits ON DEVICE — only a
+            # retiring lane's accepted-tail row is materialized
+            st["out"] = (spec_toks, exit_layers, first_ent, logits)
+        else:
+            st["out"] = (
+                np.asarray(jnp.argmax(logits[:, -1], axis=-1)),
+                exit_layers,
+                first_ent,
+                # EE path: keep final-token logits ON DEVICE — only a retiring
+                # lane's row is materialized (in lane_finish), so the hot loop
+                # never pays a [lanes, vocab] host transfer; plain decode keeps
+                # the old argmax-only transfer
+                logits[:, -1] if self.threshold is not None else None,
+            )
         return st["out"]
 
     def lane_advance(
@@ -1132,7 +1267,41 @@ class DecoderServer:
     ) -> bool:
         st = self._bstate[bucket]
         toks, exit_layers, first_ent, _ = out
+        acc = self._acc
+        acc["lane_steps"] += 1
+        if self._spec:
+            # advance by the accepted prefix (host-truncated in lanes_step —
+            # the same count the arbiter was charged for); every accepted
+            # token's realized depth feeds the calibrator at its OWN position
+            # (one observation per TOKEN, not per block: blocks would starve
+            # the bins covering positions inside accepted prefixes)
+            k = int(st["keep"][lane])
+            acc["adv_tokens"] += k
+            acc["accepted_blocks"] += 1
+            for j in range(k):
+                tok = int(toks[lane, j])
+                req.generated.append(tok)
+                xl = int(exit_layers[lane, j])
+                req.token_exit_layers.append(xl)
+                fe = float(first_ent[lane, j])
+                req.entropy_trace.append(fe)
+                if self.calib is not None:
+                    self.calib.observe(len(req.generated) - 1, xl)
+                if (
+                    self.schedule is not None
+                    and self.schedule.calibrator is not None
+                    and self.schedule.calibrator is not self.calib
+                ):
+                    self.schedule.observe(len(req.generated) - 1, fe, xl)
+            st["pos"][lane] += k
+            st["cur"][lane, 0] = int(toks[lane, k - 1])
+            return (
+                int(toks[lane, k - 1]) == self.eos_id
+                or len(req.generated) >= req.max_new_tokens
+                or int(st["pos"][lane]) >= bucket - 1
+            )
         tok = int(toks[lane])
+        acc["adv_tokens"] += 1
         req.generated.append(tok)
         xl = int(exit_layers[lane])
         req.token_exit_layers.append(xl)
@@ -1154,7 +1323,14 @@ class DecoderServer:
         st = self._bstate[bucket]
         _, _, _, logits = st["out"]
         if logits is not None:               # EE path: one lane row, host-side
-            req.result = np.asarray(logits[lane])
+            if self._spec:
+                # last ACCEPTED slot's verified logits (block logits stay on
+                # device; only the retiring row is materialized)
+                req.result = np.asarray(
+                    logits[lane, int(st["keep"][lane]) - 1]
+                )
+            else:
+                req.result = np.asarray(logits[lane])
         req.finish_time = time.time()
         st["reqs"][lane] = None
         acc = self._acc
@@ -1249,6 +1425,18 @@ class DecoderServer:
             "avg_token_exit_layer": avg_exit,
             "decode_runtime_savings": (
                 1.0 - avg_exit / self.n_layers if acc["tokens"] else 0.0
+            ),
+            # speculative decode throughput: tokens appended per lane per
+            # fused step (exactly 1.0 for the per-token paths — the bench
+            # gate's baseline denominator)
+            "spec_window": self.spec_window,
+            "tokens_per_fused_step": (
+                acc["adv_tokens"] / acc["lane_steps"]
+                if acc["lane_steps"] else 0.0
+            ),
+            "avg_accepted_block": (
+                acc["adv_tokens"] / acc["accepted_blocks"]
+                if acc["accepted_blocks"] else 0.0
             ),
             "decode_traces": sum(self._traces["decode"].values()),
             "prefill_traces": sum(self._traces["prefill"].values()),

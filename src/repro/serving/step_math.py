@@ -195,6 +195,50 @@ def decoder_decode_ee(
     )(cache, tokens[:, 0], pos)
 
 
+def decoder_decode_spec(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,     # [lanes, 1]
+    pos: jnp.ndarray,        # [lanes]
+    thresholds: jnp.ndarray,  # [lanes, spec_window] per-slot entropy thresholds
+    spec_window: int,
+    *,
+    eos_id: int = -1,
+    use_pallas: bool = False,
+):
+    """Self-speculative fused step: per-lane vmap of the one-lane
+    ``decode_step_spec`` (draft via off-ramp, verify via remaining layers,
+    batched accept/rollback).  Thresholds are a per-lane, per-slot row so a
+    position/entropy-band schedule prices each speculated position
+    individually.
+
+    Returns per-lane ``(tokens [lanes,W], logits [lanes,W,V], cache,
+    exit_layers [lanes,W], first_ent [lanes,W], accepted [lanes,W])``.
+    """
+    lane_axes = jax.tree_util.tree_map(lambda _: 1, cache)
+
+    def one_lane(cache_l, tok, p, thr):
+        cache_b = jax.tree_util.tree_map(lambda x: x[:, None], cache_l)
+        tk, lg, cache_b, xl, fe, acc = model.decode_step_spec(
+            params, cache_b, tok[None, None], p, thr[None, :], spec_window,
+            eos_id=eos_id, use_pallas=use_pallas,
+        )
+        return (
+            tk[0],
+            lg[0],
+            jax.tree_util.tree_map(lambda x: x[:, 0], cache_b),
+            xl[0],
+            fe[0],
+            acc[0],
+        )
+
+    return jax.vmap(
+        one_lane, in_axes=(lane_axes, 0, 0, 0),
+        out_axes=(0, 0, lane_axes, 0, 0, 0),
+    )(cache, tokens[:, 0], pos, thresholds)
+
+
 def sharded_decoder_decode(
     model: Model,
     params: Any,
@@ -246,6 +290,37 @@ def sharded_decoder_decode_ee(
         out_specs=(P(axis), cache_specs, P(axis), P(axis)),
     )
     return fn(params, cache, tokens, pos, threshold)
+
+
+def sharded_decoder_decode_spec(
+    model: Model,
+    params: Any,
+    cache: Any,
+    tokens: jnp.ndarray,
+    pos: jnp.ndarray,
+    thresholds: jnp.ndarray,  # [lanes, spec_window]
+    spec_window: int,
+    *,
+    mesh: Any,
+    axis: str = "data",
+    eos_id: int = -1,
+    use_pallas: bool = False,
+):
+    """``decoder_decode_spec`` shard_map'd like ``sharded_decoder_decode``;
+    per-slot thresholds, accept masks, depths, and entropies all shard with
+    their lanes."""
+    P = jax.sharding.PartitionSpec
+    cache_specs = jax.tree_util.tree_map(lambda _: P(None, axis), cache)
+    fn = shard_map_norep(
+        lambda p, c, t, po, th: decoder_decode_spec(
+            model, p, c, t, po, th, spec_window,
+            eos_id=eos_id, use_pallas=use_pallas,
+        ),
+        mesh,
+        in_specs=(P(), cache_specs, P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), cache_specs, P(axis), P(axis), P(axis)),
+    )
+    return fn(params, cache, tokens, pos, thresholds)
 
 
 def decoder_prefill(

@@ -17,6 +17,22 @@ if HAS_HYPOTHESIS:
     settings.load_profile("ci")
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_xla_executables():
+    """Clear jax's global jit caches at every module boundary.
+
+    The suite compiles hundreds of fused-step/decode executables (every
+    server instance re-jits its closures), and XLA:CPU's accumulated live
+    executables can segfault a LATE module's compile in a full `-x -q` run
+    even though the same module passes standalone.  Compiled objects are
+    per-instance closures anyway, so cross-module cache hits are not a
+    thing worth keeping; bounding peak compiler memory is."""
+    import jax
+
+    jax.clear_caches()
+    yield
+
+
 @pytest.fixture(scope="session")
 def rng():
     import jax

@@ -1,0 +1,102 @@
+"""Characterization test for the just-in-time deferral tail.
+
+``benchmarks/harness/README.md`` documents a known limitation of the
+affinity scheduler's just-in-time deferral under SUSTAINED bursty
+multi-task load: a small explicit-completion tail (~8e-4 at 10^5 requests
+of the seeded ``mmpp_multitask`` scenario) misses its admitted SLO because
+the per-task quote cannot see how long the affinity policy will legally
+defer a non-resident task once every wave of the burst lands at once.
+
+This test PINS that characterization so the tail can only shrink:
+
+* the tail EXISTS (misses > 0) — if a change eliminates it, the README's
+  limitation paragraph is stale and this test should be updated along
+  with it;
+* the explicit-completion miss rate stays within the documented bound
+  (<= 1e-3, measured 8.2e-4 at 10^5 requests, 3.5e-4 at the CI-sized
+  2x10^4 replay);
+* best-effort traffic never counts toward the tail (no SLO to miss);
+* request conservation and the zero-new-traces invariant hold across the
+  whole replay.
+
+The always-on test replays 2x10^4 requests (~2 min on the modeled clock's
+host replay).  The full 10^5-request characterization — the exact run the
+README documents — is gated behind ``REPRO_TAIL_FULL=1`` since it holds a
+tier-1 slot for several minutes.
+"""
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.harness.run_harness import _model_and_controller, run_once
+from benchmarks.harness.scenarios import SCENARIOS
+
+TAIL_BOUND = 1e-3          # documented: ~8e-4 at 10^5 requests
+SEED = 0                   # the documented seeded replay
+
+
+def _replay(n_requests):
+    spec = SCENARIOS["mmpp_multitask"]
+    model, params, cfg, buckets, ctrl_factory = _model_and_controller(
+        spec, trained=False, target_mult=1.5
+    )
+    return run_once(
+        spec, n_requests, SEED, model, params, cfg, buckets, ctrl_factory
+    )
+
+
+def _characterize(summary):
+    explicit = summary["per_tier"]["explicit"]
+    best_effort = summary["per_tier"]["best_effort"]
+    tail = explicit["slo_misses"] / explicit["completed"]
+
+    # the documented tail exists and stays within its bound
+    assert explicit["slo_misses"] > 0, (
+        "deferral tail vanished — update the README's known-limitation "
+        "paragraph and this characterization together"
+    )
+    assert tail <= TAIL_BOUND, (
+        f"explicit-completion deferral tail {tail:.2e} exceeds the "
+        f"documented bound {TAIL_BOUND:.0e}"
+    )
+    # only explicit contracts can miss (best-effort has no SLO)
+    assert best_effort["slo_misses"] == 0
+    assert summary["accepted_slo_misses"] == explicit["slo_misses"]
+
+    # replay-wide invariants the tail must not hide behind: request
+    # conservation, and one compile per (bucket, replica)
+    assert (
+        summary["completed"] + summary["rejected"] + summary["shed"]
+        == summary["submitted"]
+    )
+    assert summary["max_traces_per_bucket_replica"] <= 1
+    return tail
+
+
+class TestDeferralTailCharacterization:
+    def test_seeded_mmpp_replay_tail_bounded(self):
+        summary = _replay(20_000)
+        tail = _characterize(summary)
+        # CI-sized replay of the same seed: the burst structure that causes
+        # the tail is already present at 2x10^4 requests
+        assert summary["requests"] == 20_000
+        assert tail <= TAIL_BOUND
+
+    @pytest.mark.skipif(
+        os.environ.get("REPRO_TAIL_FULL") != "1",
+        reason="full 10^5-request characterization (set REPRO_TAIL_FULL=1)",
+    )
+    def test_full_100k_replay_matches_documented_tail(self):
+        summary = _replay(100_000)
+        tail = _characterize(summary)
+        assert summary["requests"] == 100_000
+        # the README's number: ~8e-4 (measured 8.2e-4) — pin the order of
+        # magnitude, not the exact count, so scheduler improvements that
+        # SHRINK the tail don't churn this test
+        assert tail <= TAIL_BOUND

@@ -1,0 +1,447 @@
+"""Self-speculative decode via the entropy off-ramps: the parity suite.
+
+The accept rule's contract is that speculation is an OPTIMIZATION, not a
+model change: (a) ``spec_window=1`` is bit-identical to ``decode_step_ee``;
+(b) a spec-enabled server's accepted tokens, exit depths, and final logits
+are bit-identical to the non-speculative EE server on the same traffic;
+(c) rejected suffixes roll back losslessly (continuing from a partially-
+accepted block reproduces the pure-sequential stream); (d) checkpoint/
+restore round-trips bit-identically mid-speculation; (e) trace counts are
+unchanged — one compile per (bucket, replica); and (f) the position-binned
+calibrator is fed EVERY accepted token's realized depth (one observation
+per token, not per block — the bin-starvation regression).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.early_exit import (
+    ExitThresholdSchedule,
+    PositionBinnedExitCalibrator,
+)
+from repro.hwmodel.edgebert_accel import albert_layer_stats
+from repro.models.model import build_model
+from repro.serving.dvfs import (
+    BatchedDVFSArbiter,
+    LatencyAwareDVFSController,
+    no_early_exit_baseline,
+)
+from repro.serving.engine import DecoderServer, Request, probe_exit_threshold
+
+
+def _decoder_model(n_layers=4, seed=1):
+    cfg = dataclasses.replace(
+        get_smoke_config("deepseek_7b"), dtype="float32", remat_policy="none",
+        n_layers=n_layers,
+    )
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    return model, params, cfg
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(4, cfg.vocab_size, size=L).astype(np.int32) for L in lengths
+    ]
+
+
+def _prefilled_cache(model, params, prompt, bucket):
+    cache = model.init_cache(1, bucket)
+    for t in range(len(prompt) - 1):
+        _, cache = model.decode_step(
+            params, cache, jnp.asarray([[int(prompt[t])]]), t
+        )
+    return cache, len(prompt) - 1, int(prompt[-1])
+
+
+def _sequential_ee(model, params, cache, pos, cur, threshold, n):
+    """Ground truth: n tokens through per-token EE decode, one at a time."""
+    toks, exits = [], []
+    for _ in range(n):
+        lg, cache, xl, _ = model.decode_step_ee(
+            params, cache, jnp.asarray([[cur]]), pos, threshold
+        )
+        cur = int(jnp.argmax(lg[0, -1]))
+        toks.append(cur)
+        exits.append(int(xl[0]))
+        pos += 1
+    return toks, exits, cache, pos, cur
+
+
+class TestModelDecodeStepSpec:
+    def test_spec_window_one_degenerates_bitwise(self):
+        """W=1 must be EXACTLY one decode_step_ee call: logits, exit depth,
+        first entropy, and every cache leaf bit-identical, slot accepted."""
+        model, params, cfg = _decoder_model()
+        prompt = _prompts(cfg, (5,))[0]
+        cache, pos, cur = _prefilled_cache(model, params, prompt, 16)
+        tk, lg, c_sp, xl, fe, acc = model.decode_step_spec(
+            params, cache, jnp.asarray([[cur]]), pos, 6.2, 1
+        )
+        lg_e, c_ee, xl_e, fe_e = model.decode_step_ee(
+            params, cache, jnp.asarray([[cur]]), pos, 6.2
+        )
+        assert np.asarray(acc)[0].tolist() == [True]
+        assert int(tk[0, 0]) == int(jnp.argmax(lg_e[0, -1]))
+        np.testing.assert_array_equal(np.asarray(lg[:, 0]), np.asarray(lg_e[:, -1]))
+        np.testing.assert_array_equal(np.asarray(xl[:, 0]), np.asarray(xl_e))
+        np.testing.assert_array_equal(np.asarray(fe[:, 0]), np.asarray(fe_e))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(c_sp), jax.tree_util.tree_leaves(c_ee)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_accepted_prefix_matches_sequential_ee(self):
+        """Every ACCEPTED slot's token and exit depth must be bit-identical
+        to the sequential per-token EE stream from the same state."""
+        model, params, cfg = _decoder_model()
+        for thr, seed in ((6.2, 0), (np.inf, 3), (5.9, 5)):
+            prompt = _prompts(cfg, (6,), seed=seed)[0]
+            cache, pos, cur = _prefilled_cache(model, params, prompt, 16)
+            want_t, want_x, _, _, _ = _sequential_ee(
+                model, params, cache, pos, cur, thr, 4
+            )
+            tk, _, _, xl, _, acc = model.decode_step_spec(
+                params, cache, jnp.asarray([[cur]]), pos, thr, 4
+            )
+            a = int(np.asarray(acc)[0].sum())
+            assert a >= 1
+            assert np.asarray(tk)[0, :a].tolist() == want_t[:a]
+            assert np.asarray(xl)[0, :a].tolist() == want_x[:a]
+            if thr is np.inf:        # every token exits layer 1: full accept
+                assert a == 4
+                assert (np.asarray(xl)[0] == 1).all()
+
+    def test_accept_rule_prefix_structure(self):
+        """``accepted`` is a PREFIX mask: 1 + the leading run of slots whose
+        token took an off-ramp (and wasn't EOS) — the batched accept rule."""
+        model, params, cfg = _decoder_model()
+        prompt = _prompts(cfg, (5,), seed=2)[0]
+        cache, pos, cur = _prefilled_cache(model, params, prompt, 16)
+        for thr in (-1.0, 5.8, 6.0, 6.2, np.inf):
+            tk, _, _, xl, _, acc = model.decode_step_spec(
+                params, cache, jnp.asarray([[cur]]), pos, thr, 4
+            )
+            acc = np.asarray(acc)[0]
+            xl = np.asarray(xl)[0]
+            a = int(acc.sum())
+            assert acc[:a].all() and not acc[a:].any()      # contiguous prefix
+            # the prefix extends exactly while drafted slots exited early
+            agree = 0
+            while agree < 4 and xl[agree] < cfg.n_layers:
+                agree += 1
+            assert a == min(4, agree + 1) or (agree == 4 and a == 4)
+        # threshold below every entropy: nothing drafts, one verified token
+        _, _, _, xl, _, acc = model.decode_step_spec(
+            params, cache, jnp.asarray([[cur]]), pos, -1.0, 4
+        )
+        assert int(np.asarray(acc)[0].sum()) == 1
+
+    def test_rejected_suffix_rolls_back_bitwise(self):
+        """Continuing (sequentially) from a partially-accepted block must
+        reproduce the pure-sequential token stream bit-for-bit: rejected
+        slots leave no trace the accepted positions can observe."""
+        model, params, cfg = _decoder_model()
+        prompt = _prompts(cfg, (6,), seed=7)[0]
+        thr = 6.2
+        cache, pos, cur = _prefilled_cache(model, params, prompt, 16)
+        want_t, want_x, _, _, _ = _sequential_ee(
+            model, params, cache, pos, cur, thr, 6
+        )
+        tk, _, c_sp, xl, _, acc = model.decode_step_spec(
+            params, cache, jnp.asarray([[cur]]), pos, thr, 4
+        )
+        a = int(np.asarray(acc)[0].sum())
+        assert a < 4, "want a genuinely rejected suffix for this seed"
+        # resume from the speculation's cache at the accepted prefix
+        got_t, got_x, _, _, _ = _sequential_ee(
+            model, params, c_sp, pos + a, int(np.asarray(tk)[0, a - 1]),
+            thr, 6 - a,
+        )
+        assert np.asarray(tk)[0, :a].tolist() + got_t == want_t
+        assert np.asarray(xl)[0, :a].tolist() + got_x == want_x
+
+    def test_per_slot_thresholds_gate_each_position(self):
+        """A [W] threshold row prices slots individually: an -inf slot-0
+        threshold forces full depth there while +inf later slots draft."""
+        model, params, cfg = _decoder_model()
+        prompt = _prompts(cfg, (5,), seed=9)[0]
+        cache, pos, cur = _prefilled_cache(model, params, prompt, 16)
+        thr = jnp.asarray([-1.0, np.inf, np.inf, np.inf], jnp.float32)
+        _, _, _, xl, _, acc = model.decode_step_spec(
+            params, cache, jnp.asarray([[cur]]), pos, thr, 4
+        )
+        xl, acc = np.asarray(xl)[0], np.asarray(acc)[0]
+        assert xl[0] == cfg.n_layers          # slot 0: no off-ramp taken
+        assert int(acc.sum()) == 1            # full depth terminates the block
+
+
+class TestEngineSpecParity:
+    def _run(self, model, params, prompts, thr, **kw):
+        srv = DecoderServer(
+            model, params, batch_lanes=2, max_seq=32, eos_id=-1, buckets=(16,),
+            exit_threshold=thr, **kw,
+        )
+        for i, p in enumerate(prompts):
+            srv.submit(Request(uid=i, tokens=p, max_new_tokens=4))
+        st = srv.run()
+        return srv, st
+
+    def test_spec_server_matches_ee_server_bitwise(self):
+        """Same traffic through spec_window=4 and the per-token EE baseline:
+        generated tokens, exit depths, and final logits bit-identical; one
+        compile per (bucket, replica) on BOTH; throughput >= baseline."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6, 5, 7, 4, 6))
+        thr = probe_exit_threshold(
+            model, params, prompts, max_new_tokens=5, quantile=0.8
+        )
+        s1, t1 = self._run(model, params, prompts, thr)
+        s4, t4 = self._run(model, params, prompts, thr, spec_window=4)
+        for st in (t1, t4):
+            assert st["completed"] == 5
+            assert st["decode_traces_per_bucket"] == {16: 1}
+            assert st["step_traces_per_bucket_replica"] == {"16x1": 1}
+        for i in range(5):
+            assert s4.done[i].generated == s1.done[i].generated, i
+            assert s4.done[i].token_exit_layers == s1.done[i].token_exit_layers, i
+            np.testing.assert_array_equal(s4.done[i].result, s1.done[i].result)
+        assert t1["tokens_per_fused_step"] == pytest.approx(1.0)
+        assert t4["tokens_per_fused_step"] >= t1["tokens_per_fused_step"]
+        assert t4["avg_accepted_block"] >= 1.0
+
+    def test_degenerate_schedule_spec_path_is_bitwise_identical(self):
+        """A constant ExitThresholdSchedule activates the speculative trace
+        even at W=1 — and must still produce bit-identical output (the
+        degenerate schedule IS the scalar threshold)."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6, 5, 7), seed=4)
+        thr = probe_exit_threshold(
+            model, params, prompts, max_new_tokens=4, quantile=0.7
+        )
+        s_ee, _ = self._run(model, params, prompts, thr)
+        sched = ExitThresholdSchedule(thr)
+        s_sp, t_sp = self._run(
+            model, params, prompts, None, threshold_schedule=sched,
+            spec_window=1,
+        )
+        assert s_sp._spec                     # the spec path actually ran
+        assert t_sp["decode_traces_per_bucket"] == {16: 1}
+        for i in range(3):
+            assert s_sp.done[i].generated == s_ee.done[i].generated, i
+            assert (
+                s_sp.done[i].token_exit_layers == s_ee.done[i].token_exit_layers
+            ), i
+            np.testing.assert_array_equal(s_sp.done[i].result, s_ee.done[i].result)
+
+    def test_eos_truncates_the_accepted_block(self):
+        """A server with a real eos_id must stop a lane at the EOS token even
+        when later draft slots accepted — no post-EOS tokens are appended."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6, 5), seed=11)
+        thr = probe_exit_threshold(
+            model, params, prompts, max_new_tokens=6, quantile=0.9
+        )
+        # find the EOS id that actually occurs: run the baseline first and
+        # pick a generated token, then re-run with that id as EOS
+        s_ref, _ = self._run(model, params, prompts, thr)
+        eos = s_ref.done[0].generated[1]      # second generated token
+        srv = DecoderServer(
+            model, params, batch_lanes=2, max_seq=32, eos_id=int(eos),
+            buckets=(16,), exit_threshold=thr, spec_window=4,
+        )
+        for i, p in enumerate(prompts):
+            srv.submit(Request(uid=i, tokens=p, max_new_tokens=4))
+        srv.run()
+        g = srv.done[0].generated
+        assert int(eos) in g
+        assert g.index(int(eos)) == len(g) - 1    # EOS ends the stream
+
+
+class TestSpecCheckpointRestore:
+    def test_preempted_spec_decode_matches_uninterrupted(self):
+        """A mid-generation preempt/checkpoint/restore cycle on a spec-
+        enabled server (lane parked between partially-accepted blocks) must
+        reproduce the uninterrupted spec run bit-for-bit with zero extra
+        compiled traces."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6, 5, 7), seed=5)
+        thr = probe_exit_threshold(
+            model, params, prompts, max_new_tokens=6, quantile=0.6
+        )
+
+        def build():
+            return DecoderServer(
+                model, params, batch_lanes=2, max_seq=32, eos_id=-1,
+                buckets=(16,), exit_threshold=thr, preempt=True, spec_window=3,
+            )
+
+        ref = build()
+        for i, p in enumerate(prompts):
+            ref.submit(Request(uid=i, tokens=p, max_new_tokens=6))
+        ref.run()
+
+        srv = build()
+        for i, p in enumerate(prompts):
+            srv.submit(Request(uid=i, tokens=p, max_new_tokens=6))
+        srv.step()
+        srv.submit(Request(
+            uid=99, tokens=prompts[0][:4], max_new_tokens=2, deadline_s=30.0
+        ))
+        st = srv.run()
+        assert st["preemptions"] >= 1
+        for i in range(3):
+            assert srv.done[i].generated == ref.done[i].generated, i
+            assert srv.done[i].token_exit_layers == ref.done[i].token_exit_layers, i
+            np.testing.assert_array_equal(srv.done[i].result, ref.done[i].result)
+        assert st["decode_traces"] == 1 and st["prefill_traces"] == 1
+
+    def test_arbiter_depth_reconciles_across_spec_checkpoint(self):
+        """With the shared-clock arbiter live, block-depth charging plus a
+        checkpoint/restore cycle must still reconcile at retire (the
+        ``depth == sum(token_exit_layers)`` assert) and report energy."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6, 5, 7), seed=6)
+        thr = probe_exit_threshold(
+            model, params, prompts, max_new_tokens=6, quantile=0.6
+        )
+        stats = albert_layer_stats(seq_len=16)
+        stats.n_layers = cfg.n_layers
+        target = no_early_exit_baseline(stats)["latency_s"] * 2.0
+        arb = BatchedDVFSArbiter(LatencyAwareDVFSController(stats, target))
+        srv = DecoderServer(
+            model, params, batch_lanes=2, max_seq=32, eos_id=-1, buckets=(16,),
+            exit_threshold=thr, preempt=True, arbiter=arb, spec_window=3,
+        )
+        for i, p in enumerate(prompts):
+            srv.submit(Request(uid=i, tokens=p, max_new_tokens=6))
+        srv.step()
+        srv.submit(Request(
+            uid=99, tokens=prompts[0][:4], max_new_tokens=2,
+            deadline_s=target * 50,
+        ))
+        st = srv.run()
+        assert st["preemptions"] >= 1
+        assert st["accepted_slo_misses"] == 0
+        for i in range(3):
+            r = srv.done[i]
+            assert r.energy_j is not None and r.energy_j > 0
+            assert len(r.token_exit_layers) == len(r.generated)
+        # the arbiter's token accounting saw every accepted token
+        assert arb.tokens_accepted == sum(
+            len(srv.done[i].generated) for i in (0, 1, 2)
+        ) + len(srv.done[99].generated)
+
+
+class TestCalibratorPerTokenObservation:
+    def test_every_accepted_token_feeds_its_position_bin(self):
+        """The bin-starvation regression: under speculation the calibrator
+        must receive one observation PER ACCEPTED TOKEN at that token's own
+        position — a block-granular observer would leave the bins covering
+        positions inside accepted prefixes empty."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6, 5), seed=8)
+        max_new = 8
+        calib = PositionBinnedExitCalibrator(
+            cfg.n_layers, max_pos=max_new, n_bins=max_new
+        )
+        srv = DecoderServer(
+            model, params, batch_lanes=2, max_seq=32, eos_id=-1, buckets=(16,),
+            exit_threshold=np.inf,       # everything drafts: full W-blocks
+            exit_calibrator=calib, spec_window=4,
+        )
+        for i, p in enumerate(prompts):
+            srv.submit(Request(uid=i, tokens=p, max_new_tokens=max_new))
+        st = srv.run()
+        total = sum(len(srv.done[i].generated) for i in range(2))
+        assert total == 2 * max_new
+        assert st["avg_accepted_block"] > 1.0          # blocks really formed
+        assert calib.count == total                    # one obs per TOKEN
+        # every per-position bin a generated token landed in is warm — with
+        # one bin per position, interior-of-block positions included
+        fill = calib.bin_fill_counts()
+        assert (fill[:max_new] > 0).all(), fill
+
+    def test_calibrator_predictions_tighten_under_spec(self):
+        """The one prediction chain: after a spec run whose tokens exited at
+        layer 1, predict_range must drop to ~1 layer per token (block-depth
+        realized exits thread into EDF slack / set_remaining_layers /
+        admission quotes through this same LUT)."""
+        model, params, cfg = _decoder_model()
+        prompts = _prompts(cfg, (6,), seed=8)
+        srv = DecoderServer(
+            model, params, batch_lanes=2, max_seq=32, eos_id=-1, buckets=(16,),
+            exit_threshold=np.inf, spec_window=4,
+        )
+        srv.submit(Request(uid=0, tokens=prompts[0], max_new_tokens=8))
+        srv.run()
+        assert srv.calib.predict_range(0, 8) == pytest.approx(8.0)
+        req = Request(uid=1, tokens=prompts[0], max_new_tokens=8)
+        assert srv.predict_remaining_steps(16, req, 0) == pytest.approx(
+            8.0 / cfg.n_layers
+        )
+
+
+class TestExitThresholdSchedule:
+    def test_degenerate_schedule_equals_base_everywhere(self):
+        s = ExitThresholdSchedule(0.73)
+        got = s.thresholds(0, 16)
+        np.testing.assert_array_equal(got, np.full(16, np.float32(0.73)))
+        assert s.threshold_at(123) == np.float32(0.73)
+
+    def test_position_scales_digitize(self):
+        s = ExitThresholdSchedule(
+            1.0, position_edges=(4, 8), position_scales=(1.0, 2.0, 0.5)
+        )
+        got = s.thresholds(2, 8)             # positions 2..9
+        want = np.array([1, 1, 2, 2, 2, 2, 0.5, 0.5], np.float32)
+        np.testing.assert_allclose(got, want)
+
+    def test_entropy_band_scales(self):
+        s = ExitThresholdSchedule(
+            1.0, band_edges=(0.5,), band_scales=(2.0, 1.0)
+        )
+        np.testing.assert_allclose(s.thresholds(0, 3, last_entropy=0.1),
+                                   np.full(3, 2.0, np.float32))
+        np.testing.assert_allclose(s.thresholds(0, 3, last_entropy=0.9),
+                                   np.ones(3, np.float32))
+        # no reading yet: base only
+        np.testing.assert_allclose(s.thresholds(0, 3), np.ones(3, np.float32))
+
+    def test_from_cold_calibrator_is_constant(self):
+        calib = PositionBinnedExitCalibrator(12, max_pos=64)
+        s = ExitThresholdSchedule.from_calibrator(0.9, calib)
+        np.testing.assert_array_equal(
+            s.thresholds(0, 64), np.full(64, np.float32(0.9))
+        )
+
+    def test_from_warm_calibrator_loosens_confident_bins(self):
+        calib = PositionBinnedExitCalibrator(12, max_pos=64, n_bins=8)
+        for _ in range(32):
+            calib.observe(2, 2)              # early positions exit shallow
+            calib.observe(60, 11)            # late positions run deep
+        s = ExitThresholdSchedule.from_calibrator(
+            1.0, calib, loosen=1.5, tighten=0.5
+        )
+        assert s.threshold_at(2) == pytest.approx(1.5)
+        assert s.threshold_at(60) == pytest.approx(0.5)
+        # untouched (cold) bins keep the base
+        assert s.threshold_at(33) == pytest.approx(1.0)
+
+    def test_observe_forwards_to_calibrator(self):
+        calib = PositionBinnedExitCalibrator(12, max_pos=64)
+        s = ExitThresholdSchedule(1.0, calibrator=calib)
+        s.observe(3, 0.4, 5)
+        assert calib.count == 1
+
+    def test_clipping(self):
+        s = ExitThresholdSchedule(
+            1.0, position_edges=(4,), position_scales=(1.0, 10.0),
+            max_threshold=2.0, min_threshold=0.0,
+        )
+        assert s.threshold_at(10) == pytest.approx(2.0)
